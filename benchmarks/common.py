@@ -1,0 +1,37 @@
+"""Shared benchmark scaffolding: data, timing, CSV output.
+
+Wall time on this 1-core CPU container is reported but NOT the primary
+metric; the hardware-free cost (distance evaluations — what determines
+time on any machine) carries the paper's comparisons. Sizes are scaled to
+CPU (n≈2–8k vs the paper's 10⁶–10⁹); every benchmark prints `name,…` CSV
+rows that EXPERIMENTS.md quotes directly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.data.vectors import sift_like
+
+N_DEFAULT = 2000
+D_DEFAULT = 24
+K_DEFAULT = 16
+
+
+def dataset(n=N_DEFAULT, d=D_DEFAULT, key=0):
+    return sift_like(jax.random.key(key), n, d)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0
+
+
+def emit(row: dict):
+    print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)

@@ -1,0 +1,66 @@
+"""Paper Fig. 10/11/15/16: NN-search quality of MERGED index graphs vs
+graphs built from scratch (HNSW/Vamana stand-ins = α-diversified graphs;
+α=1.0 ≈ HNSW heuristic, α=1.2 ≈ Vamana robust-prune).
+
+Sweeps beam (ef) for the recall-vs-evals tradeoff curve; the paper's claim
+is merged ≈ scratch within ~5%.
+"""
+
+import jax
+
+from benchmarks.common import dataset, emit
+from repro.core.bruteforce import knn_bruteforce, knn_search_bruteforce
+from repro.core.diversify import diversify
+from repro.core.graph import recall
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge
+from repro.core.nndescent import build_subgraphs, nn_descent
+from repro.core.search import beam_search, search_recall
+from repro.core.twoway import merge_full, two_way_merge
+from repro.data.vectors import clustered
+
+
+def build_index(data, graph, alpha, max_degree):
+    return diversify(graph, data, alpha=alpha, max_degree=max_degree)
+
+
+def run(n=2000, k=16, lam=8, alphas=(1.0, 1.2), n_subsets=(2, 4)):
+    data = clustered(jax.random.key(0), n, 16, n_clusters=8, scale=0.8)
+    queries = data[:64] + 0.02 * jax.random.normal(jax.random.key(9),
+                                                   (64, 16))
+    gt_ids, _ = knn_search_bruteforce(data, queries, 10)
+
+    # scratch graph
+    g_scratch, _ = nn_descent(jax.random.key(1), data, k, lam=lam,
+                              max_iters=20)
+    for alpha in alphas:
+        flavor = "hnsw-like" if alpha == 1.0 else "vamana-like"
+        idx_scratch = build_index(data, g_scratch, alpha, k)
+        for m in n_subsets:
+            sizes = (n // m,) * m
+            subs = build_subgraphs(jax.random.key(2), data, sizes, k,
+                                   lam=lam, max_iters=20)
+            g0 = concat_subgraphs(subs)
+            if m == 2:
+                gc, _ = two_way_merge(jax.random.key(3), data, sizes, g0,
+                                      lam=lam, max_iters=20)
+                method = "two-way"
+            else:
+                gc, _ = multi_way_merge(jax.random.key(3), data, sizes, g0,
+                                        lam=lam, max_iters=20)
+                method = "multi-way"
+            idx_merged = build_index(data, merge_full(gc, g0), alpha, k)
+            for beam in (16, 32, 64):
+                for name, idx in (("scratch", idx_scratch),
+                                  (f"merged-{method}-m{m}", idx_merged)):
+                    ids, _, evals = beam_search(idx, data, queries, 10,
+                                                beam=beam)
+                    emit({"bench": "fig10", "flavor": flavor, "graph": name,
+                          "beam": beam,
+                          "recall@10":
+                              f"{float(search_recall(ids, gt_ids, 10)):.4f}",
+                          "avg_evals": f"{float(evals.mean()):.0f}"})
+
+
+if __name__ == "__main__":
+    run()

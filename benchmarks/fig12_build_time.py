@@ -1,0 +1,43 @@
+"""Paper Fig. 12/17: cost of merging pre-built index graphs vs building
+from scratch. Cost in distance evaluations + wall seconds; the paper's
+point: merge ≪ scratch once subgraphs exist.
+"""
+
+import jax
+
+from benchmarks.common import Timer, dataset, emit
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import recall
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge
+from repro.core.nndescent import build_subgraphs, nn_descent
+from repro.core.twoway import merge_full, two_way_merge
+
+
+def run(n=2000, k=16, lam=8):
+    data = dataset(n)
+    with Timer() as t_scratch:
+        _, st_scratch = nn_descent(jax.random.key(1), data, k, lam=lam,
+                                   max_iters=20)
+    for m in (2, 4, 8):
+        sizes = (n // m,) * m
+        subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam,
+                               max_iters=20)
+        g0 = concat_subgraphs(subs)
+        with Timer() as t:
+            if m == 2:
+                _, st = two_way_merge(jax.random.key(3), data, sizes, g0,
+                                      lam=lam, max_iters=20)
+            else:
+                _, st = multi_way_merge(jax.random.key(3), data, sizes, g0,
+                                        lam=lam, max_iters=20)
+        emit({"bench": "fig12", "m": m, "merge_evals": st["total_evals"],
+              "merge_sec": f"{t.s:.1f}",
+              "scratch_evals": st_scratch["total_evals"],
+              "scratch_sec": f"{t_scratch.s:.1f}",
+              "merge/scratch":
+                  f"{st['total_evals']/st_scratch['total_evals']:.2f}"})
+
+
+if __name__ == "__main__":
+    run()

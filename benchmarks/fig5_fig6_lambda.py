@@ -1,0 +1,43 @@
+"""Paper Fig. 5 + Fig. 6: impact of λ on Two-way Merge quality/cost.
+
+Fig. 5: recall & cost at convergence vs λ.  Fig. 6: recall-vs-cost curves
+for a λ grid. Cost axis = cumulative distance evaluations (plus wall s).
+"""
+
+import jax
+
+from benchmarks.common import Timer, dataset, emit
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import recall
+from repro.core.mergesort import concat_subgraphs
+from repro.core.nndescent import build_subgraphs
+from repro.core.twoway import merge_full, two_way_merge
+
+
+def run(n=2000, k=16, lams=(2, 4, 8, 12)):
+    data = dataset(n)
+    gt = knn_bruteforce(data, k)
+    sizes = (n // 2, n // 2)
+    subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=8,
+                           max_iters=20)
+    g0 = concat_subgraphs(subs)
+    for lam in lams:
+        curve = []
+
+        def trace(g, it, stats):
+            curve.append((stats["total_evals"],
+                          float(recall(merge_full(g, g0), gt.ids, 10))))
+
+        with Timer() as t:
+            gc, st = two_way_merge(jax.random.key(3), data, sizes, g0,
+                                   lam=lam, max_iters=25, trace_fn=trace)
+        emit({"bench": "fig5", "lam": lam, "iters": st["iters"],
+              "evals": st["total_evals"], "recall@10": f"{curve[-1][1]:.4f}",
+              "sec": f"{t.s:.1f}"})
+        for ev, r in curve[::4]:
+            emit({"bench": "fig6", "lam": lam, "evals": ev,
+                  "recall@10": f"{r:.4f}"})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 9: m-subgraph sweep — Two-way hierarchy vs Multi-way Merge.
+
+Trend under test: multi-way's cost grows slower with m than the two-way
+hierarchy's, at a small (≈0.002–0.003 in the paper) recall cost.
+"""
+
+import jax
+
+from benchmarks.common import Timer, dataset, emit
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import recall
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge, two_way_hierarchy
+from repro.core.nndescent import build_subgraphs
+from repro.core.twoway import merge_full
+
+
+def run(n=2048, k=16, lam=8, ms=(2, 4, 8, 16)):
+    data = dataset(n)
+    gt = knn_bruteforce(data, k)
+    for m in ms:
+        sizes = (n // m,) * m
+        subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam,
+                               max_iters=20)
+        g0 = concat_subgraphs(subs)
+        with Timer() as t_mw:
+            gc, st_mw = multi_way_merge(jax.random.key(3), data, sizes, g0,
+                                        lam=lam, max_iters=20)
+        r_mw = float(recall(merge_full(gc, g0), gt.ids, 10))
+        with Timer() as t_h:
+            gh, st_h = two_way_hierarchy(jax.random.key(4), data, sizes,
+                                         subs, lam=lam, max_iters=20)
+        r_h = float(recall(gh, gt.ids, 10))
+        emit({"bench": "fig9", "m": m,
+              "multiway_recall": f"{r_mw:.4f}",
+              "multiway_evals": st_mw["total_evals"],
+              "multiway_sec": f"{t_mw.s:.1f}",
+              "hier_recall": f"{r_h:.4f}",
+              "hier_evals": st_h["total_evals"],
+              "hier_sec": f"{t_h.s:.1f}"})
+
+
+if __name__ == "__main__":
+    run()

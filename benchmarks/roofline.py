@@ -1,0 +1,101 @@
+"""§Roofline: aggregate the dry-run artifacts into the roofline table.
+
+    compute    = flops / (chips · 197e12)          [bf16 peak / chip]
+    memory     = traffic_bytes / (chips · 819e9)   [HBM bw / chip]
+    collective = collective_bytes / (chips · 50e9) [ICI link bw / chip]
+
+All three numerators are PER-DEVICE (the compiled SPMD module), so chips=1
+in the denominators: the table reports per-chip seconds directly. Also
+derives MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute
+ratio. Emits markdown (for EXPERIMENTS.md) or CSV.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, kind: str, seq: int, batch: int) -> float:
+    """Analytic 6·N·D (training) / 2·N·D (inference) in GLOBAL flops."""
+    from repro.configs import get
+    from repro.models.model import build
+    import jax
+    cfg = get(arch)
+    model = build(cfg)
+    ap = model.abstract_params()
+    total = sum(x.size for x in jax.tree.leaves(ap))
+    if cfg.n_experts:
+        # active = non-expert + experts·top_k/E (+capacity overhead ignored)
+        expert = sum(x.size for p, x in
+                     jax.tree_util.tree_leaves_with_path(ap)
+                     if "moe" in "/".join(str(getattr(k, "key", k))
+                                          for k in p))
+        total = total - expert + expert * cfg.top_k / cfg.n_experts
+    D = seq * batch if kind != "decode" else batch
+    c = 6 if kind == "train" else 2
+    return c * total * D
+
+
+def rows(art_dir: str, mesh: str = "single", tag: str = ""):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, f"*_{mesh}{tag}.json"))):
+        r = json.load(open(fn))
+        if r["status"] != "ok":
+            out.append(r)
+            continue
+        chips = 1
+        for v in r["mesh_shape"].values():
+            chips *= v
+        t_c = r["flops"] / PEAK_FLOPS
+        t_m = r["traffic_bytes"] / HBM_BW
+        t_x = r["collectives"]["total_bytes"] / ICI_BW
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+        kind = ("train" if r["shape"] == "train_4k" else
+                "prefill" if "prefill" in r["shape"] else "decode")
+        mf = model_flops(r["arch"], kind, r["seq_len"], r["global_batch"])
+        r.update(t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                 dominant=dom[1], chips=chips,
+                 model_flops_global=mf,
+                 useful_ratio=mf / max(r["flops"] * chips, 1),
+                 roofline_frac=dom and t_c / max(t_c, t_m, t_x))
+        out.append(r)
+    return out
+
+
+def markdown(art_dir: str, mesh: str = "single", tag: str = ""):
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "dominant | 6ND/HLO | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows(art_dir, mesh, tag):
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| SKIP: {r['reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| FAIL: {r.get('error','')[:40]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | |")
+    return "\n".join(lines)
+
+
+def run(art_dir="artifacts/dryrun"):
+    if not glob.glob(os.path.join(art_dir, "*.json")):
+        print("bench=roofline,status=no-artifacts "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    print(markdown(art_dir))
+
+
+if __name__ == "__main__":
+    import sys
+    run(*sys.argv[1:])

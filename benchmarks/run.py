@@ -1,0 +1,49 @@
+"""Run every benchmark (one per paper table/figure) and print CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+fig5/6  λ sweep              fig7   subgraph→merged quality
+fig8    merge vs baselines   fig9   m-subgraph sweep
+fig10   index-graph search   fig12  merge vs scratch cost
+tab3    distributed (Alg.3)  roofline  dry-run aggregation (if artifacts)
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (fig5_fig6_lambda, fig7_subgraph_quality,
+                            fig8_merge_vs_baselines, fig9_multiway,
+                            fig10_index_search, fig12_build_time,
+                            roofline, tab3_distributed)
+    jobs = [
+        ("fig5/6", lambda: fig5_fig6_lambda.run(
+            n=1200 if fast else 2000, lams=(2, 8) if fast else (2, 4, 8, 12))),
+        ("fig7", lambda: fig7_subgraph_quality.run(n=1200 if fast else 2000)),
+        ("fig8", lambda: fig8_merge_vs_baselines.run(
+            n=1200 if fast else 2000)),
+        ("fig9", lambda: fig9_multiway.run(
+            n=1024 if fast else 2048, ms=(2, 4) if fast else (2, 4, 8, 16))),
+        ("fig10", lambda: fig10_index_search.run(n=1200 if fast else 2000)),
+        ("fig12", lambda: fig12_build_time.run(n=1200 if fast else 2000)),
+        ("tab3", lambda: tab3_distributed.run(
+            n=960 if fast else 1920, ms=(2, 4) if fast else (2, 4, 8))),
+        ("roofline", roofline.run),
+    ]
+    t00 = time.time()
+    for name, fn in jobs:
+        t0 = time.time()
+        print(f"# ---- {name} ----", flush=True)
+        try:
+            fn()
+        except Exception as e:                          # noqa: BLE001
+            print(f"bench={name},status=FAIL,error={type(e).__name__}: {e}",
+                  flush=True)
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t00:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Tab. III + Fig. 13 + Fig. 14: distributed construction.
+
+Runs Alg. 3 on m ∈ {2,4,8} host devices (subprocess per m — jax pins the
+device count at init), reporting recall, wall time and the phase breakdown
+(subgraph build vs merge vs exchange) that Fig. 14 plots. The collective
+(exchange) fraction is measured structurally via the dry-run HLO
+collective bytes rather than wall time (CPU ppermute time is meaningless).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+WORKER = r"""
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(m)d"
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp
+from repro.data.vectors import sift_like
+from repro.core.nndescent import build_subgraphs
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import recall, KnnGraph
+from repro.core.distributed import build_distributed
+from repro.launch.mesh import make_nodes_mesh
+from repro.launch.hlo_stats import analyze
+
+m, n, d, k, lam = %(m)d, %(n)d, 20, 14, 7
+data = sift_like(jax.random.key(0), n, d)
+sizes = (n // m,) * m
+t0 = time.time()
+subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam, max_iters=15)
+t_sub = time.time() - t0
+mesh = make_nodes_mesh(m)
+gi = jnp.concatenate([s.ids for s in subs]); gd = jnp.concatenate([s.dists for s in subs])
+t0 = time.time()
+ids, dists = build_distributed(mesh, data, gi, gd, jax.random.key(5),
+                               k=k, lam=lam, inner_iters=5)
+ids.block_until_ready()
+t_merge = time.time() - t0
+gt = knn_bruteforce(data, k)
+g = KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))
+r = float(recall(g, gt.ids, 10))
+# structural exchange volume from the lowered HLO
+lowered = build_distributed.lower(mesh, data, gi, gd, jax.random.key(5),
+                                  k=k, lam=lam, inner_iters=5)
+st = analyze(lowered.compile().as_text())
+print("RESULT", json.dumps({
+    "m": m, "recall": r, "t_subgraphs": t_sub, "t_merge": t_merge,
+    "exchange_bytes": st["collective_bytes"],
+    "permutes": st["collectives"]["collective-permute"]["count"]}))
+"""
+
+
+def run(n=1920, ms=(2, 4, 8)):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    for m in ms:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-c", WORKER % {"m": m, "n": n, "src": src}],
+            env=env, capture_output=True, text=True, timeout=580)
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("RESULT")]
+        if not line:
+            emit({"bench": "tab3", "m": m, "error":
+                  (out.stderr or out.stdout)[-200:].replace("\n", " ")})
+            continue
+        r = json.loads(line[0][7:])
+        emit({"bench": "tab3/fig13", "m": m,
+              "recall@10": f"{r['recall']:.4f}",
+              "t_subgraphs_s": f"{r['t_subgraphs']:.1f}",
+              "t_merge_s": f"{r['t_merge']:.1f}",
+              "exchange_MB": f"{r['exchange_bytes']/1e6:.1f}",
+              "ppermutes": r["permutes"]})
+
+
+if __name__ == "__main__":
+    run()

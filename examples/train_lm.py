@@ -1,0 +1,37 @@
+"""Train a small LM for a few hundred steps with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Uses the smollm-360m family at reduced width (CPU container); pass --full
+on real hardware for the exact 360M config. Loss must fall on the markov
+stream; the run checkpoints every 50 steps and resumes if re-launched.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get, reduced
+from repro.data.tokens import TokenPipeline
+from repro.models.model import build
+from repro.train.loop import Trainer
+from repro.train.optim import AdamW
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+cfg = get("smollm-360m")
+cfg = cfg if args.full else reduced(cfg).replace(n_layers=4)
+model = build(cfg)
+pipe = TokenPipeline(vocab=cfg.vocab, seq_len=64, global_batch=8,
+                     mode="markov")
+opt = AdamW(lr_peak=1e-3, warmup_steps=20, total_steps=args.steps)
+trainer = Trainer(model=model, opt=opt, pipeline=pipe,
+                  ckpt_dir="/tmp/repro_train_lm_ckpt", ckpt_every=50,
+                  log_every=20)
+params, _, history = trainer.run(args.steps)
+first, last = history[0][1]["loss"], history[-1][1]["loss"]
+print(f"loss: {first:.3f} → {last:.3f} "
+      f"({'OK' if last < first else 'NOT DECREASING'})")

@@ -1,0 +1,37 @@
+"""Assigned-architecture registry (+ the paper's own dataset configs).
+
+``get(name)`` → ArchConfig; ``--arch <id>`` anywhere in the launchers
+resolves through here. Shape grid in ``repro.configs.shapes``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig, reduced  # noqa: F401
+
+_MODULES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+    "grok-1-314b": "grok_1_314b",
+    "whisper-tiny": "whisper_tiny",
+    "smollm-360m": "smollm_360m",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen2-7b": "qwen2_7b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-1.2b": "zamba2_1p2b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {n: get(n) for n in ARCH_NAMES}

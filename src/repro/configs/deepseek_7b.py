@@ -1,0 +1,10 @@
+"""deepseek-7b [dense] — llama-arch, MHA (kv=32).
+
+[arXiv:2401.02954; hf]. Full attention: long_500k skipped.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, d_ff=11008,
+    vocab=102400, head_dim=128, param_dtype="bfloat16")

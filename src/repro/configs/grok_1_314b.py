@@ -1,0 +1,14 @@
+"""grok-1-314b [moe] — 8 experts top-2, GQA kv=8.
+
+[hf:xai-org/grok-1; unverified]. Largest assigned config (314B total /
+~86B active). Full attention: long_500k SKIPPED (quadratic prefill;
+noted in DESIGN.md §Arch-applicability).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768,
+    vocab=131072, head_dim=128,
+    n_experts=8, top_k=2,
+    param_dtype="bfloat16")

@@ -1,0 +1,15 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, GQA kv=8, SWA 4096.
+
+[arXiv:2401.04088; hf]. Paper-technique applicability: orthogonal (the
+graph-merge k-NN index consumes this model's embeddings for RAG serving;
+nothing in the forward pass uses or blocks it). long_500k RUNS: sliding
+window attention gives O(window) decode memory.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=32000, head_dim=128,
+    n_experts=8, top_k=2, swa_window=4096, rope_theta=1e6,
+    param_dtype="bfloat16", supports_long_context=True)

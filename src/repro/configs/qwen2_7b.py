@@ -1,0 +1,11 @@
+"""qwen2-7b [dense] — GQA kv=4, QKV bias.
+
+[arXiv:2407.10671; hf]. Full attention: long_500k skipped.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab=152064, head_dim=128, qkv_bias=True, rope_theta=1e6,
+    param_dtype="bfloat16")

@@ -1,0 +1,15 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, stubbed vision frontend.
+
+[arXiv:2409.12191; hf]. input_specs feeds precomputed patch embeddings
+(dynamic-resolution ViT stub, 256 patches) spliced ahead of the text
+tokens; pos3 (t,h,w) drives 3-section M-RoPE. Full attention: long_500k
+skipped.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568,
+    vocab=152064, head_dim=128, qkv_bias=True, mrope=True,
+    mrope_sections=(16, 24, 24), rope_theta=1e6, n_patches=256,
+    param_dtype="bfloat16")

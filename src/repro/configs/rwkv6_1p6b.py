@@ -1,0 +1,12 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay, attention-free.
+
+[arXiv:2404.05892; unverified]. head size 64 -> 32 heads. long_500k RUNS:
+O(1)-state recurrent decode. Paper-technique: orthogonal (embeddings feed
+the k-NN index like every other arch).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b", family="rwkv",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=7168,
+    vocab=65536, supports_long_context=True)

@@ -1,0 +1,49 @@
+"""The assigned input-shape grid and per-arch applicability (40 cells).
+
+``decode_*`` / ``long_*`` lower ``serve`` steps (one token against a KV
+cache of seq_len), not ``train_step``. ``long_500k`` requires sub-quadratic
+attention: it RUNS for mixtral-8x7b (sliding window), rwkv6-1.6b (recurrent)
+and zamba2-1.2b (hybrid); it is SKIPPED for the seven pure full-attention
+archs — recorded as explicit skip cells, per the assignment.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.configs import all_configs
+
+
+class Shape(NamedTuple):
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = (
+    Shape("train_4k", "train", 4_096, 256),
+    Shape("prefill_32k", "prefill", 32_768, 32),
+    Shape("decode_32k", "decode", 32_768, 128),
+    Shape("long_500k", "decode", 524_288, 1),
+)
+
+
+def get_shape(name: str) -> Shape:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cells():
+    """All 40 (arch, shape) cells with a skip reason where applicable."""
+    out = []
+    for arch, cfg in all_configs().items():
+        for s in SHAPES:
+            skip = None
+            if s.name == "long_500k" and not cfg.supports_long_context:
+                skip = ("full-attention arch: 500k decode needs quadratic "
+                        "prefill — skipped per assignment")
+            out.append((arch, s, skip))
+    return out

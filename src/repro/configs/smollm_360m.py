@@ -1,0 +1,10 @@
+"""smollm-360m [dense] — llama-arch small, GQA kv=5, tied embeddings.
+
+[hf:HuggingFaceTB/SmolLM-135M; hf]. Full attention: long_500k skipped.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab=49152, head_dim=64, tie_embeddings=True)

@@ -1,0 +1,13 @@
+"""whisper-tiny [audio] — encoder-decoder; conv frontend STUBBED.
+
+[arXiv:2212.04356; unverified]. input_specs feeds precomputed frame
+embeddings (B, 1500, 384) per the assignment. Decoder positions are
+sinusoidal (deviation from learned embeddings, DESIGN.md). Full attention:
+long_500k skipped.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, enc_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865, head_dim=64, enc_frames=1500)

@@ -1,0 +1,14 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + weight-tied shared attention.
+
+[arXiv:2411.15242; hf]. 38 mamba2 layers (ssm_state=64); one shared
+attention+MLP block applied every 6 layers (weight-tied across its 6
+applications). long_500k RUNS: state-space decode is O(1) in sequence; the
+shared-attention caches are full-length but only n_app=6 of them exist.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, head_dim=64, ssm_state=64, ssm_head_dim=64,
+    shared_every=6, supports_long_context=True)

@@ -1,0 +1,59 @@
+"""Exact k-NN oracle (tiled, shardable).
+
+Ground truth for every recall number in the paper's figures. Tiled over
+query blocks so the (n, n) distance matrix never materializes; each block is
+an MXU-shaped ``dist_block`` + ``top_k``. Used at test scale only (the paper
+uses precomputed ground truth files for SIFT/GIST; we generate ours).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as _metrics
+from repro.core.graph import INVALID_ID, KnnGraph
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block", "exclude_self"))
+def knn_bruteforce(data: jax.Array, k: int, metric: str = "l2",
+                   block: int = 1024, exclude_self: bool = True) -> KnnGraph:
+    """Exact k-NN graph on ``data`` (n, d). Returns rows sorted ascending."""
+    n = data.shape[0]
+    pad = (-n) % block
+    padded = jnp.pad(data, ((0, pad), (0, 0)))
+    nb = padded.shape[0] // block
+
+    def one_block(qi):
+        q = jax.lax.dynamic_slice_in_dim(padded, qi * block, block, axis=0)
+        d = _metrics.dist_block(metric, q, data)          # (block, n)
+        if exclude_self:
+            rows = qi * block + jnp.arange(block)
+            d = jnp.where(jnp.arange(n)[None, :] == rows[:, None], jnp.inf, d)
+        neg, ids = jax.lax.top_k(-d, k)
+        return ids.astype(jnp.int32), -neg
+
+    ids, dists = jax.lax.map(one_block, jnp.arange(nb))
+    ids = ids.reshape(-1, k)[:n]
+    dists = dists.reshape(-1, k)[:n]
+    return KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, dtype=bool))
+
+
+def knn_search_bruteforce(data: jax.Array, queries: jax.Array, k: int,
+                          metric: str = "l2", block: int = 1024):
+    """Exact search ground truth: (q, k) ids + dists for external queries."""
+    nq = queries.shape[0]
+    pad = (-nq) % block
+    padded = jnp.pad(queries, ((0, pad), (0, 0)))
+    nb = padded.shape[0] // block
+
+    def one_block(qi):
+        q = jax.lax.dynamic_slice_in_dim(padded, qi * block, block, axis=0)
+        d = _metrics.dist_block(metric, q, data)
+        neg, ids = jax.lax.top_k(-d, k)
+        return ids.astype(jnp.int32), -neg
+
+    ids, dists = jax.lax.map(one_block, jnp.arange(nb))
+    return ids.reshape(-1, k)[:nq], dists.reshape(-1, k)[:nq]

@@ -1,0 +1,55 @@
+"""Edge diversification (paper Eq. 1) — k-NN graph → RNG-style index graph.
+
+After merging index graphs the neighborhoods mix subsets and can violate the
+occlusion rule; the paper re-applies the ORIGINAL builder's diversification
+as post-processing. Both flavors implemented:
+
+  * ``alpha=1.0``  → HNSW's ``select_neighbors_heuristic`` (Malkov & Yashunin)
+  * ``alpha>1.0``  → Vamana's robust prune (DiskANN)
+
+Rule: scanning ascending by distance, keep b unless an already-kept a has
+``alpha · metric(a, b) < metric(i, b)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID_ID, KnnGraph
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "max_degree"))
+def diversify(g: KnnGraph, data: jax.Array, alpha: float = 1.0,
+              metric: str = "l2", max_degree: int | None = None) -> KnnGraph:
+    """α-prune every neighborhood. Returns a graph with ≤ max_degree edges.
+
+    Needs pairwise distances among each row's neighbors: one gathered
+    pairdist block (n, k, k), then a sequential keep-scan over the k slots
+    (k is small; the scan is an unrolled fori over slots, vectorized over n).
+    """
+    n, k = g.ids.shape
+    max_degree = max_degree or k
+    vecs = data[jnp.maximum(g.ids, 0)]                    # (n, k, d)
+    nbr_d = kops.pairdist(vecs, vecs, metric=metric)      # (n, k, k)
+    valid = g.valid
+
+    def body(j, kept):
+        # keep slot j iff valid and no kept a<j occludes it:
+        #   alpha * d(a, b) < d(i, b)
+        occludes = kept & (alpha * nbr_d[:, :, j] < g.dists[:, j][:, None])
+        keep_j = valid[:, j] & ~jnp.any(occludes, axis=1)
+        # degree cap: drop when already max_degree kept
+        keep_j &= jnp.sum(kept, axis=1) < max_degree
+        return kept.at[:, j].set(keep_j)
+
+    kept = jax.lax.fori_loop(0, k, body, jnp.zeros((n, k), bool))
+    ids = jnp.where(kept, g.ids, INVALID_ID)
+    dists = jnp.where(kept, g.dists, jnp.inf)
+    order = jnp.argsort(dists, axis=1, stable=True)
+    return KnnGraph(ids=jnp.take_along_axis(ids, order, axis=1)[:, :max_degree],
+                    dists=jnp.take_along_axis(dists, order, axis=1)[:, :max_degree],
+                    flags=jnp.zeros((n, max_degree), bool))

@@ -1,0 +1,171 @@
+"""k-NN graph container and invariants.
+
+The paper's per-vertex neighbor lists (sorted ascending by distance, guarded
+by locks on CPU) are realized as dense fixed-shape arrays so that every
+operation is a vectorized, lock-free batched array op on TPU:
+
+  ids   : (n, k) int32   neighbor indices into the *global* dataset, sorted
+                         ascending by ``dists``; empty slots hold ``-1``.
+  dists : (n, k) float32 distances; empty slots hold ``+inf``.
+  flags : (n, k) bool    the paper's "new" flag — True until the entry has
+                         been sampled into a local-join round.
+
+All algorithms keep rows sorted / deduplicated as an invariant; see
+:func:`check_invariants` (used by the property tests).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID_ID = -1
+INF = jnp.inf
+
+
+class KnnGraph(NamedTuple):
+    """Dense k-NN graph. A registered pytree (NamedTuple)."""
+
+    ids: jax.Array    # (n, k) int32
+    dists: jax.Array  # (n, k) float32
+    flags: jax.Array  # (n, k) bool
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.ids != INVALID_ID
+
+
+def empty_graph(n: int, k: int) -> KnnGraph:
+    """Graph with no edges (ids=-1, dists=+inf, flags=False)."""
+    return KnnGraph(
+        ids=jnp.full((n, k), INVALID_ID, dtype=jnp.int32),
+        dists=jnp.full((n, k), INF, dtype=jnp.float32),
+        flags=jnp.zeros((n, k), dtype=bool),
+    )
+
+
+def random_graph(key: jax.Array, n: int, k: int, data: jax.Array,
+                 metric: str = "l2") -> KnnGraph:
+    """Random initial graph (NN-Descent's starting point).
+
+    Neighbors are sampled uniformly (self edges re-mapped away) and the true
+    distances are evaluated so rows can be kept sorted from the start.
+    """
+    from repro.core import metrics as _metrics
+
+    ids = jax.random.randint(key, (n, k), 0, n - 1, dtype=jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    # skip self: sample in [0, n-2] then shift values >= row by one
+    ids = jnp.where(ids >= rows, ids + 1, ids)
+    d = _metrics.dist_point(metric, data[:, None, :], data[ids])  # (n, k)
+    # sort by id to dedupe, then re-sort by distance (sort_rows_dedupe).
+    ids, d, flags = sort_rows_dedupe(ids, d, jnp.ones_like(ids, dtype=bool))
+    return KnnGraph(ids=ids, dists=d, flags=flags)
+
+
+def sort_rows_dedupe(ids: jax.Array, dists: jax.Array, flags: jax.Array,
+                     prefer: jax.Array | None = None):
+    """Sort each row ascending by distance with duplicate ids removed.
+
+    Duplicates (same id within one row) are collapsed to a single entry:
+    the PREFERRED copy if any (bool ``prefer``, same shape — used to keep an
+    *existing* graph slot and its flag over an incoming duplicate
+    candidate), else the minimum-distance copy.
+
+    Returns (ids, dists, flags) with invalid slots pushed to the row tail as
+    (-1, +inf, False).
+    """
+    n, w = ids.shape
+    valid = ids != INVALID_ID
+    if prefer is None:
+        prefer = jnp.zeros_like(valid)
+    # --- pass 1: group by id to find duplicates -------------------------
+    # Three chained *stable* argsorts emulate a lexicographic
+    # (id, ~prefer, dist) sort without 64-bit keys (JAX defaults to
+    # 32-bit): within each id group, preferred entries first, then
+    # ascending distance — the group head survives the dup mask.
+    order_0 = jnp.argsort(dists, axis=1, stable=True)
+    pref_0 = jnp.take_along_axis(prefer, order_0, axis=1)
+    order_a0 = jnp.argsort(~pref_0, axis=1, stable=True)
+    order_a = jnp.take_along_axis(order_0, order_a0, axis=1)
+    ids_a = jnp.take_along_axis(ids, order_a, axis=1)
+    id_key = jnp.where(ids_a != INVALID_ID, ids_a,
+                       jnp.iinfo(jnp.int32).max)  # invalids last
+    order_b = jnp.argsort(id_key, axis=1, stable=True)
+    order = jnp.take_along_axis(order_a, order_b, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    dists_s = jnp.take_along_axis(dists, order, axis=1)
+    flags_s = jnp.take_along_axis(flags, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((n, 1), bool),
+         (ids_s[:, 1:] == ids_s[:, :-1]) & (ids_s[:, 1:] != INVALID_ID)],
+        axis=1)
+    ids_s = jnp.where(dup, INVALID_ID, ids_s)
+    dists_s = jnp.where(dup | (ids_s == INVALID_ID), INF, dists_s)
+    flags_s = jnp.where(dup | (ids_s == INVALID_ID), False, flags_s)
+    # --- pass 2: sort by distance ---------------------------------------
+    order2 = jnp.argsort(dists_s, axis=1, stable=True)
+    ids_f = jnp.take_along_axis(ids_s, order2, axis=1)
+    dists_f = jnp.take_along_axis(dists_s, order2, axis=1)
+    flags_f = jnp.take_along_axis(flags_s, order2, axis=1)
+    return ids_f, dists_f, flags_f
+
+
+def reverse_edges(g: KnnGraph):
+    """Flatten g into (dst, src, dist) edge triples of the *reverse* graph.
+
+    Invalid slots produce dst == -1 (filtered downstream by cap_scatter).
+    """
+    n, k = g.ids.shape
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    return g.ids.reshape(-1), src.reshape(-1), g.dists.reshape(-1)
+
+
+def recall(g: KnnGraph, gt_ids: jax.Array, at: int | None = None) -> jax.Array:
+    """Recall@at of graph rows against ground-truth neighbor ids.
+
+    gt_ids: (n, k_gt). Counts |row ∩ gt_row[:at]| / at averaged over rows.
+    """
+    at = at or gt_ids.shape[1]
+    gt = gt_ids[:, :at]                       # (n, at)
+    pred = g.ids[:, : g.k]                    # (n, k)
+    hit = (pred[:, :, None] == gt[:, None, :]) & (pred[:, :, None] != INVALID_ID)
+    return jnp.mean(jnp.sum(jnp.any(hit, axis=1), axis=1) / at)
+
+
+def check_invariants(g: KnnGraph, n_total: int | None = None):
+    """Host-side invariant checks (tests only; pulls arrays to host).
+
+    - rows sorted ascending by distance, invalid slots at the tail
+    - no duplicate ids within a row; no self edges
+    - flags False on invalid slots
+    """
+    import numpy as np
+
+    ids = np.asarray(g.ids)
+    dists = np.asarray(g.dists)
+    flags = np.asarray(g.flags)
+    n, k = ids.shape
+    valid = ids != INVALID_ID
+    assert np.all(dists[~valid] == np.inf), "invalid slot with finite dist"
+    assert not np.any(flags[~valid]), "flag set on invalid slot"
+    # sorted + invalids last (inf-inf diffs are nan — still "sorted")
+    dif = np.diff(dists, axis=1)
+    assert np.all(np.isnan(dif) | (dif >= 0)), "row not sorted by dist"
+    for i in range(n):  # ok: test-sized graphs only
+        row = ids[i][valid[i]]
+        assert len(set(row.tolist())) == len(row), f"dup ids in row {i}"
+        assert i not in row, f"self edge in row {i}"
+        if n_total is not None:
+            assert np.all(row < n_total) and np.all(row >= 0)
+    return True

@@ -1,0 +1,93 @@
+"""Local-Join: the paper's hot spot, as batched gathered pair-distances.
+
+Per vertex i the paper double-loops ``for v in new[i], u in S[i]: d=metric(u,v);
+try-insert both ways``. Here a whole round is three dense steps:
+
+  1. gather operand blocks  A=(n, A, d), B=(n, B, d)
+  2. pair distances         D=(n, A, B)   — `‖u‖²+‖v‖²−2u·vᵀ` on the MXU
+                             (Pallas ``pairdist`` kernel on TPU, jnp oracle
+                             elsewhere), invalid / self / same-subset pairs
+                             masked to +inf
+  3. flatten to (row, col, dist) triples both directions and run the
+     lock-free insertion pipeline (``insertion.py``).
+
+Row-blocking bounds the peak (n, A, B) footprint; distance-evaluation counts
+(the paper's cost proxy) are returned for the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID_ID, KnnGraph
+from repro.core.insertion import cap_scatter, merge_rows
+
+
+def pair_block(data: jax.Array, a_ids: jax.Array, b_ids: jax.Array,
+               metric: str, sof: jax.Array | None = None,
+               exclude_same_subset: bool = False,
+               symmetric_dedupe: bool = False):
+    """Distances (g, A, B) for gathered id blocks, masked where not a real pair.
+
+    ``symmetric_dedupe`` drops the lower triangle for self-joins (new × new)
+    so each unordered pair is evaluated once, like the paper's pairwise loop.
+    Returns (dists, n_evals) — masked entries are +inf.
+    """
+    from repro.kernels import ops as kops
+
+    va = data[jnp.maximum(a_ids, 0)]          # (g, A, d)
+    vb = data[jnp.maximum(b_ids, 0)]          # (g, B, d)
+    d = kops.pairdist(va, vb, metric=metric)  # (g, A, B)
+    ok = (a_ids[:, :, None] != INVALID_ID) & (b_ids[:, None, :] != INVALID_ID)
+    ok &= a_ids[:, :, None] != b_ids[:, None, :]       # no self pairs
+    if exclude_same_subset:
+        assert sof is not None
+        sa = sof[jnp.maximum(a_ids, 0)]
+        sb = sof[jnp.maximum(b_ids, 0)]
+        ok &= sa[:, :, None] != sb[:, None, :]
+    if symmetric_dedupe:
+        A = a_ids.shape[1]
+        tri = jnp.arange(A)[:, None] < jnp.arange(A)[None, :]
+        ok &= tri[None, :, :]
+    n_evals = jnp.sum(ok)
+    return jnp.where(ok, d, jnp.inf), n_evals
+
+
+def join_triples(a_ids: jax.Array, b_ids: jax.Array, dists: jax.Array):
+    """Flatten masked (g, A, B) distances into both-direction edge triples."""
+    g, A, B = dists.shape
+    u = jnp.broadcast_to(a_ids[:, :, None], (g, A, B)).reshape(-1)
+    v = jnp.broadcast_to(b_ids[:, None, :], (g, A, B)).reshape(-1)
+    d = dists.reshape(-1)
+    bad = ~jnp.isfinite(d)
+    u = jnp.where(bad, INVALID_ID, u)
+    v = jnp.where(bad, INVALID_ID, v)
+    rows = jnp.concatenate([u, v])
+    cols = jnp.concatenate([v, u])
+    return rows, cols, jnp.concatenate([d, d])
+
+
+def local_join_insert(g: KnnGraph, data: jax.Array, joins, metric: str,
+                      sof: jax.Array | None = None, cap: int | None = None):
+    """Run a list of joins and insert all produced edges into ``g``.
+
+    ``joins``: iterable of (a_ids, b_ids, exclude_same_subset, symmetric).
+    One fused cap_scatter+merge per call keeps a single sort pipeline per
+    round. Returns (g, n_updates, n_evals).
+    """
+    cap = cap or g.k
+    all_rows, all_cols, all_d = [], [], []
+    n_evals = jnp.zeros((), jnp.int64 if jax.config.x64_enabled else jnp.int32)
+    for a_ids, b_ids, excl, sym in joins:
+        d, ne = pair_block(data, a_ids, b_ids, metric, sof=sof,
+                           exclude_same_subset=excl, symmetric_dedupe=sym)
+        r, c, dd = join_triples(a_ids, b_ids, d)
+        all_rows.append(r); all_cols.append(c); all_d.append(dd)
+        n_evals = n_evals + ne.astype(n_evals.dtype)
+    rows = jnp.concatenate(all_rows)
+    cols = jnp.concatenate(all_cols)
+    dvals = jnp.concatenate(all_d)
+    cand_ids, cand_dists = cap_scatter(rows, cols, dvals, g.n, cap)
+    g, n_upd = merge_rows(g, cand_ids, cand_dists)
+    return g, n_upd, n_evals

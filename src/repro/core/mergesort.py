@@ -1,0 +1,75 @@
+"""Neighbor-list merge sort — the paper's ``MergeSort(G, G0)`` and ``Ω``.
+
+``merge_graphs`` realizes the paper's final step of Two-way/Multi-way Merge
+(joining the cross-subset graph G with the concatenated subgraphs G0) and the
+per-round ``G_i ← MergeSort(G_i, G_i^j)`` updates of Alg. 3. ``concat_subgraphs``
+is Ω — it re-bases per-subset local neighbor ids into the global id space.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID_ID, KnnGraph, sort_rows_dedupe
+
+
+def merge_graphs(a: KnnGraph, b: KnnGraph, k: int | None = None) -> KnnGraph:
+    """Row-wise merge of two graphs over the same vertex set → top-k.
+
+    Duplicate ids collapse to one entry; ``a``'s slot (and flag) wins so merge
+    order never flips flags. Rows come back sorted ascending.
+    """
+    assert a.n == b.n, f"vertex sets differ: {a.n} vs {b.n}"
+    k = k or max(a.k, b.k)
+    ids = jnp.concatenate([a.ids, b.ids], axis=1)
+    dists = jnp.concatenate([a.dists, b.dists], axis=1)
+    flags = jnp.concatenate([a.flags, b.flags], axis=1)
+    prefer = jnp.concatenate(
+        [jnp.ones_like(a.ids, dtype=bool), jnp.zeros_like(b.ids, dtype=bool)],
+        axis=1)
+    ids, dists, flags = sort_rows_dedupe(ids, dists, flags, prefer)
+    return KnnGraph(ids=ids[:, :k], dists=dists[:, :k], flags=flags[:, :k])
+
+
+def concat_subgraphs(subgraphs: Sequence[KnnGraph]) -> KnnGraph:
+    """Ω(G₁, …, G_m): stack subgraphs, re-basing local ids to global ids.
+
+    Subgraph ``i`` covers the contiguous global id range
+    ``[offset_i, offset_i + n_i)`` (the framework's canonical subset layout —
+    arbitrary layouts are handled by permuting the dataset first).
+    """
+    parts_ids, parts_d, parts_f = [], [], []
+    offset = 0
+    k = max(g.k for g in subgraphs)
+    for g in subgraphs:
+        ids = g.ids
+        if g.k < k:  # pad narrower subgraphs
+            padn = k - g.k
+            ids = jnp.pad(ids, ((0, 0), (0, padn)), constant_values=INVALID_ID)
+            d = jnp.pad(g.dists, ((0, 0), (0, padn)), constant_values=jnp.inf)
+            f = jnp.pad(g.flags, ((0, 0), (0, padn)))
+        else:
+            d, f = g.dists, g.flags
+        parts_ids.append(jnp.where(ids == INVALID_ID, INVALID_ID, ids + offset))
+        parts_d.append(d)
+        parts_f.append(f)
+        offset += g.n
+    return KnnGraph(ids=jnp.concatenate(parts_ids, axis=0),
+                    dists=jnp.concatenate(parts_d, axis=0),
+                    flags=jnp.concatenate(parts_f, axis=0))
+
+
+def make_sof(sizes: Sequence[int]) -> jax.Array:
+    """Subset-of labels for the canonical contiguous layout (the paper's SoF)."""
+    return jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sizes)])
+
+
+def subset_starts(sizes: Sequence[int]) -> jax.Array:
+    """Exclusive-prefix-sum start offsets, one per subset."""
+    import numpy as np
+    return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)[:-1]]),
+                       dtype=jnp.int32)

@@ -1,0 +1,115 @@
+"""Multi-way Merge (paper Alg. 2): merge m > 2 subgraphs at once.
+
+Same skeleton as Two-way Merge plus the ``old`` cache: neighbors in G[i] may
+come from several foreign subsets, so Local-Join additionally cross-matches
+within ``new`` and between ``new`` and ``old`` — EXCLUDING same-subset pairs
+(already connected inside their subgraph). Complexity O(3·4λ²·t·n) vs the
+two-way hierarchy's O(4λ²·t·n·log₂m): wins for large m at a small
+(~0.002–0.003 recall) quality cost — reproduced in benchmarks/fig9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.graph import KnnGraph
+from repro.core.localjoin import local_join_insert
+from repro.core.sampling import (reverse_cap, sample_flagged,
+                                 sample_random_other, sample_unflagged,
+                                 union_cache)
+from repro.core.twoway import _merge_common, merge_full  # noqa: F401 (re-export)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "metric", "first"))
+def multi_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
+                    sof: jax.Array, starts: jax.Array, sizes_arr: jax.Array,
+                    key: jax.Array, lam: int, metric: str, first: bool):
+    n = g.n
+    if first:
+        new = sample_random_other(key, sof, starts, sizes_arr, lam)
+        old = sample_unflagged(g, lam)   # empty on round 1 (all -1)
+    else:
+        new, g = sample_flagged(g, lam)
+        old = sample_unflagged(g, lam)
+    new2 = union_cache(new, reverse_cap(new, n, lam))
+    old2 = union_cache(old, reverse_cap(old, n, lam))
+    joins = [
+        (new2, s_ids, False, False),  # new × S      (cross by construction)
+        (new2, new2, True, True),     # new × new    minus same-subset pairs
+        (new2, old2, True, False),    # new × old    minus same-subset pairs
+    ]
+    return local_join_insert(g, data, joins, metric, sof=sof)
+
+
+def multi_way_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
+                    lam: int, k: int | None = None, max_iters: int = 30,
+                    delta: float = 0.001, metric: str = "l2", trace_fn=None):
+    """Alg. 2. ``sizes``=(n₁,…,n_m); ``g0``=Ω(G₁,…,G_m) in global ids."""
+    assert len(sizes) >= 2
+    return _merge_common(key, data, sizes, g0, multi_way_round, lam=lam, k=k,
+                         max_iters=max_iters, delta=delta, metric=metric,
+                         trace_fn=trace_fn)
+
+
+def two_way_hierarchy(key: jax.Array, data: jax.Array, sizes, subgraphs, *,
+                      lam: int, k: int | None = None, max_iters: int = 30,
+                      delta: float = 0.001, metric: str = "l2"):
+    """Bottom-up hierarchical Two-way Merge (paper Fig. 3(a)).
+
+    m−1 pairwise merges; returns the final FULL graph plus aggregated stats.
+    Works on the canonical contiguous layout: adjacent (subset, subgraph)
+    pairs merge first, then merged spans pair up, etc.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.mergesort import concat_subgraphs
+    from repro.core.twoway import two_way_merge
+
+    assert len(sizes) == len(subgraphs) >= 1
+    spans = [(int(s), g) for s, g in zip(sizes, subgraphs)]
+    offsets = []
+    off = 0
+    for s, _ in spans:
+        offsets.append(off)
+        off += s
+    total_stats = {"total_evals": 0, "iters": 0, "merges": 0}
+    level = 0
+    # each span's graph is FULL over its own elements, with ids global
+    spans = [(offsets[i], int(sizes[i]), _rebase(subgraphs[i], offsets[i]))
+             for i in range(len(subgraphs))]
+    while len(spans) > 1:
+        nxt = []
+        for j in range(0, len(spans) - 1, 2):
+            o1, n1, g1 = spans[j]
+            o2, n2, g2 = spans[j + 1]
+            assert o2 == o1 + n1, "spans must be adjacent"
+            seg = jax.lax.dynamic_slice_in_dim(data, o1, n1 + n2, axis=0)
+            g0 = KnnGraph(ids=_shift(jnp.concatenate([g1.ids, g2.ids]), -o1),
+                          dists=jnp.concatenate([g1.dists, g2.dists]),
+                          flags=jnp.concatenate([g1.flags, g2.flags]))
+            gc, st = two_way_merge(
+                jax.random.fold_in(key, 7919 * level + j), seg, (n1, n2), g0,
+                lam=lam, k=k, max_iters=max_iters, delta=delta, metric=metric)
+            gm = merge_full(gc, g0)
+            total_stats["total_evals"] += st["total_evals"]
+            total_stats["iters"] += st["iters"]
+            total_stats["merges"] += 1
+            nxt.append((o1, n1 + n2, _rebase(gm, o1)))
+        if len(spans) % 2 == 1:
+            nxt.append(spans[-1])
+        spans = nxt
+        level += 1
+    return spans[0][2], total_stats
+
+
+def _shift(ids, delta):
+    import jax.numpy as jnp
+    from repro.core.graph import INVALID_ID
+    return jnp.where(ids == INVALID_ID, INVALID_ID, ids + delta)
+
+
+def _rebase(g: KnnGraph, offset: int) -> KnnGraph:
+    """Shift a subgraph's neighbor ids by ``offset`` (local → global)."""
+    return g._replace(ids=_shift(g.ids, offset))

@@ -1,0 +1,84 @@
+"""NN-Descent (Dong et al., WWW'11) in the dense lock-free form.
+
+The paper's baseline AND its subgraph builder: every merge experiment starts
+from NN-Descent subgraphs. One round =
+
+  sample new/old (flag-guarded) → capped reverse caches → local-join
+  (new×new, new×old) → lock-free insertion.
+
+Convergence: stop when a round's accepted updates fall below ``delta·n·k``
+(the classic NN-Descent criterion), read back on host once per round.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import KnnGraph, random_graph
+from repro.core.localjoin import local_join_insert
+from repro.core.sampling import (reverse_cap, sample_flagged,
+                                 sample_unflagged, union_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "metric"))
+def nn_descent_round(g: KnnGraph, data: jax.Array, lam: int, metric: str):
+    n = g.n
+    new, g = sample_flagged(g, lam)
+    old = sample_unflagged(g, lam)
+    new2 = union_cache(new, reverse_cap(new, n, lam))
+    old2 = union_cache(old, reverse_cap(old, n, lam))
+    joins = [
+        (new2, new2, False, True),    # new × new, each unordered pair once
+        (new2, old2, False, False),   # new × old
+    ]
+    return local_join_insert(g, data, joins, metric)
+
+
+def nn_descent_rounds(g: KnnGraph, data: jax.Array, *, lam: int,
+                      max_iters: int = 30, delta: float = 0.001,
+                      metric: str = "l2",
+                      trace_fn: Callable[[KnnGraph, int, dict], None] | None = None):
+    """Iterate rounds on an existing graph until convergence."""
+    n, k = g.ids.shape
+    stats: dict[str, Any] = {"updates": [], "evals": [], "iters": 0,
+                             "total_evals": 0}
+    for it in range(max_iters):
+        g, upd, evals = nn_descent_round(g, data, lam, metric)
+        upd = int(upd)
+        stats["updates"].append(upd)
+        stats["evals"].append(int(evals))
+        stats["total_evals"] += int(evals)
+        stats["iters"] = it + 1
+        if trace_fn is not None:
+            trace_fn(g, it, stats)
+        if upd <= delta * n * k:
+            break
+    return g, stats
+
+
+def nn_descent(key: jax.Array, data: jax.Array, k: int, *, lam: int | None = None,
+               max_iters: int = 30, delta: float = 0.001, metric: str = "l2",
+               trace_fn=None):
+    """Full NN-Descent from a random initial graph."""
+    lam = lam or max(1, k // 2)
+    g = random_graph(key, data.shape[0], k, data, metric=metric)
+    return nn_descent_rounds(g, data, lam=lam, max_iters=max_iters,
+                             delta=delta, metric=metric, trace_fn=trace_fn)
+
+
+def build_subgraphs(key: jax.Array, data: jax.Array, sizes, k: int, *,
+                    lam: int | None = None, max_iters: int = 30,
+                    delta: float = 0.001, metric: str = "l2"):
+    """NN-Descent per contiguous subset — the merge experiments' input."""
+    gs, offset = [], 0
+    for i, s in enumerate(sizes):
+        sub = jax.lax.dynamic_slice_in_dim(data, offset, s, axis=0)
+        g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
+                          max_iters=max_iters, delta=delta, metric=metric)
+        gs.append(g)
+        offset += s
+    return gs

@@ -1,0 +1,155 @@
+"""Out-of-core single-node construction (paper §IV, last part).
+
+"Alg. 3 can also run on a single node … the dataset is divided into subsets
+whose size fits into the memory capacity … other subgraphs and their vectors
+are kept in the external storage; two subgraphs are swapped in per round."
+
+Realized as a spool directory of npy blocks + an atomically-updated JSON
+manifest. Only two subsets are ever resident. Every completed unit of work
+(one subgraph build / one pair merge) is durable before the next starts, so
+a killed build resumes exactly where it stopped — this is the framework's
+fault-tolerance story for graph construction, at any scale: the distributed
+build checkpoints the same manifest at round granularity.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import pair_two_way_fixed
+from repro.core.graph import INVALID_ID, KnnGraph
+from repro.core.mergesort import merge_graphs
+from repro.core.nndescent import nn_descent
+from repro.core.sampling import support_graph
+
+
+class Spool:
+    """External-storage subset spool: npy blocks + atomic JSON manifest."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _p(self, name: str) -> str:
+        return os.path.join(self.root, name)
+
+    def put(self, name: str, **arrays) -> None:
+        tmp = self._p(name + ".tmp.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+        os.replace(tmp, self._p(name + ".npz"))     # atomic publish
+
+    def get(self, name: str) -> dict:
+        with np.load(self._p(name + ".npz")) as z:
+            return {k: z[k] for k in z.files}
+
+    def has(self, name: str) -> bool:
+        return os.path.exists(self._p(name + ".npz"))
+
+    def manifest(self) -> dict:
+        p = self._p("manifest.json")
+        if os.path.exists(p):
+            with open(p) as f:
+                return json.load(f)
+        return {"subgraphs_done": [], "pairs_done": []}
+
+    def write_manifest(self, man: dict) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root)
+        with os.fdopen(fd, "w") as f:
+            json.dump(man, f)
+        os.replace(tmp, self._p("manifest.json"))
+
+
+def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
+                      sizes: Sequence[int], *, k: int, lam: int,
+                      inner_iters: int = 8, nnd_iters: int = 20,
+                      metric: str = "l2") -> KnnGraph:
+    """Full out-of-core build: subset NN-Descent + all-pairs Two-way Merge.
+
+    ``data`` may be a numpy memmap — it is sliced per subset and only two
+    subsets are device-resident at a time. Restartable via the manifest.
+    """
+    m = len(sizes)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(int)
+    man = spool.manifest()
+
+    # ---- stage 1: per-subset subgraphs, one at a time ------------------
+    for i in range(m):
+        if i in man["subgraphs_done"] and spool.has(f"g{i}"):
+            continue
+        sub = jnp.asarray(data[starts[i]:starts[i] + sizes[i]])
+        g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
+                          max_iters=nnd_iters, metric=metric)
+        s_ids = support_graph(g, lam)
+        spool.put(f"g{i}", ids=g.ids, dists=g.dists, s=s_ids)
+        man["subgraphs_done"] = sorted(set(man["subgraphs_done"]) | {i})
+        spool.write_manifest(man)
+
+    # ---- stage 2: pairwise merges, two subsets resident ----------------
+    # Follows Alg. 3's pair order (node-major); each pair durable on finish.
+    pairs = [(i, (i - r) % m) for r in range(1, m // 2 + 1) for i in range(m)]
+    pairs = [(i, j) for i, j in pairs if i != j]
+    seen, uniq = set(), []
+    for i, j in pairs:
+        key_ij = (min(i, j), max(i, j))
+        if key_ij in seen:
+            continue
+        seen.add(key_ij)
+        uniq.append((i, j))
+    for i, j in uniq:
+        tag = f"{i}-{j}"
+        if tag in man["pairs_done"]:
+            continue
+        bi, bj = spool.get(f"g{i}"), spool.get(f"g{j}")
+        ni, nj = int(sizes[i]), int(sizes[j])
+        seg = jnp.concatenate(
+            [jnp.asarray(data[starts[i]:starts[i] + ni]),
+             jnp.asarray(data[starts[j]:starts[j] + nj])])
+        s_pair = jnp.concatenate(
+            [jnp.asarray(bi["s"]),
+             jnp.where(jnp.asarray(bj["s"]) == INVALID_ID, INVALID_ID,
+                       jnp.asarray(bj["s"]) + ni)])
+        kk = jax.random.fold_in(jax.random.fold_in(key, 101 + i), j)
+        g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
+                                     iters=inner_iters, metric=metric)
+        # merge halves into the durable per-subset FULL graphs
+        for (a, sl, base_other, na) in ((i, slice(0, ni), starts[j], ni),
+                                        (j, slice(ni, None), starts[i], nj)):
+            blk = spool.get(f"full{a}") if spool.has(f"full{a}") else None
+            if blk is None:
+                ga = spool.get(f"g{a}")
+                full = KnnGraph(
+                    ids=jnp.where(jnp.asarray(ga["ids"]) == INVALID_ID,
+                                  INVALID_ID,
+                                  jnp.asarray(ga["ids"]) + int(starts[a])),
+                    dists=jnp.asarray(ga["dists"]),
+                    flags=jnp.zeros_like(jnp.asarray(ga["ids"]), bool))
+            else:
+                full = KnnGraph(ids=jnp.asarray(blk["ids"]),
+                                dists=jnp.asarray(blk["dists"]),
+                                flags=jnp.zeros_like(
+                                    jnp.asarray(blk["ids"]), bool))
+            ids_half = g_cross.ids[sl]
+            off = -ni + int(base_other) if a == i else int(base_other)
+            half = KnnGraph(
+                ids=jnp.where(ids_half == INVALID_ID, INVALID_ID,
+                              ids_half + off),
+                dists=g_cross.dists[sl],
+                flags=jnp.zeros_like(ids_half, bool))
+            full = merge_graphs(full, half)
+            spool.put(f"full{a}", ids=full.ids, dists=full.dists)
+        man["pairs_done"].append(tag)
+        spool.write_manifest(man)
+
+    ids = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["ids"])
+                           for i in range(m)])
+    dists = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["dists"])
+                             for i in range(m)])
+    return KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))

@@ -1,0 +1,100 @@
+"""Sampling primitives shared by NN-Descent / S-Merge / Two-way / Multi-way.
+
+The paper's per-vertex variable-size caches (``new[i]``, ``old[i]``, ``R[i]``,
+``S[i]``) become fixed-capacity ``(n, width)`` id planes padded with ``-1``.
+Flag-guarded sampling ("max λ items with true flag, then mark false") is a
+masked top-λ followed by one scatter — semantics identical, fully batched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID_ID, KnnGraph
+from repro.core.insertion import cap_scatter
+
+
+def sample_flagged(g: KnnGraph, lam: int):
+    """Paper: ``new[i] ← max λ items in G[i] with true flag; mark them false``.
+
+    Returns ``(sampled_ids (n, λ), g_with_cleared_flags)``. Closest flagged
+    entries win (rows are distance-sorted, so a stable flag sort preserves
+    the paper's closest-first priority). Missing entries are -1.
+    """
+    n, k = g.ids.shape
+    # order: flagged first (rows already ascending by distance ⇒ stable sort
+    # on ~flag keeps closest flagged entries first).
+    order = jnp.argsort(~g.flags, axis=1, stable=True)[:, :lam]
+    cand = jnp.take_along_axis(g.ids, order, axis=1)
+    was_flagged = jnp.take_along_axis(g.flags, order, axis=1)
+    sampled = jnp.where(was_flagged, cand, INVALID_ID)
+    # clear flags on the sampled slots
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], order.shape)
+    flags = g.flags.at[rows, order].set(
+        jnp.where(was_flagged, False, g.flags[rows, order]))
+    return sampled, g._replace(flags=flags)
+
+
+def sample_unflagged(g: KnnGraph, lam: int) -> jax.Array:
+    """Paper: ``old[i] ← max λ items in G[i] with false flag`` (no mutation)."""
+    ok = g.valid & ~g.flags
+    order = jnp.argsort(~ok, axis=1, stable=True)[:, :lam]
+    cand = jnp.take_along_axis(g.ids, order, axis=1)
+    keep = jnp.take_along_axis(ok, order, axis=1)
+    return jnp.where(keep, cand, INVALID_ID)
+
+
+def reverse_cap(sample_ids: jax.Array, n: int, cap: int) -> jax.Array:
+    """Capped reverse cache: the paper's ``R[u] ← R[u] ∪ xᵢ  if |R[u]| < λ``.
+
+    ``sample_ids`` is (n, s): row i sampled these vertices; every (u ← i) pair
+    becomes a reverse entry in R[u], first-``cap`` wins (deterministically by
+    source id — the paper's first-by-thread-arrival is scheduling noise).
+    Returns (n, cap) ids, -1 padded.
+    """
+    n_rows, s = sample_ids.shape
+    src = jnp.broadcast_to(jnp.arange(n_rows, dtype=jnp.int32)[:, None],
+                           (n_rows, s)).reshape(-1)
+    dst = sample_ids.reshape(-1)
+    ids, _ = cap_scatter(dst, src, src.astype(jnp.float32), n, cap,
+                         by_dist=False)
+    return ids
+
+
+def support_graph(g0: KnnGraph, lam: int) -> jax.Array:
+    """The paper's fixed supporting graph S (Alg. 1/2 lines 4–7).
+
+    ``S[i] = (λ closest neighbors in G₀[i]) ∪ (≤λ reverse neighbors in Ḡ₀[i])``
+    sampled ONCE — intra-subset neighbors are never resampled afterwards.
+    Returns (n, 2λ) ids.
+    """
+    n = g0.n
+    fwd = jnp.where(jnp.arange(g0.k)[None, :] < lam, g0.ids, INVALID_ID)
+    fwd = fwd[:, : min(lam, g0.k)]
+    # reverse neighbors, closest-first capped at λ
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                           g0.ids.shape).reshape(-1)
+    rev_ids, _ = cap_scatter(g0.ids.reshape(-1), src, g0.dists.reshape(-1),
+                             n, lam, by_dist=True)
+    return jnp.concatenate([fwd, rev_ids], axis=1)
+
+
+def sample_random_other(key: jax.Array, sof: jax.Array,
+                        starts: jax.Array, sizes: jax.Array,
+                        lam: int) -> jax.Array:
+    """First-iteration seeding: ``new[i] ← λ random samples in C \\ SoF(i)``.
+
+    Subsets are contiguous (canonical layout): a uniform draw over the
+    complement of subset s is a draw in [0, n - |C_s|) shifted past C_s.
+    """
+    n = sof.shape[0]
+    my_start = starts[sof]          # (n,)
+    my_size = sizes[sof]            # (n,)
+    r = jax.random.randint(key, (n, lam), 0, jnp.maximum(n - my_size, 1)[:, None])
+    return jnp.where(r < my_start[:, None], r, r + my_size[:, None]).astype(jnp.int32)
+
+
+def union_cache(a: jax.Array, b: jax.Array) -> jax.Array:
+    """new[i] ← new[i] ∪ R[i] (concatenate fixed-capacity caches)."""
+    return jnp.concatenate([a, b], axis=1)

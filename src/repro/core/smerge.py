@@ -1,0 +1,45 @@
+"""S-Merge baseline (Zhao et al., IEEE TBD'22) — the paper's comparison.
+
+Initialization (paper Fig. 1): each neighborhood of G₀=Ω(G₁,G₂) keeps its
+first half; the second half is replaced with random elements from the OTHER
+subset (distances evaluated so rows stay sorted). Everything is marked new
+and the standard NN-Descent iteration refines the whole graph — i.e. unlike
+Two-way Merge it resamples intra-subset neighbors every round, which is
+exactly the inefficiency the paper removes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as _metrics
+from repro.core.graph import INVALID_ID, KnnGraph, sort_rows_dedupe
+from repro.core.mergesort import make_sof, subset_starts
+from repro.core.nndescent import nn_descent_rounds
+from repro.core.sampling import sample_random_other
+
+
+def s_merge_init(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph,
+                 metric: str = "l2") -> KnnGraph:
+    """Half-keep / half-random-cross initial graph, all flags new."""
+    n, k = g0.ids.shape
+    half = k // 2
+    sof = make_sof(sizes)
+    rand = sample_random_other(key, sof, subset_starts(sizes),
+                               jnp.asarray(sizes, jnp.int32), k - half)
+    rand_d = _metrics.dist_point(metric, data[:, None, :], data[rand])
+    ids = jnp.concatenate([g0.ids[:, :half], rand], axis=1)
+    dists = jnp.concatenate([g0.dists[:, :half], rand_d], axis=1)
+    flags = jnp.ones_like(ids, dtype=bool)
+    ids, dists, flags = sort_rows_dedupe(ids, dists, flags)
+    return KnnGraph(ids=ids[:, :k], dists=dists[:, :k], flags=flags[:, :k])
+
+
+def s_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
+            lam: int, max_iters: int = 30, delta: float = 0.001,
+            metric: str = "l2", trace_fn=None):
+    """Full S-Merge: init + NN-Descent refinement. Returns the FULL graph."""
+    g = s_merge_init(key, data, sizes, g0, metric=metric)
+    return nn_descent_rounds(g, data, lam=lam, max_iters=max_iters,
+                             delta=delta, metric=metric, trace_fn=trace_fn)

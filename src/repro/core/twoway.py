@@ -1,0 +1,86 @@
+"""Two-way Merge (paper Alg. 1).
+
+Merges subgraphs G₁, G₂ over disjoint subsets C₁, C₂ into the k-NN graph on
+C₁∪C₂. The three ideas that make it ~2× faster than S-Merge, kept exactly:
+
+  * the supporting graph ``S`` is sampled ONCE from G₀=Ω(G₁,G₂) and its
+    reverse graph, then frozen — intra-subset neighbors never resampled;
+  * the iterated graph ``G`` holds ONLY cross-subset neighbors; per-round
+    sampling touches only flag=true (newly inserted) entries;
+  * reverse caches R[i] are capped at λ and rebuilt/released every round.
+
+``two_way_merge`` returns the cross-subset graph G (paper's return value);
+``merge_full`` applies the final ``MergeSort(G, G₀)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import KnnGraph, empty_graph
+from repro.core.localjoin import local_join_insert
+from repro.core.mergesort import make_sof, merge_graphs, subset_starts
+from repro.core.sampling import (reverse_cap, sample_flagged,
+                                 sample_random_other, support_graph,
+                                 union_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "metric", "first"))
+def two_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
+                  sof: jax.Array, starts: jax.Array, sizes_arr: jax.Array,
+                  key: jax.Array, lam: int, metric: str, first: bool):
+    n = g.n
+    if first:
+        new = sample_random_other(key, sof, starts, sizes_arr, lam)
+    else:
+        new, g = sample_flagged(g, lam)
+    new2 = union_cache(new, reverse_cap(new, n, lam))
+    # local-join new2 × S: new2 ⊆ C\SoF(i), S ⊆ SoF(i) ⇒ pairs are strictly
+    # cross-subset; both directions inserted into the cross graph G.
+    return local_join_insert(g, data, [(new2, s_ids, False, False)], metric)
+
+
+def two_way_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
+                  lam: int, k: int | None = None, max_iters: int = 30,
+                  delta: float = 0.001, metric: str = "l2", trace_fn=None):
+    """Alg. 1. ``sizes``=(n₁, n₂); ``g0``=Ω(G₁,G₂) in global ids."""
+    assert len(sizes) == 2
+    return _merge_common(key, data, sizes, g0, two_way_round, lam=lam, k=k,
+                         max_iters=max_iters, delta=delta, metric=metric,
+                         trace_fn=trace_fn)
+
+
+def _merge_common(key, data, sizes, g0, round_fn, *, lam, k, max_iters,
+                  delta, metric, trace_fn):
+    n = data.shape[0]
+    assert g0.n == n
+    k = k or g0.k
+    sof = make_sof(sizes)
+    starts = subset_starts(sizes)
+    sizes_arr = jnp.asarray(sizes, dtype=jnp.int32)
+    s_ids = support_graph(g0, lam)          # frozen for the whole merge
+    g = empty_graph(n, k)
+    stats: dict[str, Any] = {"updates": [], "evals": [], "iters": 0,
+                             "total_evals": 0}
+    for it in range(max_iters):
+        g, upd, evals = round_fn(g, data, s_ids, sof, starts, sizes_arr,
+                                 jax.random.fold_in(key, it), lam, metric,
+                                 it == 0)
+        stats["updates"].append(int(upd))
+        stats["evals"].append(int(evals))
+        stats["total_evals"] += int(evals)
+        stats["iters"] = it + 1
+        if trace_fn is not None:
+            trace_fn(g, it, stats)
+        if int(upd) <= delta * n * k:
+            break
+    return g, stats
+
+
+def merge_full(g_cross: KnnGraph, g0: KnnGraph, k: int | None = None) -> KnnGraph:
+    """Final ``MergeSort(G, G₀)`` → the complete k-NN graph on C."""
+    return merge_graphs(g0, g_cross, k=k or g0.k)

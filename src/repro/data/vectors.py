@@ -1,0 +1,33 @@
+"""Synthetic vector datasets standing in for SIFT/DEEP/GIST at CPU scale.
+
+``clustered`` draws from a Gaussian mixture so the k-NN structure is
+non-trivial (recall of a random graph ≈ k/n); ``sift_like`` adds the heavy
+per-dimension anisotropy that makes SIFT's LID ≈ 15 ≪ d. Deterministic in
+the key — every benchmark/test regenerates its data identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clustered(key: jax.Array, n: int, d: int, n_clusters: int = 64,
+              scale: float = 0.15) -> jax.Array:
+    kc, kx, ka = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_clusters, d))
+    assign = jax.random.randint(ka, (n,), 0, n_clusters)
+    return centers[assign] + scale * jax.random.normal(kx, (n, d))
+
+
+def sift_like(key: jax.Array, n: int, d: int = 32, lid: int = 12,
+              n_clusters: int = 64) -> jax.Array:
+    """Low intrinsic dimension inside ambient d (SIFT-ish difficulty)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    z = clustered(k1, n, lid, n_clusters=n_clusters)
+    proj = jax.random.normal(k2, (lid, d)) / jnp.sqrt(lid)
+    return z @ proj + 0.01 * jax.random.normal(k3, (n, d))
+
+
+def uniform(key: jax.Array, n: int, d: int) -> jax.Array:
+    return jax.random.uniform(key, (n, d))

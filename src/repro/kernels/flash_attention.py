@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: blocked online-softmax attention (prefill hot spot).
+
+Grid (B, H, nq, nk) with the kv dimension innermost ("arbitrary" semantics):
+each (b, h, i) revisits its q block across j steps carrying the running max
+m, normalizer l and accumulator in VMEM scratch — the (Sq, Sk) score matrix
+never exists. GQA is free: the k/v BlockSpec index maps query head h to kv
+head ``h·KH//H``, so kv blocks are fetched once per kv head group.
+
+Causal + sliding-window masks are applied per block from absolute positions
+(``q_offset`` places the q block inside the kv sequence for chunked prefill
+/ decode). A production refinement would skip fully-masked j blocks via a
+sparse grid map; kept dense here for clarity — the roofline perf pass
+accounts for it analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, q_offset, bq, bk, nk, sk):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    i = pl.program_id(2)
+    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk                                  # padded keys are dead
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _flash_impl(q, k, v, *, causal=True, window=None, scale=None,
+                           q_offset: int = 0, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q (B,Sq,H,D); k/v (B,Sk,KH,D), H % KH == 0 → (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    qpad, kpad = (-Sq) % bq, (-Sk) % bk
+    qt = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0))), 1, 2)
+    kt = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0))), 1, 2)
+    vt = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0))), 1, 2)
+    nq, nk = (Sq + qpad) // bq, (Sk + kpad) // bk
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal,
+        window=window, q_offset=q_offset, bq=bq, bk=bk, nk=nk, sk=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h * KH // H, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h * KH // H, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)[:, :Sq]
+
+
+_flash_jit = jax.jit(_flash_impl, static_argnames=(
+    "causal", "window", "scale", "q_offset", "bq", "bk", "interpret"))
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
+                           q_offset: int = 0, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q (B,Sq,H,D); k/v (B,Sk,KH,D) -> (B,Sq,H,D).
+
+    interpret=True bypasses jit (eager interpreter; see pairdist)."""
+    if interpret:
+        return _flash_impl(q, k, v, causal=causal, window=window, scale=scale,
+                           q_offset=q_offset, bq=bq, bk=bk, interpret=True)
+    return _flash_jit(q, k, v, causal=causal, window=window, scale=scale,
+                      q_offset=q_offset, bq=bq, bk=bk)

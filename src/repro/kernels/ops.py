@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``set_use_pallas`` / the ``REPRO_USE_PALLAS`` env var force either path
+(tests run kernels with ``interpret=True`` regardless). Keeping dispatch in
+one module means the algorithm layers never know which backend ran.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_FORCE: bool | None = None
+
+
+def set_use_pallas(flag: bool | None) -> None:
+    global _FORCE
+    _FORCE = flag
+
+
+def use_pallas() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+def pairdist(a: jax.Array, b: jax.Array, metric: str = "l2") -> jax.Array:
+    if use_pallas() and metric == "l2" and a.ndim == 3:
+        from repro.kernels import pairdist as _k
+        return _k.pairdist_pallas(a, b)
+    return _ref.pairdist(a, b, metric=metric)
+
+
+def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
+    if use_pallas() and row_ids.ndim == 2:
+        from repro.kernels import topk_merge as _k
+        return _k.topk_merge_pallas(row_ids, row_dists, cand_ids, cand_dists)
+    return _ref.topk_merge(row_ids, row_dists, cand_ids, cand_dists)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    q_offset: int = 0):
+    if use_pallas():
+        from repro.kernels import flash_attention as _k
+        return _k.flash_attention_pallas(q, k, v, causal=causal,
+                                         window=window, scale=scale,
+                                         q_offset=q_offset)
+    return _ref.attention(q, k, v, causal=causal, window=window, scale=scale,
+                          q_offset=q_offset)

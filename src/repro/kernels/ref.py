@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+Each function is the semantic ground truth its kernel is tested against
+(`tests/test_kernels_*.py` sweep shapes/dtypes with ``interpret=True`` and
+``assert_allclose``). They are also the production fallback on non-TPU
+backends, so they are written to be XLA-efficient, not just correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairdist(a: jax.Array, b: jax.Array, metric: str = "l2") -> jax.Array:
+    """(…, M, d) × (…, N, d) → (…, M, N) pair distances.
+
+    L2 is squared-L2 via ‖u‖²+‖v‖²−2u·vᵀ (matmul cross term — the same
+    contraction the kernel puts on the MXU).
+    """
+    if metric == "ip":
+        return -jnp.einsum("...md,...nd->...mn", a, b)
+    if metric == "cos":
+        a = a / jnp.maximum(jnp.linalg.norm(a, axis=-1, keepdims=True), 1e-12)
+        b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-12)
+        return 1.0 - jnp.einsum("...md,...nd->...mn", a, b)
+    an = jnp.sum(a * a, axis=-1)
+    bn = jnp.sum(b * b, axis=-1)
+    cross = jnp.einsum("...md,...nd->...mn", a, b)
+    return jnp.maximum(an[..., :, None] + bn[..., None, :] - 2.0 * cross, 0.0)
+
+
+def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
+    """Merge a sorted neighbor row with sorted candidates → sorted top-k.
+
+    (…, k) + (…, c) → (…, k). Duplicate ids keep the row-side entry.
+    """
+    k = row_ids.shape[-1]
+    ids = jnp.concatenate([row_ids, cand_ids], axis=-1)
+    dists = jnp.concatenate([row_dists, cand_dists], axis=-1)
+    w = ids.shape[-1]
+    # duplicate suppression: an entry is dup if an earlier slot has same id
+    eq = ids[..., :, None] == ids[..., None, :]
+    earlier = jnp.arange(w)[:, None] > jnp.arange(w)[None, :]
+    dup = jnp.any(eq & earlier & (ids[..., None, :] >= 0), axis=-1) & (ids >= 0)
+    dists = jnp.where(dup | (ids < 0), jnp.inf, dists)
+    ids = jnp.where(dup, -1, ids)
+    order = jnp.argsort(dists, axis=-1, stable=True)
+    ids = jnp.take_along_axis(ids, order, axis=-1)
+    dists = jnp.take_along_axis(dists, order, axis=-1)
+    return ids[..., :k], dists[..., :k]
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, q_offset: int = 0,
+              chunk: int = 512):
+    """Chunked online-softmax attention — oracle for the flash kernel.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KH, D) with H % KH == 0 (GQA broadcast).
+    ``window`` enables sliding-window causal masking (Mixtral). ``q_offset``
+    positions the query block inside the kv sequence (decode / chunked
+    prefill). Never materializes the full (Sq, Sk) score matrix: scans over
+    q-chunks, each computing (chunk, Sk) scores.
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    rep = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k   # (B, Sk, H, D)
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    Sk = kk.shape[1]
+    pad = (-Sq) % chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = qp.shape[1] // chunk
+    kpos = jnp.arange(Sk)
+
+    def one(ci):
+        qc = jax.lax.dynamic_slice_in_dim(qp, ci * chunk, chunk, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, Sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+        return o / jnp.maximum(jnp.swapaxes(l, 1, 2), 1e-30)
+
+    out = jax.lax.map(one, jnp.arange(nchunks))          # (nc, B, chunk, H, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nchunks * chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)

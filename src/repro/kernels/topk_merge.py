@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: sorted-row ⊕ sorted-candidates → top-k (rank sort).
+
+The insertion epilogue of every merge round (paper's ``try insert`` /
+``MergeSort(G, G₀)``): each graph row (ascending, width k) absorbs a block
+of candidates (ascending, width c). Duplicate suppression (candidate id
+already in the row / earlier candidate) happens in-VMEM first; dup slots are
+masked to +inf, which punches holes in the runs, so a merge network alone
+cannot finish the job.
+
+TPU adaptation (documented in DESIGN.md): instead of a log²₂-stage bitonic
+compare-exchange network — deep sequential VPU dependency chains that XLA
+also compiles catastrophically slowly — the W ≤ 256 merged slots are sorted
+by STABLE RANK SORT: one (W, W) comparison block gives each slot its output
+rank, and a one-hot permutation contraction places keys and payloads — two
+wide ops that map onto the MXU/VPU with no serial chain. O(W²) work beats
+O(W log² W) here because every op runs at full vector width and W is tiny.
+
+Grid is 1-D over row blocks; each step stages (bn, W) keys+payloads in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import INVALID_ID
+
+
+def _rank_sort(d: jax.Array, i: jax.Array):
+    """Stable ascending sort of (…, W) keys d with payload i via rank-sort."""
+    W = d.shape[-1]
+    pos = jnp.arange(W, dtype=jnp.int32)
+    strictly_less = d[..., :, None] > d[..., None, :]       # key_j < key_i
+    tie_before = (d[..., :, None] == d[..., None, :]) & (
+        pos[:, None] > pos[None, :])                         # stable ties
+    rank = jnp.sum(strictly_less | tie_before, axis=-1)      # (…, W) unique
+    onehot = rank[..., :, None] == pos[None, :]               # [i, r] perm
+    d_out = jnp.sum(jnp.where(onehot, d[..., :, None], 0.0), axis=-2)
+    i_out = jnp.sum(jnp.where(onehot, i[..., :, None], 0), axis=-2)
+    return d_out, i_out.astype(i.dtype)
+
+
+def _kernel(rid_ref, rd_ref, cid_ref, cd_ref, oid_ref, od_ref, *, k, c, W):
+    rid, rd = rid_ref[...], rd_ref[...]               # (bn, k)
+    cid, cd = cid_ref[...], cd_ref[...]               # (bn, c)
+    # -- duplicate suppression: earliest slot wins (row side first) ------
+    earlier_k = jnp.arange(k)[:, None] > jnp.arange(k)[None, :]
+    dup_in_row = jnp.any(
+        (rid[:, :, None] == rid[:, None, :]) & earlier_k[None], axis=-1)
+    dup_row = jnp.any(cid[:, :, None] == rid[:, None, :], axis=-1)
+    earlier = jnp.arange(c)[:, None] > jnp.arange(c)[None, :]
+    dup_cand = jnp.any(
+        (cid[:, :, None] == cid[:, None, :]) & earlier[None], axis=-1)
+    bad = dup_row | dup_cand | (cid == INVALID_ID)
+    cd = jnp.where(bad, jnp.inf, cd)
+    cid = jnp.where(bad, INVALID_ID, cid)
+    bad_r = dup_in_row | (rid == INVALID_ID)
+    rd = jnp.where(bad_r, jnp.inf, rd)
+    rid = jnp.where(dup_in_row, INVALID_ID, rid)
+    keys = jnp.concatenate([rd, cd], axis=-1)
+    vals = jnp.concatenate([rid, cid], axis=-1)
+    keys, vals = _rank_sort(keys, vals)
+    oid_ref[...] = vals[:, :k]
+    od_ref[...] = keys[:, :k]
+
+
+def _topk_merge_impl(row_ids, row_dists, cand_ids, cand_dists, *,
+                      interpret: bool = False):
+    """(n,k) sorted rows ⊕ (n,c) sorted candidates → (n,k) sorted rows."""
+    n, k = row_ids.shape
+    c = cand_ids.shape[1]
+    W = k + c
+    bn = max(1, min(n, (2 << 20) // (W * W * 8)))      # (bn, W, W) compare
+    npad = (-n) % bn
+    rid = jnp.pad(row_ids, ((0, npad), (0, 0)), constant_values=INVALID_ID)
+    rd = jnp.pad(row_dists, ((0, npad), (0, 0)), constant_values=jnp.inf)
+    cid = jnp.pad(cand_ids, ((0, npad), (0, 0)), constant_values=INVALID_ID)
+    cd = jnp.pad(cand_dists, ((0, npad), (0, 0)), constant_values=jnp.inf)
+    kern = functools.partial(_kernel, k=k, c=c, W=W)
+    oid, od = pl.pallas_call(
+        kern,
+        grid=((n + npad) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, c), lambda i: (i, 0)),
+            pl.BlockSpec((bn, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + npad, k), row_ids.dtype),
+            jax.ShapeDtypeStruct((n + npad, k), row_dists.dtype),
+        ],
+        interpret=interpret,
+    )(rid, rd, cid, cd)
+    return oid[:n], od[:n]
+
+
+_topk_merge_jit = jax.jit(_topk_merge_impl)
+
+
+def topk_merge_pallas(row_ids, row_dists, cand_ids, cand_dists, *,
+                      interpret: bool = False):
+    """(n,k) sorted rows + (n,c) sorted candidates -> (n,k) sorted rows.
+
+    interpret=True bypasses jit (eager interpreter; see pairdist)."""
+    if interpret:
+        return _topk_merge_impl(row_ids, row_dists, cand_ids, cand_dists,
+                                interpret=True)
+    return _topk_merge_jit(row_ids, row_dists, cand_ids, cand_dists)

@@ -1,0 +1,285 @@
+"""Loop-aware HLO analysis: FLOPs, collective bytes, traffic from compiled HLO.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis visits each
+while-loop BODY ONCE — with scan-over-layers (and chunked-scan mixers) that
+undercounts FLOPs by ~L×(S/chunk), i.e. three orders of magnitude. This
+module parses the compiled HLO text into computations, recovers every while
+loop's trip count from its condition (the canonical ``compare(iter, L),
+direction=LT``), propagates multipliers down the call graph (nested scans
+compose multiplicatively), and then accounts:
+
+  * flops        — dot/convolution ops: 2 · prod(output dims) · prod(contracting dims)
+  * collectives  — operand bytes of all-gather/all-reduce/reduce-scatter/
+                   all-to-all/collective-permute, per kind
+  * traffic      — Σ (operand+output bytes) of dot/fusion/copy/dus/gather/
+                   scatter ops: an HBM-traffic PROXY (post-fusion op
+                   boundaries ≈ materialization points; documented caveat —
+                   it over-counts operands shared between fusions)
+
+Everything is per-device (the compiled module is the per-device SPMD
+program), which is exactly what the roofline terms want.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <type…> <op>(" — type may be a tuple with nested layouts, so we
+# lazily eat anything up to the last word before the operand paren.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s([\w\-]+)\(")
+# computation headers sit at column 0 and end with "{":
+#   ENTRY %main.4 (x.1: f32[256,256], …) -> f32[256,256] {
+#   %region_0.2 (arg_tuple.1: (s32[], …)) -> (…) {
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _shapes(type_str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dtype, d))
+    return out
+
+
+def _bytes(type_str) -> int:
+    total = 0
+    for dtype, dims in _shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "type_str", "op", "line", "operands")
+
+    def __init__(self, name, type_str, op, line, operands):
+        self.name, self.type_str, self.op = name, type_str, op
+        self.line, self.operands = line, operands
+
+
+def _parse(hlo: str):
+    """→ {comp_name: [Op]}, {op_name: type_str} (global)."""
+    comps: dict[str, list[Op]] = {}
+    types: dict[str, str] = {}
+    cur = None
+    for ln in hlo.splitlines():
+        if (not ln.startswith((" ", "\t", "}")) and ln.rstrip().endswith("{")
+                and "->" in ln and not ln.startswith("HloModule")):
+            mc = _COMP_RE.match(ln)
+            if mc:
+                cur = mc.group(1)
+                comps[cur] = []
+                continue
+        m = _DEF_RE.match(ln)
+        if not m or cur is None:
+            continue
+        name, type_str, op = m.groups()
+        args = ln.split("(", 1)[1]
+        ops = re.findall(r"%([\w\.\-]+)", args.split(")")[0])
+        if not ops:  # HLO may omit % on operand names
+            ops = [t for t in re.split(r"[,\s()]+", args.split(")")[0])
+                   if t and not t[0].isdigit() and "=" not in t
+                   and "[" not in t]
+        comps[cur].append(Op(name, type_str, op, ln, ops))
+        types[name] = type_str
+    return comps, types
+
+
+def _trip_count(cond_ops) -> int:
+    """Largest integer constant in the loop condition computation."""
+    best = 1
+    for o in cond_ops:
+        if o.op == "constant":
+            m = re.search(r"constant\((\d+)\)", o.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers_and_trips(comps):
+    mult = _multipliers(comps)
+    # immediate-loop trip count per computation (while bodies; fusions
+    # called from a body inherit it) — used to spot scan-accumulator ops.
+    edge_re = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+    trips = {c: 1 for c in comps}
+    for c, ops in comps.items():
+        for o in ops:
+            if o.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", o.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", o.line)
+                if bm and cm and cm.group(1) in comps:
+                    trips[bm.group(1)] = _trip_count(comps[cm.group(1)])
+    for _ in range(4):
+        for c, ops in comps.items():
+            for o in ops:
+                for tgt in edge_re.findall(o.line):
+                    if tgt in trips and trips[c] > 1 and trips[tgt] == 1:
+                        trips[tgt] = trips[c]
+    return mult, trips
+
+
+def _multipliers(comps) -> dict:
+    """Execution-count multiplier per computation (nested loops compose)."""
+    # call edges: while(body=%b, condition=%c), fusion(calls=%f),
+    # call(to_apply=%f), conditional(branch_computations={...})
+    edge_re = re.compile(
+        r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)")
+    branch_re = re.compile(r"branch_computations=\{([^}]*)\}")
+    mult = {c: 0 for c in comps}
+    entry = None
+    for c in comps:
+        if "entry" in c.lower() or entry is None:
+            pass
+    # entry = computation never referenced as a callee
+    callees = set()
+    for c, ops in comps.items():
+        for o in ops:
+            for m in edge_re.finditer(o.line):
+                callees.add(m.group(1))
+            bm = branch_re.search(o.line)
+            if bm:
+                callees.update(x.strip().lstrip("%")
+                               for x in bm.group(1).split(","))
+    roots = [c for c in comps if c not in callees]
+    for r in roots:
+        mult[r] = 1
+    # propagate (few levels; iterate to fixpoint)
+    for _ in range(len(comps)):
+        changed = False
+        for c, ops in comps.items():
+            if mult.get(c, 0) == 0:
+                continue
+            for o in ops:
+                if o.op == "while":
+                    m = edge_re.findall(o.line)
+                    body = cond = None
+                    bm = re.search(r"body=%?([\w\.\-]+)", o.line)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", o.line)
+                    if bm and cm and cm.group(1) in comps:
+                        trips = _trip_count(comps[cm.group(1)])
+                        for tgt, k in ((bm.group(1), trips),
+                                       (cm.group(1), trips + 1)):
+                            newv = mult[c] * k
+                            if tgt in mult and newv > mult[tgt]:
+                                mult[tgt] = newv
+                                changed = True
+                else:
+                    for tgt in edge_re.findall(o.line):
+                        if tgt in mult and mult[c] > mult[tgt]:
+                            mult[tgt] = mult[c]
+                            changed = True
+                    bm = branch_re.search(o.line)
+                    if bm:
+                        for tgt in (x.strip().lstrip("%")
+                                    for x in bm.group(1).split(",")):
+                            if tgt in mult and mult[c] > mult[tgt]:
+                                mult[tgt] = mult[c]
+                                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, types) -> float:
+    out_elems = 1
+    for _, dims in _shapes(op.type_str):
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # fallback
+    lhs_shape = None
+    lhs_t = types.get(op.operands[0])
+    if lhs_t:
+        sh = _shapes(lhs_t)
+        if sh:
+            lhs_shape = sh[0][1]
+    if lhs_shape is None:
+        return 2.0 * out_elems
+    k = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_shape):
+            k *= lhs_shape[idx]
+    return 2.0 * out_elems * k
+
+
+# traffic proxy = 2 × OUTPUT bytes of materializing ops (write + ~1 read).
+# Output-only avoids the stacked-weights blowup: a dynamic-slice reading one
+# layer of an (L, …) stack would otherwise count the whole stack every
+# iteration. Under-counts multi-consumer reads; documented in EXPERIMENTS.md.
+TRAFFIC_OPS = ("fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+               "gather", "scatter", "dynamic-slice", "reduce",
+               "reduce-window", "sort", "transpose", "convert", "broadcast")
+
+
+def analyze(hlo: str) -> dict:
+    """Loop-corrected per-device {flops, collectives, traffic_bytes, …}."""
+    comps, types = _parse(hlo)
+    mult, trips = _multipliers_and_trips(comps)
+    flops = 0.0
+    coll = {k: {"bytes": 0.0, "count": 0} for k in COLLECTIVES}
+    traffic = 0.0
+    for c, ops in comps.items():
+        k = mult.get(c, 1) or 1
+        t_local = trips.get(c, 1)
+        for o in ops:
+            if o.op in ("dot", "convolution"):
+                flops += k * _dot_flops(o, types)
+            for cname in COLLECTIVES:
+                if o.op.startswith(cname) or \
+                        o.op.startswith(cname.replace("-", "_")):
+                    b = sum(_bytes(types.get(x, "")) for x in o.operands)
+                    if b == 0:
+                        b = _bytes(o.type_str)
+                    coll[cname]["bytes"] += k * b
+                    coll[cname]["count"] += k
+                    break
+            if o.op in TRAFFIC_OPS:
+                b = _bytes(o.type_str)
+                # scan-accumulator heuristic: an op inside a loop whose
+                # output's leading dim equals the loop's trip count is the
+                # (aliased, in-place) ys-stacking buffer — bill the slice
+                # actually written per iteration, not the whole stack.
+                if t_local > 1 and k > 1:
+                    shp = _shapes(o.type_str)
+                    if shp and shp[0][1] and shp[0][1][0] == t_local:
+                        b = b // t_local
+                traffic += k * 2 * b
+    total_coll = sum(v["bytes"] for v in coll.values())
+    return {"flops": flops, "collectives": coll,
+            "collective_bytes": total_coll, "traffic_bytes": traffic,
+            "n_computations": len(comps),
+            "max_multiplier": max(mult.values() or [1])}
+
+
+def op_census(hlo_text: str, top: int = 12) -> list:
+    counts: dict[str, int] = defaultdict(int)
+    for ln in hlo_text.splitlines():
+        m = _DEF_RE.match(ln)
+        if m:
+            counts[m.group(3)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat wrapper: loop-corrected collective stats."""
+    a = analyze(hlo_text)
+    out = dict(a["collectives"])
+    out["total_bytes"] = a["collective_bytes"]
+    return out

@@ -1,0 +1,90 @@
+"""Distributed k-NN graph construction launcher (paper Alg. 3).
+
+Run with m host devices (the multi-node stand-in; on real hardware the
+same shard_map runs over the pod's 'nodes' axis):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  python -m repro.launch.knn_build --nodes 8 --n 4096 --k 16
+
+Also drives the out-of-core single-node mode (--out-of-core SPOOL_DIR),
+which is restartable — kill it mid-build and rerun to resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=24)
+    ap.add_argument("--k", type=int, default=12)
+    ap.add_argument("--lam", type=int, default=6)
+    ap.add_argument("--inner-iters", type=int, default=6)
+    ap.add_argument("--nnd-iters", type=int, default=15)
+    ap.add_argument("--out-of-core", default=None, metavar="SPOOL_DIR")
+    ap.add_argument("--eval", action="store_true",
+                    help="compute recall@10 vs brute force")
+    args = ap.parse_args()
+
+    if args.out_of_core is None and "--xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.nodes}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data.vectors import sift_like
+
+    n = args.n - args.n % args.nodes
+    data = sift_like(jax.random.key(0), n, args.d)
+    t0 = time.time()
+
+    if args.out_of_core:
+        from repro.core.outofcore import Spool, build_out_of_core
+        g = build_out_of_core(
+            jax.random.key(1), Spool(args.out_of_core), np.asarray(data),
+            (n // args.nodes,) * args.nodes, k=args.k, lam=args.lam,
+            inner_iters=args.inner_iters, nnd_iters=args.nnd_iters)
+        ids = g.ids
+    else:
+        from repro.core.distributed import build_distributed
+        from repro.core.graph import KnnGraph
+        from repro.core.nndescent import build_subgraphs
+        from repro.launch.mesh import make_nodes_mesh
+        mesh = make_nodes_mesh(args.nodes)
+        sizes = (n // args.nodes,) * args.nodes
+        subs = build_subgraphs(jax.random.key(2), data, sizes, args.k,
+                               lam=args.lam, max_iters=args.nnd_iters)
+        print(f"[knn_build] {args.nodes} subgraphs built "
+              f"({time.time()-t0:.1f}s)", flush=True)
+        ids, dists = build_distributed(
+            mesh, data, jnp.concatenate([s.ids for s in subs]),
+            jnp.concatenate([s.dists for s in subs]), jax.random.key(3),
+            k=args.k, lam=args.lam, inner_iters=args.inner_iters)
+        ids.block_until_ready()
+    print(f"[knn_build] graph built: n={n} k={args.k} "
+          f"({time.time()-t0:.1f}s total)", flush=True)
+
+    if args.eval:
+        from repro.core.bruteforce import knn_bruteforce
+        from repro.core.graph import KnnGraph, recall
+        gt = knn_bruteforce(data, args.k)
+        g = KnnGraph(ids=jnp.asarray(ids),
+                     dists=jnp.zeros_like(jnp.asarray(ids), jnp.float32),
+                     flags=jnp.zeros_like(jnp.asarray(ids), bool))
+        r = float(recall(g, gt.ids, 10))
+        print(f"[knn_build] recall@10 = {r:.4f}")
+        sys.exit(0 if r > 0.8 else 2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Production mesh construction (pure function — importing this module
+never touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+extends data parallelism across the DCN/ICI boundary (FSDP spans
+pod×data; TP never crosses pods).
+
+Elastic scaling: ``make_mesh_for(n_devices)`` picks the largest valid
+(data, model) grid for whatever devices exist — mesh shape is config, not
+code, which is the elasticity contract the k-NN build and trainer rely on
+(both are stateless given the round/step index, so a restart on a resized
+mesh re-enters cleanly from the checkpoint).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(n_devices: int | None = None, *, model_parallel: int = 0):
+    """Largest (data, model) mesh that fits ``n_devices`` (elastic)."""
+    n = n_devices or len(jax.devices())
+    model = model_parallel or _largest_pow2_le(max(1, int(n ** 0.5)))
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def make_nodes_mesh(m: int):
+    """1-D mesh for the distributed k-NN build (paper's m nodes)."""
+    return jax.make_mesh((m,), ("nodes",), axis_types=(AxisType.Auto,))
+
+
+def _largest_pow2_le(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p

@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-360m …``
+
+CPU-scale by default (reduced config unless --full); the same entry point
+drives the production mesh when real devices exist (mesh shape is config —
+see launch/mesh.py). Checkpoint/resume comes from train.loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) architecture config")
+    args = ap.parse_args()
+
+    from repro.configs import get, reduced
+    from repro.data.tokens import TokenPipeline
+    from repro.models.model import build
+    from repro.train.loop import Trainer
+    from repro.train.optim import AdamW
+
+    cfg = get(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = build(cfg)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
+                         global_batch=args.batch)
+    opt = AdamW(lr_peak=args.lr, warmup_steps=20, total_steps=args.steps)
+    trainer = Trainer(model=model, opt=opt, pipeline=pipe,
+                      ckpt_dir=args.ckpt_dir)
+    _, _, history = trainer.run(args.steps)
+    first, last = history[0][1]["loss"], history[-1][1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""GQA attention: training/prefill (flash path) + cached decode.
+
+Covers every attention variant in the assigned pool: grouped KV heads
+(all), sliding window (mixtral), qk-norm (qwen3), qkv-bias (qwen2/qwen2-vl),
+M-RoPE (qwen2-vl), cross-attention (whisper decoder).
+
+Decode uses a position-tagged ring-buffer KV cache: slot = pos % cache_len.
+With cache_len == seq_len that is a plain append; with cache_len == window
+(SWA) old entries are overwritten and masked out by their stored position —
+one mechanism for both full and sliding-window attention, which is what
+makes ``long_500k`` a pure O(window) memory cell for mixtral. Scores are
+accumulated with an online softmax over cache chunks so decode never
+materializes (B, H, cache_len) in fp32 at once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, normal, rms_norm
+from repro.sharding.partition import constrain
+
+
+def init_attn(key, cfg, n_layers: int, pdt) -> dict:
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": normal(ks[0], (n_layers, d, H * hd), sc, pdt),
+        "wk": normal(ks[1], (n_layers, d, KH * hd), sc, pdt),
+        "wv": normal(ks[2], (n_layers, d, KH * hd), sc, pdt),
+        "wo": normal(ks[3], (n_layers, H * hd, d), (H * hd) ** -0.5, pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, H * hd), pdt)
+        p["bk"] = jnp.zeros((n_layers, KH * hd), pdt)
+        p["bv"] = jnp.zeros((n_layers, KH * hd), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n_layers, hd), pdt)
+        p["k_norm"] = jnp.ones((n_layers, hd), pdt)
+    return p
+
+
+def _project_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(B, S, H, hd), "dp", None, "tp", None)
+    k = constrain(k.reshape(B, S, KH, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(B, S, KH, hd), "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_full(p, x, cos, sin, cfg, *, causal=True, kv=None, q_offset=0):
+    """Full-sequence attention. x (B, S, d).
+
+    ``kv``: precomputed (k, v) for cross-attention (cos/sin ignored for kv).
+    Returns (out (B, S, d), (k, v)) — the kv pair seeds decode caches.
+    """
+    q, k, v = _project_qkv(p, x, cfg)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if kv is not None:
+        k, v = kv
+    out = kops.flash_attention(
+        q, k, v, causal=causal,
+        window=cfg.swa_window or None, q_offset=q_offset)
+    B, S = x.shape[:2]
+    out = constrain(out, "dp", None, "tp", None)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return constrain(out, "dp", None, None), (k, v)
+
+
+def decode_attn(p, x1, cache, cfg, *, pos, cos, sin, layer_cache_idx=None):
+    """One-token cached decode. x1 (B, 1, d); cache dict with k/v/kpos.
+
+    cache["k"/"v"]: (B, W, KH, hd); cache["kpos"]: (W,) int32, -1 = empty.
+    ``pos``: scalar int32 current absolute position. Returns (out, cache').
+    """
+    B = x1.shape[0]
+    q, k1, v1 = _project_qkv(p, x1, cfg)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k1 = apply_rope(k1, cos, sin)
+    W = cache["k"].shape[1]
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, axis=1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+    out = chunked_decode_scores(q[:, 0], ck, cv, kpos, pos,
+                                cfg.swa_window or None)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, {"k": ck, "v": cv, "kpos": kpos}
+
+
+def chunked_decode_scores(q, ck, cv, kpos, qpos, window, chunk=2048):
+    """Online-softmax attention of one query over a ring-buffer cache.
+
+    q (B, H, D); ck/cv (B, W, KH, D); kpos (W,). fp32 accumulation with
+    (B, H, chunk) peak score footprint.
+    """
+    B, H, D = q.shape
+    W, KH = ck.shape[1], ck.shape[2]
+    rep = H // KH
+    chunk = min(chunk, W)
+    pad = (-W) % chunk
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    n_chunks = (W + pad) // chunk
+    scale = D ** -0.5
+
+    def body(i, carry):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(ck, i * chunk, chunk, 1)
+        vc = jax.lax.dynamic_slice_in_dim(cv, i * chunk, chunk, 1)
+        pc = jax.lax.dynamic_slice_in_dim(kpos, i * chunk, chunk, 0)
+        if rep > 1:
+            kc = jnp.repeat(kc, rep, axis=2)
+            vc = jnp.repeat(vc, rep, axis=2)
+        # scores on the MXU in the cache dtype with fp32 accumulation —
+        # converting the cache chunks to fp32 first would double the
+        # decode step's HBM traffic (§Perf iteration 2).
+        s = jnp.einsum("bhd,bwhd->bhw", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        ok = (pc >= 0) & (pc <= qpos)
+        if window is not None:
+            ok &= pc > qpos - window
+        s = jnp.where(ok[None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pexp = jnp.exp(s - m_safe[..., None])
+        pexp = jnp.where(ok[None, None, :], pexp, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhw,bwhd->bhd", pexp.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    a0 = jnp.zeros((B, H, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
+    return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+
+def empty_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, cache_len, KH, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, KH, hd), dtype),
+        "kpos": jnp.full((cache_len,), -1, jnp.int32),
+    }

@@ -1,0 +1,107 @@
+"""Architecture configuration shared by every assigned model family."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                # 0 for attention-free families
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 → d_model // n_heads
+
+    # attention variants
+    qk_norm: bool = False       # qwen3
+    qkv_bias: bool = False      # qwen2 / qwen2-vl
+    swa_window: int = 0         # mixtral sliding-window (0 = full)
+    rope_theta: float = 1e4
+    mrope: bool = False         # qwen2-vl 3-section M-RoPE
+    mrope_sections: tuple = (16, 24, 24)
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / zamba2 backbone)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+
+    # rwkv6
+    rwkv_lora: int = 64         # data-dependent decay LoRA rank
+
+    # hybrid (zamba2): weight-tied shared attention block cadence
+    shared_every: int = 0
+
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_frames: int = 0         # stubbed frame-embedding count
+
+    # vlm (stub frontend)
+    n_patches: int = 0
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # which serve shapes apply (long_500k only for sub-quadratic archs)
+    supports_long_context: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:   # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """CPU-smoke-test variant of the same family: tiny dims, same topology."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=128,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        rwkv_lora=16,
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, 4 * cfg.n_kv_heads // cfg.n_heads))
+    if cfg.n_experts:
+        # drop-free capacity so prefill/decode parity is exact in tests
+        # (capacity dropping itself is exercised by the MoE unit tests)
+        kw.update(n_experts=4, capacity_factor=4.0)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=32)
+    if cfg.shared_every:
+        kw.update(shared_every=2, n_layers=4)
+    if cfg.enc_layers:
+        kw.update(enc_layers=2, enc_frames=8)
+    if cfg.n_patches:
+        kw.update(n_patches=8)
+    if cfg.mrope:
+        kw.update(mrope_sections=(4, 6, 6))   # sums to reduced hd // 2
+    if cfg.swa_window:
+        kw.update(swa_window=16)
+    kw.update(param_dtype="float32", compute_dtype="float32")
+    return cfg.replace(**kw)

@@ -1,0 +1,99 @@
+"""Shared building blocks: norms, rotary (incl. M-RoPE), init helpers.
+
+Params are plain nested dicts of jnp arrays; the sharding layer matches them
+by PATH (e.g. ``decoder/layers/attn/wq``), so naming here is part of the
+public contract. Repeated layers are STACKED along a leading L axis and
+consumed by ``lax.scan`` — this keeps HLO size O(1) in depth, which is what
+makes the 512-device dry-runs compile in seconds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Dtype = jnp.dtype
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# param leaves that must stay fp32 regardless of compute dtype
+KEEP_F32 = ("router", "A_log", "D", "dt_bias", "w0", "u")
+
+
+def cast_block(params, dtype) -> dict:
+    """Cast a layer-param subtree to the compute dtype (fp32 islands kept).
+
+    Applied at the top of every scan body so mixed-precision activations
+    never get silently promoted by fp32 master weights.
+    """
+    dt_ = jnp.dtype(dtype)
+
+    def one(kp, a):
+        name = str(getattr(kp[-1], "key", kp[-1])) if kp else ""
+        if a.dtype in (jnp.float32, jnp.bfloat16, jnp.float16) \
+                and name not in KEEP_F32:
+            return a.astype(dt_)
+        return a
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """cos/sin tables for ``positions`` (…,) → (…, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, D//2) → rotated x (interleaved pairs)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)             # llama-style half split
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_tables(pos3: jax.Array, dim: int, theta: float, sections) -> tuple:
+    """M-RoPE (Qwen2-VL): 3 position streams (t, h, w) share one table.
+
+    pos3: (3, B, S). ``sections`` gives how many of the dim//2 frequency
+    pairs each stream drives (sum == dim//2). Returns cos/sin (B, S, dim//2).
+    """
+    assert sum(sections) == dim // 2
+    cos, sin = rope_angles(pos3, dim, theta)      # (3, B, S, dim//2)
+    parts_c, parts_s = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts_c.append(cos[i, :, :, off:off + sec])
+        parts_s.append(sin[i, :, :, off:off + sec])
+        off += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None):
+    """Mean cross-entropy in fp32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = labels >= 0
+    if mask is not None:
+        valid &= mask
+    per_tok = (lse - ll) * valid
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(per_tok) / n

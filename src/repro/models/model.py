@@ -1,0 +1,244 @@
+"""Model facade: init / loss / prefill / decode / input_specs per arch.
+
+Every architecture exposes the same five entry points, so the launcher,
+trainer, server and dry-run treat all ten identically:
+
+  init_params(key)                  → param pytree (stacked layers)
+  loss(params, batch)               → (scalar, metrics)       [train_4k]
+  prefill(params, batch)            → (logits_last, caches)   [prefill_32k]
+  decode(params, caches, batch)     → (logits, caches)        [decode_*]
+  input_specs(shape_kind, B, S)     → ShapeDtypeStruct pytree (no alloc)
+
+``embed()`` exposes final hidden states for the retrieval integration
+(k-NN graph over model embeddings — the paper's technique as a first-class
+framework feature; see repro.retrieval).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as _encdec
+from repro.models.config import ArchConfig
+from repro.models.layers import (mrope_tables, normal, rms_norm, rope_angles,
+                                 softmax_xent)
+from repro.models.transformer import (ATTN_FAMILIES, decode_layers,
+                                      forward_layers, init_caches,
+                                      init_layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- params
+    def init_params(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        pdt = jnp.dtype(cfg.param_dtype)
+        k1, k2, k3 = jax.random.split(key, 3)
+        p: dict[str, Any] = {
+            "tok_emb": normal(k1, (cfg.vocab, cfg.d_model), 0.02, pdt),
+            "ln_f": jnp.ones((cfg.d_model,), pdt),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = normal(k2, (cfg.d_model, cfg.vocab),
+                                  cfg.d_model ** -0.5, pdt)
+        if cfg.family == "encdec":
+            p["layers"] = _encdec.init_encdec_layers(k3, cfg)
+        else:
+            p["layers"] = init_layers(k3, cfg)
+        return p
+
+    def abstract_params(self) -> dict:
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    # ------------------------------------------------------------ helpers
+    def _rope(self, positions, pos3=None):
+        cfg = self.cfg
+        if cfg.family == "encdec" or cfg.n_heads == 0:
+            return None, None
+        if cfg.mrope and pos3 is not None:
+            return mrope_tables(pos3, cfg.hd, cfg.rope_theta,
+                                cfg.mrope_sections)
+        cos, sin = rope_angles(positions, cfg.hd, cfg.rope_theta)
+        return cos, sin
+
+    def _embed_tokens(self, params, tokens):
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        return params["tok_emb"][tokens].astype(cdt)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        head = (params["tok_emb"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        return x @ head.astype(x.dtype)
+
+    def _assemble_input(self, params, batch):
+        """tokens (+ patches for vlm) → (x, positions, pos3, label_mask)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"])
+        B, S = batch["tokens"].shape
+        pos3 = None
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            S = x.shape[1]
+            pos3 = batch["pos3"]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, positions, pos3
+
+    # -------------------------------------------------------------- train
+    def loss(self, params, batch, *, remat: bool = True,
+             moe_groups: int = 1):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = _encdec.encode(params["layers"],
+                                 batch["frames"].astype(
+                                     jnp.dtype(cfg.compute_dtype)), cfg)
+            x = self._embed_tokens(params, batch["tokens"])
+            x, _ = _encdec.decode_full(params["layers"], x, enc, cfg,
+                                       remat=remat)
+            logits = self._logits(params, x)
+            l = softmax_xent(logits, batch["labels"])
+            return l, {"loss": l, "aux": jnp.zeros((), jnp.float32)}
+        x, positions, pos3 = self._assemble_input(params, batch)
+        cos, sin = self._rope(positions, pos3)
+        x, _, aux = forward_layers(params["layers"], x, cfg, cos=cos, sin=sin,
+                                   remat=remat, moe_groups=moe_groups)
+        if cfg.family == "vlm":            # logits/labels on text tail only
+            x = x[:, cfg.n_patches:]
+        logits = self._logits(params, x)
+        l = softmax_xent(logits, batch["labels"])
+        total = l + 0.01 * aux
+        return total, {"loss": l, "aux": aux}
+
+    def embed(self, params, batch):
+        """Final hidden states (B, S, d) — retrieval integration point."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = _encdec.encode(params["layers"],
+                                 batch["frames"].astype(
+                                     jnp.dtype(cfg.compute_dtype)), cfg)
+            x = self._embed_tokens(params, batch["tokens"])
+            x, _ = _encdec.decode_full(params["layers"], x, enc, cfg)
+            return rms_norm(x, params["ln_f"], cfg.norm_eps)
+        x, positions, pos3 = self._assemble_input(params, batch)
+        cos, sin = self._rope(positions, pos3)
+        x, _, _ = forward_layers(params["layers"], x, cfg, cos=cos, sin=sin)
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    # ------------------------------------------------------------ serving
+    def cache_len(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.family in ("rwkv", "ssm"):
+            return 0                        # state-only
+        if cfg.swa_window:
+            return min(seq_len, cfg.swa_window)
+        return seq_len
+
+    def prefill(self, params, batch, *, cache_margin: int = 0):
+        """Full-context pass building decode caches; returns last logits.
+
+        ``cache_margin``: extra cache slots beyond the prefill length so the
+        serve loop can decode that many new tokens before a full-attention
+        cache would ring-wrap (SWA/state caches ignore it).
+        """
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "encdec":
+            enc = _encdec.encode(params["layers"],
+                                 batch["frames"].astype(cdt), cfg)
+            x = self._embed_tokens(params, batch["tokens"])
+            S = x.shape[1]
+            x, caches = _encdec.decode_full(
+                params["layers"], x, enc, cfg, want_cache=True,
+                cache_len=self.cache_len(S + cache_margin))
+            return self._logits(params, x[:, -1:]), caches
+        x, positions, pos3 = self._assemble_input(params, batch)
+        cos, sin = self._rope(positions, pos3)
+        S = x.shape[1]
+        x, caches, _ = forward_layers(
+            params["layers"], x, cfg, cos=cos, sin=sin, want_cache=True,
+            cache_len=self.cache_len(S + cache_margin))
+        return self._logits(params, x[:, -1:]), caches
+
+    def init_decode_caches(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        W = max(self.cache_len(seq_len), 1)
+        if cfg.family == "encdec":
+            return _encdec.init_dec_caches(cfg, batch_size, W, cdt)
+        return init_caches(cfg, batch_size, W, cdt)
+
+    def decode(self, params, caches, batch):
+        """One token: batch {"token": (B,1), "pos": scalar int32}."""
+        cfg = self.cfg
+        pos = batch["pos"]
+        x1 = self._embed_tokens(params, batch["token"])
+        if cfg.family == "encdec":
+            x1, caches = _encdec.decode_step_encdec(params["layers"], x1,
+                                                    caches, cfg, pos=pos)
+            return self._logits(params, x1), caches
+        cos = sin = None
+        if cfg.n_heads and cfg.family in ATTN_FAMILIES or cfg.family == "hybrid":
+            B = x1.shape[0]
+            if cfg.mrope:
+                pos3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+                cos, sin = mrope_tables(pos3, cfg.hd, cfg.rope_theta,
+                                        cfg.mrope_sections)
+            else:
+                cos, sin = rope_angles(
+                    jnp.broadcast_to(pos, (B, 1)), cfg.hd, cfg.rope_theta)
+        x1, caches = decode_layers(params["layers"], x1, caches, cfg,
+                                   pos=pos, cos=cos, sin=sin)
+        return self._logits(params, x1), caches
+
+    # ----------------------------------------------------------- dry-run
+    def input_specs(self, kind: str, global_batch: int, seq_len: int):
+        """ShapeDtypeStruct stand-ins for every input (no allocation)."""
+        cfg = self.cfg
+        tok = jnp.int32
+        cdt = jnp.dtype(cfg.compute_dtype)
+        B, S = global_batch, seq_len
+
+        def sds(shape, dtype):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        if kind == "train":
+            if cfg.family == "encdec":
+                return {"frames": sds((B, cfg.enc_frames, cfg.d_model), cdt),
+                        "tokens": sds((B, S), tok),
+                        "labels": sds((B, S), tok)}
+            if cfg.family == "vlm":
+                St = S - cfg.n_patches
+                return {"tokens": sds((B, St), tok),
+                        "patches": sds((B, cfg.n_patches, cfg.d_model), cdt),
+                        "pos3": sds((3, B, S), tok),
+                        "labels": sds((B, St), tok)}
+            return {"tokens": sds((B, S), tok), "labels": sds((B, S), tok)}
+        if kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": sds((B, cfg.enc_frames, cfg.d_model), cdt),
+                        "tokens": sds((B, S), tok)}
+            if cfg.family == "vlm":
+                return {"tokens": sds((B, S - cfg.n_patches), tok),
+                        "patches": sds((B, cfg.n_patches, cfg.d_model), cdt),
+                        "pos3": sds((3, B, S), tok)}
+            return {"tokens": sds((B, S), tok)}
+        if kind == "decode":
+            return {"token": sds((B, 1), tok),
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        raise ValueError(kind)
+
+    def abstract_decode_caches(self, batch_size: int, seq_len: int):
+        return jax.eval_shape(
+            lambda: self.init_decode_caches(batch_size, seq_len))
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

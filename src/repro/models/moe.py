@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN (mixtral / grok-1): sort-based capacity routing.
+
+TPU-native routing (MaxText-style), NOT the (T, E, C) one-hot dispatch of
+GShard — that tensor is ~10⁹ elements at train_4k scale. Tokens are routed
+GROUP-LOCALLY: the token stream is reshaped to (G, T/G, …) with G aligned to
+the data-parallel sharding, so the per-group argsorts compile to per-shard
+local sorts with no collectives; expert capacity is enforced per group,
+which is exactly the per-device capacity real MoE systems use.
+
+Per group: top-k experts per token → stable sort the (token, expert) slots
+by expert id → rank-in-segment < capacity keeps a slot → scatter into an
+(E, C, d) operand block → 3 batched einsums against the stacked expert
+weights (MXU) → weighted scatter-add back to token positions. FLOPs =
+top_k · capacity_factor · T · (3·d·ff·2) ≈ the "active params" cost, which
+is what the roofline MODEL_FLOPS=6·N_active·D expects.
+
+Router runs in fp32; the standard load-balance auxiliary loss is returned
+for the training objective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal
+
+
+def init_moe(key, cfg, n_layers: int, pdt) -> dict:
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": normal(ks[0], (n_layers, d, E), d ** -0.5, jnp.float32),
+        "w_gate": normal(ks[1], (n_layers, E, d, ff), d ** -0.5, pdt),
+        "w_up": normal(ks[2], (n_layers, E, d, ff), d ** -0.5, pdt),
+        "w_down": normal(ks[3], (n_layers, E, ff, d), ff ** -0.5, pdt),
+    }
+
+
+def _segment_ranks(sorted_keys: jax.Array) -> jax.Array:
+    """Rank within contiguous equal-key runs of a sorted 1-D array."""
+    e = sorted_keys.shape[0]
+    idx = jnp.arange(e, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0))
+    return idx - seg_start
+
+
+def moe_ffn(p, x: jax.Array, cfg, *, groups: int = 1):
+    """x (B, S, d) → (y (B, S, d), aux_loss scalar fp32).
+
+    ``groups`` should divide B·S and align with the data sharding so routing
+    stays shard-local.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = groups
+    Tg = T // G
+    C = max(1, int(cfg.capacity_factor * Tg * K / E + 0.999))
+    xg = x.reshape(G, Tg, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])        # (G, Tg, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                 # (G, Tg, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # load-balance aux loss (Switch/Mixtral): E · Σ_e fraction_e · prob_e
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / K
+    aux = E * jnp.sum(me * ce)
+
+    def route_group(xg_, eids_, w_):
+        # eids_, w_: (Tg·K,) expert id / gate weight per routing slot
+        order = jnp.argsort(eids_, stable=True)
+        e_s = eids_[order]
+        rank = _segment_ranks(e_s)
+        keep = rank < C
+        slot = jnp.where(keep, e_s * C + rank, E * C)      # park dropped
+        buf = jnp.zeros((E * C + 1, d), xg_.dtype)
+        tok = order // K                                   # source token
+        buf = buf.at[slot].set(xg_[tok], mode="drop")
+        wbuf = jnp.zeros((E * C + 1,), jnp.float32)
+        wbuf = wbuf.at[slot].set(jnp.where(keep, w_[order], 0.0),
+                                 mode="drop")
+        tbuf = jnp.full((E * C + 1,), Tg, jnp.int32)
+        tbuf = tbuf.at[slot].set(jnp.where(keep, tok, Tg), mode="drop")
+        return buf[:-1].reshape(E, C, d), wbuf[:-1].reshape(E, C), \
+            tbuf[:-1].reshape(E, C)
+
+    eids = top_e.reshape(G, Tg * K)
+    gates = top_p.reshape(G, Tg * K).astype(jnp.float32)
+    ebuf, wbuf, tbuf = jax.vmap(route_group)(xg, eids, gates)  # (G,E,C,…)
+
+    # expert compute: stacked einsums on the MXU
+    from repro.sharding.partition import constrain
+    h = jnp.einsum("gecd,edf->gecf", ebuf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", ebuf, p["w_up"])
+    h = constrain(jax.nn.silu(h) * u, "dp", None, None, "tp")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])       # (G, E, C, d)
+    y = y * wbuf[..., None].astype(y.dtype)
+
+    def unroute_group(y_, t_):
+        out = jnp.zeros((Tg + 1, d), y_.dtype)
+        out = out.at[t_.reshape(-1)].add(y_.reshape(-1, d), mode="drop")
+        return out[:-1]
+
+    out = jax.vmap(unroute_group)(y, tbuf)                 # (G, Tg, d)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,184 @@
+"""RWKV-6 (Finch) time-mix with data-dependent decay — chunked + recurrent.
+
+The WKV recurrence per head (state S ∈ R^{dk×dv}):
+
+    out_t = r_t · (diag(u)·k_t v_tᵀ + S_t)
+    S_{t+1} = diag(w_t)·S_t + k_t v_tᵀ            w_t ∈ (0,1) data-dependent
+
+Parallel form (GLA-style chunking): within a chunk the pairwise decay
+factorizes, prod_{j=s+1..t-1} w_j = b_{t-1}/b_s with b = cumprod(w), so the
+intra-chunk part is ONE (T_c, T_c) masked matmul of scaled r and k — MXU
+work, not a scan. Cumprods stay in log space; all exponents are ≤ 0 inside
+a chunk so nothing overflows. The inter-chunk state is carried by a
+``lax.scan`` over chunk summaries. Decode is the plain O(dk·dv) recurrence.
+
+Simplifications vs the full Finch block (documented in DESIGN.md): the
+5-way token-shift LoRA mixture is reduced to a single learned shift blend
+per projection; decay LoRA (w0 + tanh(x·A)·B) is kept, as is the per-head
+bonus u, group-norm and the gated output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal, rms_norm
+
+
+def init_rwkv(key, cfg, n_layers: int, pdt) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads or max(1, d // 64)
+    hd = d // H
+    r = cfg.rwkv_lora
+    ks = jax.random.split(key, 10)
+    sc = d ** -0.5
+    return {
+        "mix": jnp.full((n_layers, 5, d), 0.5, pdt),   # shift blends r,k,v,w,g
+        "wr": normal(ks[0], (n_layers, d, d), sc, pdt),
+        "wk": normal(ks[1], (n_layers, d, d), sc, pdt),
+        "wv": normal(ks[2], (n_layers, d, d), sc, pdt),
+        "wg": normal(ks[3], (n_layers, d, d), sc, pdt),
+        "wo": normal(ks[4], (n_layers, d, d), sc, pdt),
+        "w0": jnp.full((n_layers, d), -6.0, pdt),       # decay bias (slow)
+        "wA": normal(ks[5], (n_layers, d, r), sc, pdt),
+        "wB": normal(ks[6], (n_layers, r, d), r ** -0.5, pdt),
+        "u": normal(ks[7], (n_layers, H, hd), 0.5, pdt),
+        "ln_x": jnp.ones((n_layers, d), pdt),           # per-head group norm
+    }
+
+
+def _proj(p, x, xs, which, idx):
+    mixed = x * p["mix"][which] + xs * (1.0 - p["mix"][which])
+    return mixed @ p[idx]
+
+
+def _decay(p, x, xs):
+    mixed = x * p["mix"][3] + xs * (1.0 - p["mix"][3])
+    lora = jnp.tanh(mixed @ p["wA"]) @ p["wB"]
+    # log w = -exp(w0 + lora)  ⇒ w ∈ (0, 1)
+    return -jnp.exp((p["w0"] + lora).astype(jnp.float32))   # (B, S, d) logs
+
+
+def rwkv_mix(p, x, cfg, *, chunk: int = 64, shift_state=None, wkv_state=None):
+    """Full-sequence time-mix. x (B, S, d) → (out, (shift', wkv_state')).
+
+    ``shift_state`` (B, d): last token of the previous segment (decode
+    continuity). ``wkv_state`` (B, H, hd, hd).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads or max(1, d // 64)
+    hd = d // H
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    xs = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    from repro.sharding.partition import constrain
+    r = constrain(_proj(p, x, xs, 0, "wr").reshape(B, S, H, hd),
+                  "dp", None, "tp", None)
+    k = constrain(_proj(p, x, xs, 1, "wk").reshape(B, S, H, hd),
+                  "dp", None, "tp", None)
+    v = constrain(_proj(p, x, xs, 2, "wv").reshape(B, S, H, hd),
+                  "dp", None, "tp", None)
+    g = _proj(p, x, xs, 4, "wg")
+    logw = _decay(p, x, xs).reshape(B, S, H, hd)            # ≤ 0, fp32
+
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // chunk
+    rc = r.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    lw = logw.reshape(B, nc, chunk, H, hd)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def scan_chunk(state, inp):
+        rc_, kc_, vc_, lw_ = inp                            # (B, chunk, H, hd)
+        cum = jnp.cumsum(lw_, axis=1)                       # log b_t
+        b_in = cum - lw_                                    # log b_{t-1}
+        # intra-chunk: scores[t,s] = Σ_c r_t b_{t-1}/b_s k_s   (s < t)
+        rb = rc_ * jnp.exp(b_in)
+        kb = kc_ * jnp.exp(-cum)
+        att = jnp.einsum("bthc,bshc->bhts", rb, kb)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        out = jnp.einsum("bhts,bshv->bthv", att, vc_)
+        # bonus diagonal: r_t ⊙ u · k_t → v_t
+        bonus = jnp.einsum("bthc,hc,bthc->bth", rc_, p["u"].astype(jnp.float32),
+                           kc_)
+        out = out + bonus[..., None] * vc_
+        # inter-chunk: r_t b_{t-1} @ S
+        out = out + jnp.einsum("bthc,bhcv->bthv", rb, state)
+        # state update: S' = diag(b_last) S + Σ_s (k_s b_last/b_s) v_sᵀ
+        b_last = cum[:, -1]                                 # (B, H, hd)
+        kscale = kc_ * jnp.exp(b_last[:, None] - cum)
+        state = state * jnp.exp(b_last)[..., None] + jnp.einsum(
+            "bshc,bshv->bhcv", kscale, vc_)
+        return state, out
+
+    xs_c = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lw, 1, 0))
+    state, outs = jax.lax.scan(scan_chunk, wkv_state, xs_c)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nc * chunk, H, hd)[:, :S]
+    out = out.reshape(B, S, d).astype(x.dtype)
+    out = rms_norm(out.reshape(B, S, H, hd), p["ln_x"].reshape(H, hd),
+                   cfg.norm_eps).reshape(B, S, d)
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    return out, (x[:, -1], state)
+
+
+def init_rwkv_cmix(key, cfg, n_layers: int, pdt) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jnp.full((n_layers, 2, d), 0.5, pdt),
+        "wr": normal(ks[0], (n_layers, d, d), d ** -0.5, pdt),
+        "wk": normal(ks[1], (n_layers, d, ff), d ** -0.5, pdt),
+        "wv": normal(ks[2], (n_layers, ff, d), ff ** -0.5, pdt),
+    }
+
+
+def rwkv_cmix(p, x, cfg, shift_state=None):
+    """Channel-mix (RWKV FFN): squared-ReLU key path, sigmoid receptance."""
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    xs = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    r = jax.nn.sigmoid((x * p["mix"][0] + xs * (1 - p["mix"][0])) @ p["wr"])
+    k = (x * p["mix"][1] + xs * (1 - p["mix"][1])) @ p["wk"]
+    k = jnp.square(jax.nn.relu(k))
+    return r * (k @ p["wv"]), x[:, -1]
+
+
+def rwkv_cmix_step(p, x1, cfg, shift_state):
+    r = jax.nn.sigmoid((x1 * p["mix"][0] + shift_state * (1 - p["mix"][0]))
+                       @ p["wr"])
+    k = (x1 * p["mix"][1] + shift_state * (1 - p["mix"][1])) @ p["wk"]
+    k = jnp.square(jax.nn.relu(k))
+    return r * (k @ p["wv"]), x1
+
+
+def rwkv_step(p, x1, cfg, shift_state, wkv_state):
+    """Single-token recurrence. x1 (B, d) → (out (B, d), states)."""
+    B, d = x1.shape
+    H = cfg.n_heads or max(1, d // 64)
+    hd = d // H
+    xs = shift_state
+    r = _proj(p, x1, xs, 0, "wr").reshape(B, H, hd).astype(jnp.float32)
+    k = _proj(p, x1, xs, 1, "wk").reshape(B, H, hd).astype(jnp.float32)
+    v = _proj(p, x1, xs, 2, "wv").reshape(B, H, hd).astype(jnp.float32)
+    g = _proj(p, x1, xs, 4, "wg")
+    w = jnp.exp(_decay(p, x1, xs).reshape(B, H, hd))        # (0,1)
+    kv = jnp.einsum("bhc,bhv->bhcv", k, v)
+    out = jnp.einsum("bhc,bhcv->bhv",
+                     r * p["u"].astype(jnp.float32)[None], kv)
+    out = out + jnp.einsum("bhc,bhcv->bhv", r, wkv_state)
+    wkv_state = wkv_state * w[..., None] + kv
+    out = out.reshape(B, d).astype(x1.dtype)
+    out = rms_norm(out.reshape(B, H, hd), p["ln_x"].reshape(H, hd),
+                   cfg.norm_eps).reshape(B, d)
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    return out, (x1, wkv_state)

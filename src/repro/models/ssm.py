@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) mixer — chunked parallel scan + single-token recurrence.
+
+State-space duality form: per head h with scalar decay a_t = exp(dt_t·A_h),
+state S ∈ R^{P×N} (P = head dim, N = ssm state):
+
+    S_t = a_t · S_{t-1} + dt_t · x_t B_tᵀ          y_t = S_t C_t + D·x_t
+
+Chunked computation: within a chunk the pairwise decay is a scalar
+cumprod ratio, so the intra-chunk contribution is an attention-like masked
+(T_c, T_c) matmul of C against B (MXU), and chunk-to-chunk state flows
+through one ``lax.scan`` over summaries. The causal depthwise conv (width 4)
+ahead of the SSD is a shift-and-add; its tail is carried as decode state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal, rms_norm
+
+
+def init_ssm(key, cfg, n_layers: int, pdt) -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    # in_proj → [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "in_proj": normal(ks[0], (n_layers, d, 2 * di + 2 * N + H),
+                          d ** -0.5, pdt),
+        "conv_w": normal(ks[1], (n_layers, cw, di + 2 * N), 0.5, pdt),
+        "conv_b": jnp.zeros((n_layers, di + 2 * N), pdt),
+        "A_log": jnp.zeros((n_layers, H), jnp.float32),     # A = -exp(A_log)
+        "D": jnp.ones((n_layers, H), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, H), jnp.float32),
+        "norm": jnp.ones((n_layers, di), pdt),
+        "out_proj": normal(ks[2], (n_layers, di, d), di ** -0.5, pdt),
+    }
+
+
+def _split(p, u, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = u[..., :di]
+    xBC = u[..., di:di + di + 2 * N]
+    dt = u[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _conv(p, xBC, conv_state=None):
+    """Causal depthwise conv width cw; returns (out, new_tail_state)."""
+    cw = p["conv_w"].shape[0]
+    B = xBC.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, xBC.shape[-1]), xBC.dtype)
+    ext = jnp.concatenate([conv_state, xBC], axis=1)
+    out = sum(ext[:, i:i + xBC.shape[1]] * p["conv_w"][i]
+              for i in range(cw))
+    out = jax.nn.silu(out + p["conv_b"])
+    return out, ext[:, -(cw - 1):]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int = 64, state=None):
+    """x (B,S,H,P); dt (B,S,H) fp32; A (H,); Bm/Cm (B,S,N) → (y, state').
+
+    state (B,H,P,N). Single shared B/C stream across heads (n_groups=1).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    loga = (dt * A[None, None, :]).astype(jnp.float32)      # ≤ 0  (B,S,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    pad = (-S) % chunk
+    if pad:
+        x_, loga_, xdt_ = (jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+                           for v in (x, loga, xdt))
+        Bm_ = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_ = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_, loga_, xdt_, Bm_, Cm_ = x, loga, xdt, Bm, Cm
+    nc = (S + pad) // chunk
+    xdt_c = xdt_.reshape(Bb, nc, chunk, H, P)
+    la_c = loga_.reshape(Bb, nc, chunk, H)
+    B_c = Bm_.reshape(Bb, nc, chunk, N).astype(jnp.float32)
+    C_c = Cm_.reshape(Bb, nc, chunk, N).astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def scan_chunk(st, inp):
+        xdt_, la_, B_, C_ = inp
+        cum = jnp.cumsum(la_, axis=1)                       # (B,T,H) log decay
+        # intra-chunk: y_t += Σ_{s≤t} exp(cum_t−cum_s) (C_t·B_s) dt_s x_s
+        scores = jnp.einsum("btn,bsn->bts", C_, B_)         # (B,T,T)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]       # (B,T,S,H)
+        tri = jnp.tril(jnp.ones((dec.shape[1], dec.shape[1]), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(dec), 0.0)
+        y = jnp.einsum("bts,btsh,bshp->bthp", scores, w, xdt_)
+        # inter-chunk: y_t += exp(cum_t) · C_t · S
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", C_, st, jnp.exp(cum))
+        # state update: S' = exp(cum_last) S + Σ_s exp(cum_last−cum_s) x_s B_sᵀ
+        last = cum[:, -1]                                   # (B,H)
+        ksc = jnp.exp(last[:, None] - cum)                  # (B,T,H)
+        st = st * jnp.exp(last)[..., None, None] + jnp.einsum(
+            "bshp,bsh,bsn->bhpn", xdt_, ksc, B_)
+        return st, y
+
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in (xdt_c, la_c, B_c, C_c))
+    state, ys = jax.lax.scan(scan_chunk, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, nc * chunk, H, P)[:, :S]
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def ssm_mix(p, xin, cfg, *, chunk: int = 64, conv_state=None, ssd_state=None):
+    """Full-sequence Mamba2 block. xin (B, S, d) → (out, (conv', ssd'))."""
+    B, S, d = xin.shape
+    H, P, N, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    from repro.sharding.partition import constrain
+    u = constrain(xin @ p["in_proj"], "dp", None, "tp")
+    z, xBC, dt = _split(p, u, cfg)
+    xBC, conv_state = _conv(p, xBC, conv_state)
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssd_state = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], chunk=chunk,
+                               state=ssd_state)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (conv_state, ssd_state)
+
+
+def ssm_step(p, x1, cfg, conv_state, ssd_state):
+    """Single-token recurrence. x1 (B, d) → (out, states)."""
+    B, d = x1.shape
+    H, P, N, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    u = x1 @ p["in_proj"]
+    z, xBC, dt = _split(p, u[:, None], cfg)
+    z, xBC, dt = z[:, 0], xBC[:, 0], dt[:, 0]
+    cw = p["conv_w"].shape[0]
+    ext = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B, cw, ch)
+    xBC = jax.nn.silu(
+        jnp.sum(ext * p["conv_w"][None], axis=1) + p["conv_b"])
+    conv_state = ext[:, 1:]
+    xs = xBC[..., :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC[..., di:di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None])               # (B,H)
+    ssd_state = (ssd_state * a[..., None, None]
+                 + jnp.einsum("bhp,bn,bh->bhpn", xs, Bm, dt))
+    y = jnp.einsum("bhpn,bn->bhp", ssd_state, Cm)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, di).astype(x1.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (conv_state, ssd_state)

@@ -1,0 +1,391 @@
+"""Decoder-stack assembly for every assigned family.
+
+One module owns layer layout, the scan-over-stacked-layers machinery, and
+the decode-cache pytrees, so all ten architectures share identical
+train/prefill/decode plumbing:
+
+  dense | moe | vlm   →  [ln1 → GQA attn] + [ln2 → SwiGLU MLP | MoE]
+  rwkv                →  [ln1 → time-mix] + [ln2 → channel-mix]
+  ssm                 →  [ln1 → mamba2]
+  hybrid (zamba2)     →  mamba2 backbone; a WEIGHT-TIED shared attention+MLP
+                         block every ``shared_every`` layers (its KV caches
+                         are per-application, stacked on a leading axis)
+
+Repeated layers are stacked (L, …) and consumed by ``lax.scan`` (HLO size
+O(1) in depth); ``jax.checkpoint`` on the scan body gives layer-granular
+remat for training. Hybrid models scan per super-block (shared_every
+layers) so the shared block stays outside the inner scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attn_full, decode_attn, empty_cache,
+                                    init_attn)
+from repro.models.layers import cast_block, normal, rms_norm
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rwkv import (init_rwkv, init_rwkv_cmix, rwkv_cmix,
+                               rwkv_cmix_step, rwkv_mix, rwkv_step)
+from repro.models.ssm import init_ssm, ssm_mix, ssm_step
+
+ATTN_FAMILIES = ("dense", "moe", "vlm")
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg, n_layers: int, pdt, gelu: bool = False) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": normal(ks[0], (n_layers, d, ff), d ** -0.5, pdt),
+        "w_down": normal(ks[1], (n_layers, ff, d), ff ** -0.5, pdt),
+    }
+    if not gelu:
+        p["w_gate"] = normal(ks[2], (n_layers, d, ff), d ** -0.5, pdt)
+    return p
+
+
+def mlp(p, x, cfg):
+    from repro.sharding.partition import constrain
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constrain(h, "dp", None, "tp")
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# layer init per family
+# --------------------------------------------------------------------------
+
+def init_layers(key, cfg, n_layers: int | None = None, *, gelu=False) -> dict:
+    """Stacked per-layer params for the decoder stack of ``cfg.family``."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    pdt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    fam = cfg.family
+    if fam in ATTN_FAMILIES or fam == "encdec":
+        p = {
+            "ln1": jnp.ones((L, d), pdt),
+            "attn": init_attn(k1, cfg, L, pdt),
+            "ln2": jnp.ones((L, d), pdt),
+        }
+        if fam == "moe":
+            p["moe"] = init_moe(k2, cfg, L, pdt)
+        else:
+            p["mlp"] = init_mlp(k2, cfg, L, pdt, gelu=gelu)
+        return p
+    if fam == "rwkv":
+        return {
+            "ln1": jnp.ones((L, d), pdt),
+            "tmix": init_rwkv(k1, cfg, L, pdt),
+            "ln2": jnp.ones((L, d), pdt),
+            "cmix": init_rwkv_cmix(k2, cfg, L, pdt),
+        }
+    if fam == "ssm":
+        return {"ln1": jnp.ones((L, d), pdt), "ssm": init_ssm(k1, cfg, L, pdt)}
+    if fam == "hybrid":
+        p = {"ln1": jnp.ones((L, d), pdt), "ssm": init_ssm(k1, cfg, L, pdt)}
+        shared_cfg = cfg
+        p["shared"] = {
+            "ln1": jnp.ones((1, d), pdt),
+            "attn": init_attn(k3, shared_cfg, 1, pdt),
+            "ln2": jnp.ones((1, d), pdt),
+            "mlp": init_mlp(k4, shared_cfg, 1, pdt),
+        }
+        return p
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# empty decode caches
+# --------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, cache_len: int, dtype) -> Any:
+    fam = cfg.family
+    L = cfg.n_layers
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    if fam in ATTN_FAMILIES:
+        return {"attn": stack(empty_cache(cfg, batch, cache_len, dtype), L)}
+    if fam == "rwkv":
+        d = cfg.d_model
+        H = cfg.n_heads or max(1, d // 64)
+        hd = d // H
+        return {
+            "shift_t": jnp.zeros((L, batch, d), dtype),
+            "shift_c": jnp.zeros((L, batch, d), dtype),
+            "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        }
+    if fam in ("ssm", "hybrid"):
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        c = {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, ch), dtype),
+            "ssd": jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+        }
+        if fam == "hybrid":
+            n_app = cfg.n_layers // cfg.shared_every
+            c["shared"] = stack(empty_cache(cfg, batch, cache_len, dtype),
+                                n_app)
+        return c
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward_layers(params, x, cfg, *, cos=None, sin=None, causal=True,
+                   want_cache: bool = False, cache_len: int = 0,
+                   remat: bool = False, moe_groups: int = 1):
+    """Run the decoder stack. Returns (x, caches|None, aux_loss)."""
+    fam = cfg.family
+    B, S, d = x.shape
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fam in ATTN_FAMILIES:
+        def body(carry, lp):
+            h, aux = carry
+            lp = cast_block(lp, cfg.compute_dtype)
+            a, kv = attn_full(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                              cos, sin, cfg, causal=causal)
+            h = h + a
+            if fam == "moe":
+                m, a_loss = moe_ffn(lp["moe"],
+                                    rms_norm(h, lp["ln2"], cfg.norm_eps), cfg,
+                                    groups=moe_groups)
+                aux = aux + a_loss
+            else:
+                m = mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            h = h + m
+            out = _kv_to_cache(kv, cache_len, S) if want_cache else None
+            return (h, aux), out
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), caches = jax.lax.scan(fn, (x, aux0), params)
+        return x, ({"attn": caches} if want_cache else None), aux
+
+    if fam == "rwkv":
+        def body(carry, lp):
+            h, aux = carry
+            lp = cast_block(lp, cfg.compute_dtype)
+            t, (sh_t, wkv) = rwkv_mix(lp["tmix"],
+                                      rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+            h = h + t
+            c, sh_c = rwkv_cmix(lp["cmix"],
+                                rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            h = h + c
+            out = ({"shift_t": sh_t, "shift_c": sh_c, "wkv": wkv}
+                   if want_cache else None)
+            return (h, aux), out
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), caches = jax.lax.scan(fn, (x, aux0), params)
+        return x, caches, aux
+
+    if fam == "ssm":
+        def body(carry, lp):
+            h, aux = carry
+            lp = cast_block(lp, cfg.compute_dtype)
+            m, (conv, ssd) = ssm_mix(lp["ssm"],
+                                     rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+            h = h + m
+            out = {"conv": conv, "ssd": ssd} if want_cache else None
+            return (h, aux), out
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), caches = jax.lax.scan(fn, (x, aux0), params)
+        return x, caches, aux
+
+    if fam == "hybrid":
+        return _hybrid_forward(params, x, cfg, cos=cos, sin=sin,
+                               want_cache=want_cache, cache_len=cache_len,
+                               remat=remat)
+    raise ValueError(fam)
+
+
+def _kv_to_cache(kv, cache_len, S):
+    """Pack prefill (k, v) into a ring cache of length cache_len."""
+    k, v = kv
+    W = cache_len
+    if W >= S:
+        pad = W - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                jnp.full((pad,), -1, jnp.int32)])
+    else:  # sliding window: keep the last W, ring-aligned (slot = pos % W)
+        pos = jnp.arange(S - W, S, dtype=jnp.int32)
+        ck, cv = k[:, S - W:], v[:, S - W:]
+        slot = pos % W
+        order = jnp.argsort(slot)
+        ck, cv = ck[:, order], cv[:, order]
+        kpos = pos[order]
+    return {"k": ck, "v": cv, "kpos": kpos}
+
+
+def _hybrid_forward(params, x, cfg, *, cos, sin, want_cache, cache_len,
+                    remat):
+    L, se = cfg.n_layers, cfg.shared_every
+    n_app, rest = L // se, L % se
+    aux = jnp.zeros((), jnp.float32)
+    shared = cast_block(jax.tree.map(lambda a: a[0], params["shared"]),
+                        cfg.compute_dtype)
+    ssm_params = {"ln1": params["ln1"], "ssm": params["ssm"]}
+
+    def ssm_body(carry, lp):
+        h = carry
+        lp = cast_block(lp, cfg.compute_dtype)
+        m, (conv, ssd) = ssm_mix(lp["ssm"],
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps), cfg)
+        out = {"conv": conv, "ssd": ssd} if want_cache else None
+        return h + m, out
+
+    fn = jax.checkpoint(ssm_body) if remat else ssm_body
+
+    def super_block(h, blk_params):
+        h, caches = jax.lax.scan(fn, h, blk_params)
+        a, kv = attn_full(shared["attn"],
+                          rms_norm(h, shared["ln1"], cfg.norm_eps),
+                          cos, sin, cfg, causal=True)
+        h = h + a
+        h = h + mlp(shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps),
+                    cfg)
+        return h, caches, kv
+
+    main = jax.tree.map(lambda a: a[:n_app * se].reshape(
+        (n_app, se) + a.shape[1:]), ssm_params)
+    S = x.shape[1]
+
+    def outer(h, blk):
+        h, caches, kv = super_block(h, blk)
+        shared_cache = _kv_to_cache(kv, cache_len, S) if want_cache else None
+        return h, (caches, shared_cache)
+
+    x, (ssm_caches, shared_caches) = jax.lax.scan(outer, x, main)
+    if rest:
+        tail = jax.tree.map(lambda a: a[n_app * se:], ssm_params)
+        x, tail_caches = jax.lax.scan(fn, x, tail)
+    caches = None
+    if want_cache:
+        flat = jax.tree.map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), ssm_caches)
+        if rest:
+            flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                flat, tail_caches)
+        caches = {"conv": flat["conv"], "ssd": flat["ssd"],
+                  "shared": shared_caches}
+    return x, caches, aux
+
+
+# --------------------------------------------------------------------------
+# single-token decode
+# --------------------------------------------------------------------------
+
+def decode_layers(params, x1, caches, cfg, *, pos, cos=None, sin=None):
+    """x1 (B, 1, d); returns (x1', caches')."""
+    fam = cfg.family
+
+    if fam in ATTN_FAMILIES:
+        def body(h, xs):
+            lp, cache = xs
+            lp = cast_block(lp, cfg.compute_dtype)
+            a, cache = decode_attn(lp["attn"],
+                                   rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                   cache, cfg, pos=pos, cos=cos, sin=sin)
+            h = h + a
+            if fam == "moe":
+                m, _ = moe_ffn(lp["moe"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                               cfg, groups=1)
+            else:
+                m = mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            return h + m, cache
+
+        x1, attn_c = jax.lax.scan(body, x1, (params, caches["attn"]))
+        return x1, {"attn": attn_c}
+
+    if fam == "rwkv":
+        def body(h, xs):
+            lp, cache = xs
+            lp = cast_block(lp, cfg.compute_dtype)
+            t, (sh_t, wkv) = rwkv_step(lp["tmix"],
+                                       rms_norm(h, lp["ln1"], cfg.norm_eps)[:, 0],
+                                       cfg, cache["shift_t"], cache["wkv"])
+            h = h + t[:, None]
+            c, sh_c = rwkv_cmix_step(lp["cmix"],
+                                     rms_norm(h, lp["ln2"], cfg.norm_eps)[:, 0],
+                                     cfg, cache["shift_c"])
+            h = h + c[:, None]
+            return h, {"shift_t": sh_t, "shift_c": sh_c, "wkv": wkv}
+
+        return jax.lax.scan(body, x1, (params, caches))
+
+    if fam == "ssm":
+        def body(h, xs):
+            lp, cache = xs
+            lp = cast_block(lp, cfg.compute_dtype)
+            m, (conv, ssd) = ssm_step(lp["ssm"],
+                                      rms_norm(h, lp["ln1"], cfg.norm_eps)[:, 0],
+                                      cfg, cache["conv"], cache["ssd"])
+            return h + m[:, None], {"conv": conv, "ssd": ssd}
+
+        return jax.lax.scan(body, x1, (params, caches))
+
+    if fam == "hybrid":
+        L, se = cfg.n_layers, cfg.shared_every
+        n_app, rest = L // se, L % se
+        shared = cast_block(jax.tree.map(lambda a: a[0], params["shared"]),
+                            cfg.compute_dtype)
+        ssm_params = {"ln1": params["ln1"], "ssm": params["ssm"]}
+
+        def ssm_body(h, xs):
+            lp, cache = xs
+            lp = cast_block(lp, cfg.compute_dtype)
+            m, (conv, ssd) = ssm_step(lp["ssm"],
+                                      rms_norm(h, lp["ln1"], cfg.norm_eps)[:, 0],
+                                      cfg, cache["conv"], cache["ssd"])
+            return h + m[:, None], {"conv": conv, "ssd": ssd}
+
+        main_p = jax.tree.map(lambda a: a[:n_app * se].reshape(
+            (n_app, se) + a.shape[1:]), ssm_params)
+        main_c = jax.tree.map(lambda a: a[:n_app * se].reshape(
+            (n_app, se) + a.shape[1:]),
+            {"conv": caches["conv"], "ssd": caches["ssd"]})
+
+        def outer(h, xs):
+            blk_p, blk_c, sh_cache = xs
+            h, new_c = jax.lax.scan(ssm_body, h, (blk_p, blk_c))
+            a, sh_cache = decode_attn(shared["attn"],
+                                      rms_norm(h, shared["ln1"], cfg.norm_eps),
+                                      sh_cache, cfg, pos=pos, cos=cos, sin=sin)
+            h = h + a
+            h = h + mlp(shared["mlp"],
+                        rms_norm(h, shared["ln2"], cfg.norm_eps), cfg)
+            return h, (new_c, sh_cache)
+
+        x1, (main_c2, shared_c2) = jax.lax.scan(
+            outer, x1, (main_p, main_c, caches["shared"]))
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), main_c2)
+        if rest:
+            tail_p = jax.tree.map(lambda a: a[n_app * se:], ssm_params)
+            tail_c = jax.tree.map(lambda a: a[n_app * se:],
+                                  {"conv": caches["conv"],
+                                   "ssd": caches["ssd"]})
+            x1, tail_c2 = jax.lax.scan(ssm_body, x1, (tail_p, tail_c))
+            flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                flat, tail_c2)
+        return x1, {"conv": flat["conv"], "ssd": flat["ssd"],
+                    "shared": shared_c2}
+    raise ValueError(fam)

@@ -1,0 +1,71 @@
+"""k-NN retrieval index over model embeddings — the paper's technique as a
+first-class framework feature (RAG / kNN-LM serving path).
+
+``embed_corpus`` pools a model's final hidden states; ``KnnIndex.build``
+constructs the k-NN graph by the PAPER's pipeline — per-subset NN-Descent
+then Two-way/Multi-way graph merge (never a from-scratch global build) —
+and α-diversifies it into an index graph for beam search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diversify import diversify
+from repro.core.graph import KnnGraph
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge, two_way_hierarchy
+from repro.core.nndescent import build_subgraphs
+from repro.core.search import beam_search
+from repro.core.twoway import merge_full, two_way_merge
+from repro.models.model import Model
+
+
+def embed_corpus(model: Model, params, token_batches) -> jax.Array:
+    """Mean-pool final hidden states per sequence → (n_docs, d)."""
+    outs = []
+    for toks in token_batches:
+        h = model.embed(params, {"tokens": jnp.asarray(toks)})
+        outs.append(jnp.mean(h, axis=1).astype(jnp.float32))
+    return jnp.concatenate(outs, axis=0)
+
+
+@dataclasses.dataclass
+class KnnIndex:
+    graph: KnnGraph
+    data: jax.Array
+    metric: str = "l2"
+
+    @classmethod
+    def build(cls, key, data: jax.Array, *, k: int = 16, lam: int = 8,
+              n_subsets: int = 2, method: str = "twoway",
+              alpha: float = 1.1, max_degree: int | None = None,
+              metric: str = "l2") -> "KnnIndex":
+        n = data.shape[0]
+        base = n // n_subsets
+        sizes = [base] * (n_subsets - 1) + [n - base * (n_subsets - 1)]
+        subs = build_subgraphs(jax.random.fold_in(key, 1), data, sizes, k,
+                               lam=lam, metric=metric)
+        g0 = concat_subgraphs(subs)
+        if n_subsets == 1:
+            full = subs[0]
+        elif method == "multiway" or n_subsets > 2:
+            gc, _ = multi_way_merge(jax.random.fold_in(key, 2), data, sizes,
+                                    g0, lam=lam, metric=metric)
+            full = merge_full(gc, g0)
+        else:
+            gc, _ = two_way_merge(jax.random.fold_in(key, 2), data, sizes,
+                                  g0, lam=lam, metric=metric)
+            full = merge_full(gc, g0)
+        idx_graph = diversify(full, data, alpha=alpha, metric=metric,
+                              max_degree=max_degree or k)
+        return cls(graph=idx_graph, data=data, metric=metric)
+
+    def search(self, queries: jax.Array, k: int = 10, beam: int = 32):
+        ids, dists, evals = beam_search(self.graph, self.data, queries, k,
+                                        beam=beam, metric=self.metric)
+        return ids, dists, evals

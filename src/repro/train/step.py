@@ -1,0 +1,132 @@
+"""jit'd train/serve steps with explicit shardings (the dry-run surface).
+
+``make_train_step`` builds the donated, sharded step the trainer AND the
+multi-pod dry-run lower:
+
+  (params, opt_state, batch) → (params, opt_state, metrics)
+
+Microbatch gradient accumulation is a ``lax.scan`` over batch slices
+(activation memory ÷ n_micro at fixed HLO size); remat is layer-granular
+inside the model. Collective overlap (FSDP all-gather / DP reduce-scatter
+against compute) is delegated to XLA's latency-hiding scheduler — the
+knobs live in launch/dryrun.py where the HLO is inspected.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import Model
+from repro.sharding import partition
+from repro.train.optim import AdamW
+
+
+def moe_groups_for(mesh: Mesh, batch: int, seq: int) -> int:
+    """Router groups aligned to the data sharding (shard-local routing)."""
+    dp = 1
+    for a in partition.data_axes(mesh):
+        dp *= mesh.shape[a]
+    g = dp
+    while g > 1 and (batch * seq) % g:
+        g //= 2
+    return max(g, 1)
+
+
+def make_train_step(model: Model, opt: AdamW, mesh: Mesh, *,
+                    n_micro: int = 1, moe_groups: int = 1,
+                    act_sharding: bool = True):
+    cfg = model.cfg
+    partition.set_activation_mesh(mesh if act_sharding else None)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=True, moe_groups=moe_groups)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(i):
+                return jax.tree.map(
+                    lambda a: a[i] if a.ndim else a,
+                    jax.tree.map(
+                        lambda a: a.reshape((n_micro, -1) + a.shape[1:])
+                        if a.ndim else a, batch))
+
+            def acc_body(carry, i):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro(i))
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)),
+                jnp.arange(n_micro))
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm, loss=loss)
+        return params, opt_state, metrics
+
+    aparams = model.abstract_params()
+    p_sh = partition.params_shardings(aparams, mesh)
+    opt_sh = jax.tree.map(
+        lambda s: s,
+        jax.eval_shape(opt.init, aparams),
+        is_leaf=lambda x: False)  # placeholder; resolved below
+    # opt state mirrors params (moments) + replicated step
+    aopt = jax.eval_shape(opt.init, aparams)
+    m_sh = partition.params_shardings(aopt.m, mesh)
+    v_sh = partition.params_shardings(aopt.v, mesh)
+    opt_sh = type(aopt)(step=NamedSharding(mesh, P()), m=m_sh, v=v_sh)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "aux": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+
+    def batch_shardings(abstract_batch):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            partition.batch_specs(abstract_batch, mesh))
+
+    def jitted(abstract_batch):
+        return jax.jit(
+            train_step,
+            in_shardings=(p_sh, opt_sh, batch_shardings(abstract_batch)),
+            out_shardings=(p_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1))
+
+    return train_step, jitted, (p_sh, opt_sh)
+
+
+def make_serve_steps(model: Model, mesh: Mesh, *, act_sharding: bool = True):
+    """(prefill_jit, decode_jit) builders given abstract inputs."""
+    partition.set_activation_mesh(mesh if act_sharding else None)
+    aparams = model.abstract_params()
+    p_sh = partition.params_shardings(aparams, mesh)
+
+    def prefill_jit(abstract_batch, cache_margin: int = 0):
+        b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            partition.batch_specs(abstract_batch, mesh))
+        fn = functools.partial(model.prefill, cache_margin=cache_margin)
+        return jax.jit(fn, in_shardings=(p_sh, b_sh))
+
+    def decode_jit(abstract_batch, abstract_caches):
+        b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            partition.batch_specs(abstract_batch, mesh))
+        c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            partition.cache_specs(abstract_caches, mesh))
+        return jax.jit(model.decode,
+                       in_shardings=(p_sh, c_sh, b_sh),
+                       out_shardings=(None, c_sh),
+                       donate_argnums=(1,))
+
+    return prefill_jit, decode_jit, p_sh

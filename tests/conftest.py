@@ -1,0 +1,19 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# Tests run on the default single CPU device; multi-device behaviour is
+# exercised via subprocesses (see test_distributed.py / test_dryrun_mini.py)
+# so nothing here may set --xla_force_host_platform_device_count.
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    from repro.data.vectors import sift_like
+    return sift_like(jax.random.key(0), 800, 16)
+
+
+@pytest.fixture(scope="session")
+def small_gt(small_data):
+    from repro.core.bruteforce import knn_bruteforce
+    return knn_bruteforce(small_data, 10)

@@ -1,0 +1,99 @@
+"""End-to-end behaviour of the paper's algorithms at CPU scale.
+
+Checks the paper's CLAIMS, scaled down: Two-way Merge reaches the quality
+band of its subgraphs (Fig. 7), uses fewer distance evaluations than
+S-Merge (Fig. 8's 2× speedup — we assert the eval-count ordering, the
+hardware-free part of that claim), and Multi-way holds quality within a
+small drop of two-way hierarchy (Fig. 9).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import check_invariants, recall
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge, two_way_hierarchy
+from repro.core.nndescent import build_subgraphs, nn_descent
+from repro.core.smerge import s_merge
+from repro.core.twoway import merge_full, two_way_merge
+
+N, D, K, LAM = 800, 16, 10, 6
+
+
+@pytest.fixture(scope="module")
+def gt(small_data):
+    return knn_bruteforce(small_data[:N], K)
+
+
+@pytest.fixture(scope="module")
+def data(small_data):
+    return small_data[:N]
+
+
+@pytest.fixture(scope="module")
+def halves(data):
+    sizes = (N // 2, N // 2)
+    subs = build_subgraphs(jax.random.key(2), data, sizes, K, lam=LAM,
+                           max_iters=15)
+    return sizes, subs, concat_subgraphs(subs)
+
+
+def test_nn_descent_recall(data, gt):
+    g, stats = nn_descent(jax.random.key(1), data, K, lam=LAM, max_iters=20)
+    check_invariants(g, N)
+    assert float(recall(g, gt.ids, 10)) > 0.90
+    assert stats["total_evals"] > 0
+    assert stats["updates"][-1] <= stats["updates"][0]
+
+
+def test_two_way_merge_quality(data, gt, halves):
+    sizes, subs, g0 = halves
+    gc, st = two_way_merge(jax.random.key(3), data, sizes, g0, lam=LAM,
+                           max_iters=20)
+    gm = merge_full(gc, g0)
+    check_invariants(gm, N)
+    sub_rec = []
+    for i, s in enumerate(subs):
+        sub_gt = knn_bruteforce(data[i * N // 2:(i + 1) * N // 2], K)
+        sub_rec.append(float(recall(s, sub_gt.ids, 10)))
+    merged_rec = float(recall(gm, gt.ids, 10))
+    # paper Fig. 7: merged quality ≈ average subgraph quality
+    assert merged_rec > 0.9 * (sum(sub_rec) / 2)
+    # cross graph holds ONLY cross-subset neighbors
+    ids = gc.ids
+    row = jnp.arange(N)[:, None]
+    valid = ids >= 0
+    cross = (row < N // 2) == (ids >= N // 2)
+    assert bool(jnp.all(~valid | cross))
+
+
+def test_two_way_cheaper_than_smerge(data, gt, halves):
+    sizes, subs, g0 = halves
+    _, st_tw = two_way_merge(jax.random.key(3), data, sizes, g0, lam=LAM,
+                             max_iters=20)
+    g_sm, st_sm = s_merge(jax.random.key(4), data, sizes, g0, lam=LAM,
+                          max_iters=20)
+    # the hardware-free core of the paper's 2× claim
+    assert st_tw["total_evals"] < st_sm["total_evals"]
+    assert float(recall(g_sm, gt.ids, 10)) > 0.9
+
+
+def test_multiway_vs_hierarchy(data, gt):
+    sizes = (200, 200, 200, 200)
+    subs = build_subgraphs(jax.random.key(5), data, sizes, K, lam=LAM,
+                           max_iters=15)
+    g0 = concat_subgraphs(subs)
+    gc, st_mw = multi_way_merge(jax.random.key(6), data, sizes, g0, lam=LAM,
+                                max_iters=20)
+    gm = merge_full(gc, g0)
+    gh, st_h = two_way_hierarchy(jax.random.key(7), data, sizes, subs,
+                                 lam=LAM, max_iters=20)
+    r_mw = float(recall(gm, gt.ids, 10))
+    r_h = float(recall(gh, gt.ids, 10))
+    assert r_mw > 0.85 and r_h > 0.85
+    # paper Fig. 9: multi-way quality within a small drop of hierarchy
+    assert r_mw > r_h - 0.05
+    check_invariants(gm, N)
+    check_invariants(gh, N)

@@ -1,0 +1,42 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bruteforce import knn_bruteforce, knn_search_bruteforce
+from repro.core.diversify import diversify
+from repro.core.search import beam_search, search_recall
+from repro.data.vectors import clustered
+
+
+def test_diversify_occlusion_rule(small_data):
+    data = small_data[:300]
+    g = knn_bruteforce(data, 8)
+    alpha = 1.2
+    dg = diversify(g, data, alpha=alpha, max_degree=6)
+    ids = np.asarray(dg.ids)
+    dists = np.asarray(dg.dists)
+    D = np.asarray(data)
+    for i in range(0, 300, 37):
+        kept = ids[i][ids[i] >= 0]
+        assert len(kept) <= 6
+        # no kept b is occluded by a kept a closer than it
+        for bi, b in enumerate(kept):
+            for a in kept[:bi]:
+                dab = ((D[a] - D[b]) ** 2).sum()
+                assert not (alpha * dab < dists[i][bi] - 1e-5), (i, a, b)
+
+
+def test_beam_search_navigable():
+    data = clustered(jax.random.key(0), 1000, 16, n_clusters=8, scale=0.8)
+    g = knn_bruteforce(data, 10)
+    q = data[:32] + 0.02 * jax.random.normal(jax.random.key(3), (32, 16))
+    gt_ids, _ = knn_search_bruteforce(data, q, 10)
+    ids, dists, evals = beam_search(g, data, q, 10, beam=48)
+    r = float(search_recall(ids, gt_ids, 10))
+    assert r > 0.7, r
+    assert float(evals.mean()) > 0
+    # bigger beam → better or equal recall (QPS/recall tradeoff direction)
+    ids2, _, ev2 = beam_search(g, data, q, 10, beam=96)
+    r2 = float(search_recall(ids2, gt_ids, 10))
+    assert r2 >= r - 0.02
+    assert float(ev2.mean()) > float(evals.mean())

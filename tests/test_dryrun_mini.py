@@ -1,0 +1,61 @@
+"""Miniature multi-device dry-run in a subprocess (8 host devices).
+
+Proves the dryrun plumbing (mesh → shardings → lower → compile → HLO
+analysis) end-to-end without the 512-device production meshes, which are
+exercised by the real artifact runs recorded in EXPERIMENTS.md.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.environ["REPRO_SRC"])
+import jax
+from jax.sharding import AxisType
+from repro.configs import get, reduced
+from repro.models.model import build
+from repro.train.optim import AdamW
+from repro.train.step import make_serve_steps, make_train_step
+from repro.launch.hlo_stats import analyze
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
+cfg = reduced(get("qwen2-7b"))
+model = build(cfg)
+opt = AdamW()
+_, jitted, _ = make_train_step(model, opt, mesh, moe_groups=1)
+ab = model.input_specs("train", 8, 32)
+ap = model.abstract_params()
+ao = jax.eval_shape(opt.init, ap)
+compiled = jitted(ab).lower(ap, ao, ab).compile()
+stats = analyze(compiled.as_text())
+assert stats["flops"] > 0
+assert stats["collective_bytes"] > 0, "expected collectives on 8 devices"
+print("TRAIN_OK", stats["flops"], stats["collective_bytes"])
+
+prefill_jit, decode_jit, _ = make_serve_steps(model, mesh)
+abp = model.input_specs("prefill", 8, 32)
+cp = prefill_jit(abp).lower(ap, abp).compile()
+print("PREFILL_OK", analyze(cp.as_text())["flops"])
+abd = model.input_specs("decode", 8, 32)
+ac = model.abstract_decode_caches(8, 32)
+cd = decode_jit(abd, ac).lower(ap, ac, abd).compile()
+print("DECODE_OK", analyze(cd.as_text())["flops"])
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_mini_multipod():
+    env = dict(os.environ,
+               REPRO_SRC=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    for tag in ("TRAIN_OK", "PREFILL_OK", "DECODE_OK"):
+        assert tag in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]

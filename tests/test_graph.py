@@ -1,0 +1,72 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (INVALID_ID, KnnGraph, check_invariants,
+                              empty_graph, random_graph, recall,
+                              sort_rows_dedupe)
+
+
+def test_empty_graph():
+    g = empty_graph(5, 3)
+    assert g.n == 5 and g.k == 3
+    assert not bool(g.valid.any())
+    check_invariants(g)
+
+
+def test_random_graph_invariants(small_data):
+    g = random_graph(jax.random.key(1), 200, 8, small_data[:200])
+    check_invariants(g, 200)
+    # distances are true L2²
+    i, j = 3, int(g.ids[3, 0])
+    d = float(jnp.sum((small_data[3] - small_data[j]) ** 2))
+    assert np.isclose(float(g.dists[3, 0]), d, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 10))
+def test_sort_rows_dedupe_properties(seed, rows, width):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, 6, (rows, width)).astype(np.int32)
+    dists = rng.random((rows, width)).astype(np.float32)
+    dists = np.where(ids < 0, np.inf, dists)
+    flags = rng.random((rows, width)) < 0.5
+    flags &= ids >= 0
+    oi, od, of = sort_rows_dedupe(jnp.asarray(ids), jnp.asarray(dists),
+                                  jnp.asarray(flags))
+    oi, od, of = np.asarray(oi), np.asarray(od), np.asarray(of)
+    for r in range(rows):
+        valid = oi[r] != INVALID_ID
+        # sorted ascending, invalids at tail (inf-inf diff is nan)
+        dif = np.diff(od[r])
+        assert np.all(np.isnan(dif) | (dif >= 0))
+        assert np.all(od[r][~valid] == np.inf)
+        # no dup ids
+        v = oi[r][valid]
+        assert len(set(v.tolist())) == len(v)
+        # the id set equals the input's unique valid ids
+        expect = set(ids[r][ids[r] >= 0].tolist())
+        assert set(v.tolist()) == expect
+        # each survivor keeps the minimum distance for its id
+        for x in v:
+            dmin = dists[r][ids[r] == x].min()
+            got = od[r][oi[r] == x][0]
+            assert got <= dmin + 1e-6
+
+
+def test_prefer_keeps_existing_flags():
+    ids = jnp.asarray([[3, 5, 3]])
+    dists = jnp.asarray([[0.5, 0.2, 0.1]])
+    flags = jnp.asarray([[False, True, True]])
+    prefer = jnp.asarray([[True, False, False]])
+    oi, od, of = sort_rows_dedupe(ids, dists, flags, prefer)
+    # id 3: preferred slot (dist .5, flag False) wins over candidate (.1)
+    pos = int(np.argmax(np.asarray(oi)[0] == 3))
+    assert float(np.asarray(od)[0, pos]) == pytest.approx(0.5)
+    assert not bool(np.asarray(of)[0, pos])
+
+
+def test_recall_perfect(small_gt):
+    assert float(recall(small_gt, small_gt.ids, 10)) == pytest.approx(1.0)

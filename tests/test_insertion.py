@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import INVALID_ID, empty_graph, check_invariants
+from repro.core.insertion import cap_scatter, insert_candidates, merge_rows
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 5),
+       st.integers(2, 8))
+def test_cap_scatter_matches_numpy(seed, edges, cap, n):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(-1, n, edges).astype(np.int32)
+    cols = rng.integers(0, n, edges).astype(np.int32)
+    dists = rng.random(edges).astype(np.float32)
+    ids, dd = cap_scatter(jnp.asarray(rows), jnp.asarray(cols),
+                          jnp.asarray(dists), n, cap)
+    ids, dd = np.asarray(ids), np.asarray(dd)
+    for r in range(n):
+        mask = rows == r
+        want = sorted(dists[mask])[:cap]
+        got = sorted(dd[r][ids[r] != INVALID_ID].tolist())
+        assert np.allclose(got, want, rtol=1e-6), (r, got, want)
+
+
+def test_merge_rows_counts_updates():
+    g = empty_graph(3, 2)
+    cand_ids = jnp.asarray([[1, 2], [0, INVALID_ID], [INVALID_ID, INVALID_ID]])
+    cand_d = jnp.asarray([[0.1, 0.2], [0.3, np.inf], [np.inf, np.inf]])
+    g2, n_upd = merge_rows(g, cand_ids, cand_d)
+    assert int(n_upd) == 3
+    check_invariants(g2)
+    # second insert of identical candidates: no updates
+    g3, n_upd2 = merge_rows(g2, cand_ids, cand_d)
+    assert int(n_upd2) == 0
+    assert bool(jnp.all(g3.ids == g2.ids))
+
+
+def test_no_self_edges():
+    g = empty_graph(2, 2)
+    rows = jnp.asarray([0, 1], jnp.int32)
+    cols = jnp.asarray([0, 0], jnp.int32)    # (0,0) is a self edge
+    d = jnp.asarray([0.1, 0.2])
+    g2, n = insert_candidates(g, rows, cols, d)
+    assert int(n) == 1
+    assert int(g2.ids[0, 0]) == INVALID_ID
+    assert int(g2.ids[1, 0]) == 0

@@ -1,0 +1,66 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pairdist import pairdist_pallas
+from repro.kernels.topk_merge import topk_merge_pallas
+
+
+@pytest.mark.parametrize("G,A,B,d", [(7, 4, 6, 10), (16, 12, 12, 32),
+                                     (3, 9, 17, 50), (40, 8, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairdist_sweep(G, A, B, d, dtype):
+    a = jax.random.normal(jax.random.key(0), (G, A, d), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.key(1), (G, B, d), jnp.float32).astype(dtype)
+    out = pairdist_pallas(a, b, interpret=True)
+    want = ref.pairdist(a.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,k,c", [(5, 4, 4), (33, 10, 14), (64, 6, 10)])
+def test_topk_merge_sweep(n, k, c):
+    key = jax.random.key(n)
+    rd = jnp.sort(jax.random.uniform(key, (n, k)), axis=1)
+    rid = jax.random.randint(jax.random.key(n + 1), (n, k), 0, 50)
+    cd = jnp.sort(jax.random.uniform(jax.random.key(n + 2), (n, c)), axis=1)
+    cid = jax.random.randint(jax.random.key(n + 3), (n, c), 0, 50)
+    cid = jnp.where(cid > 45, -1, cid)
+    oid, od = topk_merge_pallas(rid, rd, cid, cd, interpret=True)
+    wid, wd = ref.topk_merge(rid, rd, cid, cd)
+    assert_allclose(np.asarray(od), np.asarray(wd), rtol=1e-6)
+    assert (np.asarray(oid) == np.asarray(wid)).all()
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,KH,D,causal,win,off",
+    [(1, 32, 32, 2, 1, 16, True, None, 0),     # square causal + GQA
+     (1, 17, 40, 2, 2, 16, True, None, 23),    # ragged + q_offset (decode)
+     (1, 24, 24, 2, 1, 16, True, 12, 0),       # sliding window
+     (1, 17, 33, 2, 1, 16, False, None, 0),    # non-causal (cross-attn)
+     (2, 40, 40, 4, 2, 32, True, None, 0)])
+def test_flash_attention_sweep(B, Sq, Sk, H, KH, D, causal, win, off):
+    q = jax.random.normal(jax.random.key(6), (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(7), (B, Sk, KH, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(8), (B, Sk, KH, D), jnp.float32)
+    o1 = flash_attention_pallas(q, k, v, causal=causal, window=win,
+                                q_offset=off, bq=16, bk=16, interpret=True)
+    o2 = ref.attention(q, k, v, causal=causal, window=win, q_offset=off,
+                       chunk=8)
+    assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.key(1), (1, 24, 2, 16)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(2), (1, 24, 2, 16)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(3), (1, 24, 2, 16)).astype(jnp.bfloat16)
+    o1 = flash_attention_pallas(q, k, v, bq=8, bk=8, interpret=True)
+    o2 = ref.attention(q, k, v, chunk=8)
+    assert_allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+                    rtol=5e-2, atol=5e-2)

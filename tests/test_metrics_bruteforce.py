@@ -1,0 +1,36 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.bruteforce import knn_bruteforce, knn_search_bruteforce
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_dist_block_matches_point(metric):
+    key = jax.random.key(0)
+    a = jax.random.normal(key, (5, 8))
+    b = jax.random.normal(jax.random.key(1), (7, 8))
+    blk = metrics.dist_block(metric, a, b)
+    for i in range(5):
+        for j in range(7):
+            assert np.isclose(float(blk[i, j]),
+                              float(metrics.dist_point(metric, a[i], b[j])),
+                              rtol=1e-4, atol=1e-5)
+
+
+def test_bruteforce_matches_numpy(small_data):
+    data = np.asarray(small_data[:128])
+    g = knn_bruteforce(jnp.asarray(data), 5, block=32)
+    d2 = ((data[:, None] - data[None]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    want = np.argsort(d2, axis=1)[:, :5]
+    assert (np.asarray(g.ids) == want).mean() > 0.999
+
+
+def test_search_bruteforce(small_data):
+    q = small_data[:4] + 0.01
+    ids, dists = knn_search_bruteforce(small_data, q, 3)
+    assert ids.shape == (4, 3)
+    assert bool(jnp.all(jnp.diff(dists, axis=1) >= 0))

@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import recall
+from repro.core.outofcore import Spool, build_out_of_core
+
+
+@pytest.mark.slow
+def test_out_of_core_build_and_resume(tmp_path, small_data):
+    m, n_loc = 4, 150
+    n = m * n_loc
+    data = np.asarray(small_data[:n])
+    sp = Spool(str(tmp_path / "spool"))
+    g = build_out_of_core(jax.random.key(1), sp, data, (n_loc,) * m,
+                          k=10, lam=6, inner_iters=5, nnd_iters=10)
+    gt = knn_bruteforce(jnp.asarray(data), 10)
+    assert float(recall(g, gt.ids, 10)) > 0.8
+    # resume is a no-op returning the identical graph
+    g2 = build_out_of_core(jax.random.key(1), sp, data, (n_loc,) * m,
+                           k=10, lam=6, inner_iters=5, nnd_iters=10)
+    assert bool(jnp.all(g2.ids == g.ids))
+
+
+@pytest.mark.slow
+def test_out_of_core_restart_mid_build(tmp_path, small_data):
+    """Kill-after-subgraphs restart: stage 1 durable, stage 2 resumes."""
+    m, n_loc = 2, 150
+    data = np.asarray(small_data[:m * n_loc])
+    sp = Spool(str(tmp_path / "spool2"))
+    # run stage 1 only by monkey-running with 0 pairs: emulate a crash by
+    # building subgraphs via a first call on a single subset layout…
+    # simpler: full build, then corrupt manifest's pairs and rebuild.
+    g = build_out_of_core(jax.random.key(1), sp, data, (n_loc,) * m,
+                          k=10, lam=6, inner_iters=6, nnd_iters=12)
+    man = sp.manifest()
+    man["pairs_done"] = []          # forget stage 2 (simulated crash point)
+    sp.write_manifest(man)
+    g2 = build_out_of_core(jax.random.key(1), sp, data, (n_loc,) * m,
+                           k=10, lam=6, inner_iters=6, nnd_iters=12)
+    assert g2.ids.shape == g.ids.shape
+    gt = knn_bruteforce(jnp.asarray(data), 10)
+    # resumed build only re-merges on top of already-merged state
+    # (idempotent): quality at least matches the uninterrupted build
+    assert float(recall(g2, gt.ids, 10)) >= float(recall(g, gt.ids, 10)) - 0.02

@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import INVALID_ID, KnnGraph, empty_graph
+from repro.core.mergesort import (concat_subgraphs, make_sof, merge_graphs,
+                                  subset_starts)
+from repro.core.sampling import (reverse_cap, sample_flagged,
+                                 sample_random_other, sample_unflagged,
+                                 support_graph)
+
+
+def _toy_graph():
+    ids = jnp.asarray([[1, 2, INVALID_ID], [0, 3, 2], [3, 0, 1]], jnp.int32)
+    d = jnp.asarray([[.1, .2, np.inf], [.1, .3, .4], [.2, .3, .5]])
+    f = jnp.asarray([[True, False, False], [True, True, False],
+                     [False, False, False]])
+    return KnnGraph(ids=ids, dists=d, flags=f)
+
+
+def test_sample_flagged_clears_flags():
+    g = _toy_graph()
+    s, g2 = sample_flagged(g, 2)
+    s = np.asarray(s)
+    assert set(s[0].tolist()) == {1, INVALID_ID}     # only one flagged
+    assert set(s[1].tolist()) == {0, 3}
+    assert set(s[2].tolist()) == {INVALID_ID}        # none flagged
+    assert not bool(g2.flags.any())                   # all sampled → cleared
+
+
+def test_sample_unflagged():
+    g = _toy_graph()
+    s = np.asarray(sample_unflagged(g, 2))
+    assert set(s[0].tolist()) == {2, INVALID_ID}
+    assert set(s[2].tolist()) == {3, 0}
+
+
+def test_reverse_cap_is_capped():
+    # every row samples vertex 0 → R[0] must cap at `cap`
+    sample = jnp.zeros((6, 2), jnp.int32)
+    r = np.asarray(reverse_cap(sample, 6, 3))
+    assert (r[0] != INVALID_ID).sum() == 3
+    assert (r[1:] != INVALID_ID).sum() == 0
+
+
+def test_support_graph_width():
+    g = _toy_graph()
+    s = support_graph(g, 2)
+    assert s.shape == (3, 4)
+
+
+def test_sample_random_other_stays_cross():
+    sizes = (5, 7)
+    sof = make_sof(sizes)
+    s = sample_random_other(jax.random.key(0), sof, subset_starts(sizes),
+                            jnp.asarray(sizes, jnp.int32), 4)
+    s = np.asarray(s)
+    assert np.all(s[:5] >= 5) and np.all(s[:5] < 12)
+    assert np.all(s[5:] < 5)
+
+
+def test_concat_and_merge(small_data):
+    from repro.core.bruteforce import knn_bruteforce
+    g1 = knn_bruteforce(small_data[:100], 4)
+    g2 = knn_bruteforce(small_data[100:200], 4)
+    g0 = concat_subgraphs([g1, g2])
+    assert g0.n == 200
+    assert int(g0.ids[150, 0]) >= 100                 # rebased ids
+    merged = merge_graphs(g0, g0, k=4)
+    assert bool(jnp.all(merged.ids == g0.ids))        # idempotent

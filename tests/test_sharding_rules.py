@@ -1,0 +1,86 @@
+"""Partition rules on the (abstract) production mesh for all 10 archs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, AxisType
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get
+from repro.models.model import build
+from repro.sharding import partition
+
+
+def abstract_production_mesh(multi_pod=False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("multi", [False, True])
+def test_specs_divisible(arch, multi):
+    mesh = abstract_production_mesh(multi)
+    model = build(get(arch))
+    aparams = model.abstract_params()
+    specs = partition.params_specs(aparams, mesh)
+    flat_p = jax.tree_util.tree_flatten_with_path(aparams)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (kp, leaf), spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            assert dim % size == 0, (kp, leaf.shape, spec)
+
+
+def test_expected_rules():
+    mesh = abstract_production_mesh()
+    model = build(get("qwen2-7b"))
+    aparams = model.abstract_params()
+    specs = partition.params_specs(aparams, mesh)
+    # embeddings: vocab over model
+    assert specs["tok_emb"] == P("model", None)
+    # attention in-proj: (L, d, H·hd) → (None, data, model)
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+    # out-proj flips: (L, H·hd, d) → (None, model, data)
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", "data")
+    # norms replicate
+    assert specs["ln_f"] == P()
+
+
+def test_divisibility_fallback_smollm():
+    """15 heads → H·hd=960 not divisible by 16 ⇒ that dim replicates."""
+    mesh = abstract_production_mesh()
+    model = build(get("smollm-360m"))
+    specs = partition.params_specs(model.abstract_params(), mesh)
+    wq = specs["layers"]["attn"]["wq"]          # (L, 960, 960): 960/16=60 ✓
+    assert wq == P(None, "data", "model")
+    # whisper vocab 51865 is not divisible by 16 → tok_emb replicated dim 0
+    wm = build(get("whisper-tiny"))
+    sp = partition.params_specs(wm.abstract_params(), mesh)
+    assert sp["tok_emb"] == P(None, None)
+
+
+def test_batch_and_cache_specs():
+    mesh = abstract_production_mesh(multi_pod=True)
+    model = build(get("qwen2-7b"))
+    ab = model.input_specs("train", 256, 4096)
+    bs = partition.batch_specs(ab, mesh)
+    assert bs["tokens"] == P(("pod", "data"), None)
+    ac = model.abstract_decode_caches(128, 1024)
+    cs = partition.cache_specs(ac, mesh)
+    # (L, B, W, KH, hd): batch over data axes; kv heads=4 < 16 → replicated
+    assert cs["attn"]["k"][1] == ("pod", "data")
+    assert cs["attn"]["k"][3] is None
+
+
+def test_explain_runs():
+    mesh = abstract_production_mesh()
+    model = build(get("qwen3-0.6b"))
+    lines = partition.explain(model.abstract_params(), mesh)
+    assert len(lines) > 5

@@ -1,0 +1,59 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced
+from repro.data.tokens import TokenPipeline
+from repro.models.model import build
+from repro.train.loop import Trainer
+from repro.train.optim import AdamW
+
+
+@pytest.mark.slow
+def test_loss_decreases_on_markov():
+    cfg = reduced(get("qwen3-0.6b")).replace(n_layers=2, d_model=64,
+                                             d_ff=128, vocab=64)
+    m = build(cfg)
+    pipe = TokenPipeline(vocab=64, seq_len=32, global_batch=8, mode="markov")
+    opt = AdamW(lr_peak=3e-3, warmup_steps=5, total_steps=60)
+    t = Trainer(model=m, opt=opt, pipeline=pipe, log_every=10,
+                ckpt_dir=None)
+    _, _, hist = t.run(60, log_fn=lambda *a: None)
+    first = hist[0][1]["loss"]
+    last = hist[-1][1]["loss"]
+    assert last < first - 0.5, (first, last)
+
+
+@pytest.mark.slow
+def test_retrieval_index_end_to_end():
+    """The paper's technique as a framework feature: build by merge, search.
+
+    Navigable data (overlapping clusters): a flat k-NN index on strongly
+    separated clusters is disconnected and no graph search can traverse it
+    (see core/search.py docstring).
+    """
+    from repro.core.bruteforce import knn_search_bruteforce
+    from repro.core.search import search_recall
+    from repro.data.vectors import clustered
+    from repro.retrieval.index import KnnIndex
+
+    data = clustered(jax.random.key(4), 800, 16, n_clusters=8, scale=0.8)
+    idx = KnnIndex.build(jax.random.key(0), data, k=10, lam=6, n_subsets=2,
+                         alpha=1.2)
+    q = data[:32] + 0.01
+    gt_ids, _ = knn_search_bruteforce(data, q, 10)
+    ids, dists, evals = idx.search(q, k=10, beam=48)
+    assert float(search_recall(ids, gt_ids, 10)) > 0.6
+
+
+def test_embed_corpus_shapes():
+    from repro.retrieval.index import embed_corpus
+    cfg = reduced(get("smollm-360m")).replace(n_layers=1, d_model=32,
+                                              d_ff=64, vocab=64)
+    m = build(cfg)
+    params = m.init_params(jax.random.key(0))
+    toks = [np.ones((4, 8), np.int32), np.ones((2, 8), np.int32)]
+    emb = embed_corpus(m, params, toks)
+    assert emb.shape == (6, 32)
+    assert bool(jnp.isfinite(emb).all())
