@@ -3,48 +3,59 @@
 The paper's headline: ≥2× faster than S-Merge at equal recall; ~1/3 the
 cost of NN-Descent-from-scratch with higher recall. Cost = cumulative
 distance evaluations (hardware-free; wall seconds also reported).
+
+The Two-way arm runs through :class:`repro.api.GraphBuilder` (its
+``trace_fn`` already sees the full merged graph each round); S-Merge and
+from-scratch NN-Descent are baselines the facade deliberately does not
+offer, so they stay on ``repro.core``.
 """
 
 import jax
 
 from benchmarks.common import Timer, dataset, emit
+from repro.api import BuildConfig, GraphBuilder
 from repro.core.bruteforce import knn_bruteforce
 from repro.core.graph import recall
 from repro.core.mergesort import concat_subgraphs
 from repro.core.nndescent import build_subgraphs, nn_descent
 from repro.core.smerge import s_merge
-from repro.core.twoway import merge_full, two_way_merge
 
 
 def run(n=2000, k=16, lam=8):
     data = dataset(n)
     gt = knn_bruteforce(data, k)
-    sizes = (n // 2, n // 2)
-    subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam,
-                           max_iters=20)
-    g0 = concat_subgraphs(subs)
 
-    def trace_factory(name, post):
+    def trace_factory(name):
         def trace(g, it, stats):
             emit({"bench": "fig8", "method": name,
                   "evals": stats["total_evals"],
-                  "recall@10": f"{float(recall(post(g), gt.ids, 10)):.4f}"})
+                  "recall@10": f"{float(recall(g, gt.ids, 10)):.4f}"})
         return trace
 
-    with Timer() as t_tw:
-        _, st_tw = two_way_merge(
-            jax.random.key(3), data, sizes, g0, lam=lam, max_iters=25,
-            trace_fn=trace_factory("two-way", lambda g: merge_full(g, g0)))
+    builder = GraphBuilder(BuildConfig(strategy="twoway", k=k, lam=lam,
+                                       max_iters=25, subgraph_iters=20,
+                                       seed=3))
+    res_tw = builder.build(data, trace_fn=trace_factory("two-way"))
+    st_tw = res_tw.stats
+
+    # equal footing: rebuild the subgraphs with the facade's exact stage key
+    # (fold_in(root, 1) — see repro.api.builder) so S-Merge starts from the
+    # bit-identical G0 the two-way arm merged.
+    sizes = (n // 2, n // 2)
+    subs = build_subgraphs(jax.random.fold_in(jax.random.key(3), 1), data,
+                           sizes, k, lam=lam, max_iters=20)
+    g0 = concat_subgraphs(subs)
     with Timer() as t_sm:
         _, st_sm = s_merge(
             jax.random.key(4), data, sizes, g0, lam=lam, max_iters=25,
-            trace_fn=trace_factory("s-merge", lambda g: g))
+            trace_fn=trace_factory("s-merge"))
     with Timer() as t_nd:
         _, st_nd = nn_descent(
             jax.random.key(5), data, k, lam=lam, max_iters=25,
-            trace_fn=trace_factory("nn-descent", lambda g: g))
+            trace_fn=trace_factory("nn-descent"))
     emit({"bench": "fig8-summary",
-          "two_way_evals": st_tw["total_evals"], "two_way_sec": f"{t_tw.s:.1f}",
+          "two_way_evals": st_tw["total_evals"],
+          "two_way_sec": f"{res_tw.timings['merge_s']:.1f}",
           "s_merge_evals": st_sm["total_evals"], "s_merge_sec": f"{t_sm.s:.1f}",
           "nnd_evals": st_nd["total_evals"], "nnd_sec": f"{t_nd.s:.1f}",
           "speedup_vs_smerge":

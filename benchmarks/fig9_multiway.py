@@ -1,43 +1,33 @@
 """Paper Fig. 9: m-subgraph sweep — Two-way hierarchy vs Multi-way Merge.
 
 Trend under test: multi-way's cost grows slower with m than the two-way
-hierarchy's, at a small (≈0.002–0.003 in the paper) recall cost.
+hierarchy's, at a small (≈0.002–0.003 in the paper) recall cost. Both
+arms are just two strategies of the same :class:`repro.api.GraphBuilder`.
 """
 
-import jax
-
-from benchmarks.common import Timer, dataset, emit
+from benchmarks.common import dataset, emit
+from repro.api import BuildConfig, GraphBuilder
 from repro.core.bruteforce import knn_bruteforce
-from repro.core.graph import recall
-from repro.core.mergesort import concat_subgraphs
-from repro.core.multiway import multi_way_merge, two_way_hierarchy
-from repro.core.nndescent import build_subgraphs
-from repro.core.twoway import merge_full
 
 
 def run(n=2048, k=16, lam=8, ms=(2, 4, 8, 16)):
     data = dataset(n)
     gt = knn_bruteforce(data, k)
     for m in ms:
-        sizes = (n // m,) * m
-        subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam,
-                               max_iters=20)
-        g0 = concat_subgraphs(subs)
-        with Timer() as t_mw:
-            gc, st_mw = multi_way_merge(jax.random.key(3), data, sizes, g0,
-                                        lam=lam, max_iters=20)
-        r_mw = float(recall(merge_full(gc, g0), gt.ids, 10))
-        with Timer() as t_h:
-            gh, st_h = two_way_hierarchy(jax.random.key(4), data, sizes,
-                                         subs, lam=lam, max_iters=20)
-        r_h = float(recall(gh, gt.ids, 10))
+        # same seed → both arms rebuild bit-identical subgraphs (the facade
+        # owns its stages, so the NN-Descent stage runs once per arm; the
+        # reported *_sec numbers are merge-phase only and unaffected)
+        base = BuildConfig(strategy="multiway", k=k, lam=lam, n_subsets=m,
+                           max_iters=20, subgraph_iters=20, seed=2)
+        res_mw = GraphBuilder(base).build(data)
+        res_h = GraphBuilder(base.replace(strategy="hierarchy")).build(data)
         emit({"bench": "fig9", "m": m,
-              "multiway_recall": f"{r_mw:.4f}",
-              "multiway_evals": st_mw["total_evals"],
-              "multiway_sec": f"{t_mw.s:.1f}",
-              "hier_recall": f"{r_h:.4f}",
-              "hier_evals": st_h["total_evals"],
-              "hier_sec": f"{t_h.s:.1f}"})
+              "multiway_recall": f"{res_mw.recall(gt.ids, 10):.4f}",
+              "multiway_evals": res_mw.stats["total_evals"],
+              "multiway_sec": f"{res_mw.timings['merge_s']:.1f}",
+              "hier_recall": f"{res_h.recall(gt.ids, 10):.4f}",
+              "hier_evals": res_h.stats["total_evals"],
+              "hier_sec": f"{res_h.timings['merge_s']:.1f}"})
 
 
 if __name__ == "__main__":

@@ -15,40 +15,31 @@ import sys
 from benchmarks.common import emit
 
 WORKER = r"""
-import os, sys, time, json
+import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(m)d"
 sys.path.insert(0, %(src)r)
-import jax, jax.numpy as jnp
-from repro.data.vectors import sift_like
-from repro.core.nndescent import build_subgraphs
-from repro.core.bruteforce import knn_bruteforce
-from repro.core.graph import recall, KnnGraph
+import jax
+from repro.api import BuildConfig, GraphBuilder
 from repro.core.distributed import build_distributed
-from repro.launch.mesh import make_nodes_mesh
 from repro.launch.hlo_stats import analyze
 
 m, n, d, k, lam = %(m)d, %(n)d, 20, 14, 7
+from repro.data.vectors import sift_like
 data = sift_like(jax.random.key(0), n, d)
-sizes = (n // m,) * m
-t0 = time.time()
-subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam, max_iters=15)
-t_sub = time.time() - t0
-mesh = make_nodes_mesh(m)
-gi = jnp.concatenate([s.ids for s in subs]); gd = jnp.concatenate([s.dists for s in subs])
-t0 = time.time()
-ids, dists = build_distributed(mesh, data, gi, gd, jax.random.key(5),
-                               k=k, lam=lam, inner_iters=5)
-ids.block_until_ready()
-t_merge = time.time() - t0
-gt = knn_bruteforce(data, k)
-g = KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))
-r = float(recall(g, gt.ids, 10))
-# structural exchange volume from the lowered HLO
-lowered = build_distributed.lower(mesh, data, gi, gd, jax.random.key(5),
-                                  k=k, lam=lam, inner_iters=5)
+cfg = BuildConfig(strategy="distributed", k=k, lam=lam, n_subsets=m,
+                  subgraph_iters=15, inner_iters=5, seed=5)
+res = GraphBuilder(cfg).build(data)
+r = res.recall(at=10)
+# structural exchange volume from the lowered HLO (mesh + subgraph arrays
+# come back in the result's extras precisely for this kind of dry-run)
+lowered = build_distributed.lower(
+    res.extras["mesh"], data, res.extras["subgraph_ids"],
+    res.extras["subgraph_dists"], jax.random.key(5),
+    k=k, lam=lam, inner_iters=5)
 st = analyze(lowered.compile().as_text())
 print("RESULT", json.dumps({
-    "m": m, "recall": r, "t_subgraphs": t_sub, "t_merge": t_merge,
+    "m": m, "recall": r, "t_subgraphs": res.timings["subgraphs_s"],
+    "t_merge": res.timings["merge_s"],
     "exchange_bytes": st["collective_bytes"],
     "permutes": st["collectives"]["collective-permute"]["count"]}))
 """

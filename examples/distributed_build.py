@@ -1,4 +1,5 @@
-"""Distributed construction (paper Alg. 3) + fault-tolerant out-of-core mode.
+"""Distributed construction (paper Alg. 3) + fault-tolerant out-of-core mode,
+both through the same ``GraphBuilder`` facade — only ``strategy`` changes.
 
   PYTHONPATH=src python examples/distributed_build.py
 
@@ -17,17 +18,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import shutil  # noqa: E402
 import time    # noqa: E402
 
-import jax             # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np     # noqa: E402
+import jax     # noqa: E402
 
-from repro.core.bruteforce import knn_bruteforce          # noqa: E402
-from repro.core.distributed import build_distributed      # noqa: E402
-from repro.core.graph import KnnGraph, recall             # noqa: E402
-from repro.core.nndescent import build_subgraphs          # noqa: E402
-from repro.core.outofcore import Spool, build_out_of_core  # noqa: E402
-from repro.data.vectors import sift_like                  # noqa: E402
-from repro.launch.mesh import make_nodes_mesh             # noqa: E402
+from repro.api import BuildConfig, GraphBuilder        # noqa: E402
+from repro.core.bruteforce import knn_bruteforce       # noqa: E402
+from repro.data.vectors import sift_like               # noqa: E402
 
 m, n_loc, d, k, lam = 8, 256, 24, 12, 6
 n = m * n_loc
@@ -35,38 +30,31 @@ data = sift_like(jax.random.key(0), n, d)
 gt = knn_bruteforce(data, k)
 
 # ---- part 1: peer-to-peer build on 8 nodes -------------------------------
-sizes = (n_loc,) * m
-subs = build_subgraphs(jax.random.key(1), data, sizes, k, lam=lam,
-                       max_iters=12)
-mesh = make_nodes_mesh(m)
-t0 = time.time()
-ids, dists = build_distributed(
-    mesh, data, jnp.concatenate([s.ids for s in subs]),
-    jnp.concatenate([s.dists for s in subs]), jax.random.key(2),
-    k=k, lam=lam, inner_iters=5)
-ids.block_until_ready()
-g = KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))
-print(f"[p2p {m} nodes] recall@10={float(recall(g, gt.ids, 10)):.4f} "
-      f"({time.time()-t0:.1f}s)")
+builder = GraphBuilder(BuildConfig(
+    strategy="distributed", k=k, lam=lam, n_subsets=m, seed=1,
+    subgraph_iters=12, inner_iters=5))
+result = builder.build(data)
+print(f"[p2p {m} nodes] recall@10={result.recall(gt.ids, 10):.4f} "
+      f"({result.timings['merge_s']:.1f}s merge, "
+      f"{result.timings['total_s']:.1f}s total)")
 
 # ---- part 2: out-of-core single node, killed and resumed -----------------
 spool_dir = "/tmp/repro_spool_example"
 shutil.rmtree(spool_dir, ignore_errors=True)
-sp = Spool(spool_dir)
-data_np = np.asarray(data[: 4 * 256])
-sizes2 = (256,) * 4
+oc = GraphBuilder(BuildConfig(
+    strategy="outofcore", k=k, lam=lam, n_subsets=4, seed=3,
+    spool_dir=spool_dir, subgraph_iters=10, inner_iters=5))
+data_oc = data[: 4 * 256]
 
-# simulate a crash: run, then forget the second construction stage
-g1 = build_out_of_core(jax.random.key(3), sp, data_np, sizes2, k=k, lam=lam,
-                       inner_iters=5, nnd_iters=10)
+# simulate a crash: run, then forget half of the pair-merge stage
+r1 = oc.build(data_oc)
+sp = r1.extras["spool"]
 man = sp.manifest()
 crash_at = len(man["pairs_done"]) // 2
 man["pairs_done"] = man["pairs_done"][:crash_at]   # pretend we died here
 sp.write_manifest(man)
 print(f"[out-of-core] 'crashed' after {crash_at} pair merges — resuming")
 t0 = time.time()
-g2 = build_out_of_core(jax.random.key(3), sp, data_np, sizes2, k=k, lam=lam,
-                       inner_iters=5, nnd_iters=10)
-gt2 = knn_bruteforce(jnp.asarray(data_np), k)
+r2 = oc.build(data_oc)
 print(f"[out-of-core] resumed in {time.time()-t0:.1f}s, "
-      f"recall@10={float(recall(g2, gt2.ids, 10)):.4f}")
+      f"recall@10={r2.recall(at=10):.4f}")

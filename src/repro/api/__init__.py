@@ -1,0 +1,17 @@
+"""Unified construction API — config-driven entry point for all backends.
+
+  from repro.api import BuildConfig, GraphBuilder
+
+  result = GraphBuilder(BuildConfig(strategy="twoway", k=16)).build(data)
+  index  = result.to_index()      # diversified, search-ready KnnIndex
+
+Strategies: twoway | multiway | hierarchy | distributed | outofcore —
+see :mod:`repro.api.builder`. New backends land here as a sixth strategy,
+not as another hand-wired pipeline.
+"""
+
+from repro.api.builder import GraphBuilder
+from repro.api.config import STRATEGIES, BuildConfig
+from repro.api.results import BuildResult
+
+__all__ = ["BuildConfig", "BuildResult", "GraphBuilder", "STRATEGIES"]

@@ -1,0 +1,199 @@
+"""``GraphBuilder`` — one entry point for every merge backend.
+
+The paper's pitch is that ONE primitive (Two-way Merge) covers the whole
+scale axis: single device, out-of-core, multi-node. This facade makes
+that true at the API level — callers pick a :class:`BuildConfig` strategy
+and get the same :class:`BuildResult` back:
+
+  ==============  =====================================================
+  ``twoway``      per-subset NN-Descent → Two-way Merge (Alg. 1)
+  ``multiway``    per-subset NN-Descent → Multi-way Merge (Alg. 2)
+  ``hierarchy``   bottom-up pairwise Two-way Merge tree (Fig. 3(a))
+  ``distributed`` Alg. 3 over a jax mesh (``ppermute`` exchange)
+  ``outofcore``   Alg. 3 on one node, two subsets resident (Spool)
+  ==============  =====================================================
+
+``repro.core.*`` stays the low-level kernel layer with unchanged
+signatures; this module only wires it together. Determinism contract
+(what the parity tests pin down): the root key is
+``jax.random.key(config.seed)`` unless overridden, subgraphs are built
+with ``fold_in(root, 1)`` and the merge stage runs with
+``fold_in(root, 2)`` — except outofcore, whose legacy entry point
+(:func:`~repro.core.outofcore.build_out_of_core`) owns both stages and
+receives ``root`` itself, so facade and legacy calls are bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import BuildConfig
+from repro.api.results import BuildResult
+from repro.core.graph import KnnGraph
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge, two_way_hierarchy
+from repro.core.nndescent import build_subgraphs
+from repro.core.twoway import merge_full, two_way_merge
+
+TraceFn = Callable[[KnnGraph, int, dict], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBuilder:
+    """Facade over every construction backend; see the module docstring.
+
+    >>> result = GraphBuilder(BuildConfig(strategy="multiway",
+    ...                                   n_subsets=4)).build(data)
+    >>> result.recall()          # vs the exact oracle
+    >>> index = result.to_index()  # diversified, search-ready
+    """
+
+    config: BuildConfig
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "GraphBuilder":
+        """Shorthand: ``GraphBuilder.from_kwargs(strategy="twoway", k=16)``."""
+        return cls(BuildConfig(**kw))
+
+    def build(self, data, *, key: jax.Array | None = None,
+              trace_fn: TraceFn | None = None) -> BuildResult:
+        """Build the full k-NN graph over ``data`` with the configured
+        strategy.
+
+        ``trace_fn(full_graph, round, stats)`` is invoked once per merge
+        round with the CURRENT full graph (cross graph merge-sorted into
+        G₀) — only the adaptive single-device strategies run a host-side
+        round loop, so only they can trace.
+        """
+        cfg = self.config
+        root = key if key is not None else jax.random.key(cfg.seed)
+        n = data.shape[0]
+        sizes = cfg.partition_sizes(n)
+        if trace_fn is not None and cfg.strategy not in ("twoway", "multiway"):
+            raise ValueError(
+                f"trace_fn requires a host-side round loop; "
+                f"{cfg.strategy!r} does not have one")
+        t_start = time.time()
+        build_fn = getattr(self, f"_build_{cfg.strategy}")
+        graph, stats, timings, extras = build_fn(root, data, sizes, trace_fn)
+        stats.setdefault("strategy", cfg.strategy)
+        timings["total_s"] = time.time() - t_start
+        return BuildResult(graph=graph, data=data, config=cfg, stats=stats,
+                           timings=timings, extras=extras)
+
+    def build_index(self, data, *, key: jax.Array | None = None):
+        """``build()`` + diversify: the one-call RAG/serving path."""
+        return self.build(data, key=key).to_index()
+
+    # ---- shared stage: per-subset NN-Descent ---------------------------
+
+    def _subgraphs(self, root, data, sizes):
+        cfg = self.config
+        t0 = time.time()
+        subs = build_subgraphs(jax.random.fold_in(root, 1), data, sizes,
+                               cfg.k, lam=cfg.lam,
+                               max_iters=cfg.subgraph_iters, delta=cfg.delta,
+                               metric=cfg.metric)
+        return subs, time.time() - t0
+
+    # ---- strategy implementations --------------------------------------
+
+    def _build_twoway(self, root, data, sizes, trace_fn):
+        return self._build_flat(root, data, sizes, trace_fn, two_way_merge)
+
+    def _build_multiway(self, root, data, sizes, trace_fn):
+        return self._build_flat(root, data, sizes, trace_fn, multi_way_merge)
+
+    def _build_flat(self, root, data, sizes, trace_fn, merge_fn):
+        cfg = self.config
+        subs, t_sub = self._subgraphs(root, data, sizes)
+        if len(sizes) == 1:          # degenerate m=1: nothing to merge
+            return subs[0], _empty_stats(), {"subgraphs_s": t_sub,
+                                             "merge_s": 0.0}, {}
+        g0 = concat_subgraphs(subs)
+        wrapped = None
+        if trace_fn is not None:
+            wrapped = lambda g, it, st: trace_fn(merge_full(g, g0), it, st)
+        t0 = time.time()
+        g_cross, stats = merge_fn(jax.random.fold_in(root, 2), data, sizes,
+                                  g0, lam=cfg.lam, k=cfg.k,
+                                  max_iters=cfg.max_iters, delta=cfg.delta,
+                                  metric=cfg.metric, trace_fn=wrapped)
+        graph = merge_full(g_cross, g0)
+        return graph, stats, {"subgraphs_s": t_sub,
+                              "merge_s": time.time() - t0}, {}
+
+    def _build_hierarchy(self, root, data, sizes, trace_fn):
+        cfg = self.config
+        subs, t_sub = self._subgraphs(root, data, sizes)
+        if len(sizes) == 1:
+            return subs[0], _empty_stats(), {"subgraphs_s": t_sub,
+                                             "merge_s": 0.0}, {}
+        t0 = time.time()
+        graph, stats = two_way_hierarchy(jax.random.fold_in(root, 2), data,
+                                         sizes, subs, lam=cfg.lam, k=cfg.k,
+                                         max_iters=cfg.max_iters,
+                                         delta=cfg.delta, metric=cfg.metric)
+        return graph, stats, {"subgraphs_s": t_sub,
+                              "merge_s": time.time() - t0}, {}
+
+    def _build_distributed(self, root, data, sizes, trace_fn):
+        from repro.core.distributed import build_distributed
+        from repro.launch.mesh import make_nodes_mesh
+        cfg = self.config
+        m = len(sizes)
+        n_dev = len(jax.devices())
+        if n_dev < m:
+            raise RuntimeError(
+                f"distributed build over {m} nodes needs {m} devices, have "
+                f"{n_dev}; set XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={m} before importing jax (or reduce n_subsets)")
+        subs, t_sub = self._subgraphs(root, data, sizes)
+        mesh = make_nodes_mesh(m)
+        g_ids = jnp.concatenate([s.ids for s in subs])
+        g_dists = jnp.concatenate([s.dists for s in subs])
+        t0 = time.time()
+        ids, dists = build_distributed(mesh, data, g_ids, g_dists,
+                                       jax.random.fold_in(root, 2), k=cfg.k,
+                                       lam=cfg.lam,
+                                       inner_iters=cfg.inner_iters,
+                                       metric=cfg.metric)
+        ids.block_until_ready()
+        graph = KnnGraph(ids=ids, dists=dists,
+                         flags=jnp.zeros_like(ids, dtype=bool))
+        stats: dict[str, Any] = {"nodes": m, "rounds": (m - 1 + 1) // 2,
+                                 "inner_iters": cfg.inner_iters}
+        extras = {"mesh": mesh, "subgraph_ids": g_ids,
+                  "subgraph_dists": g_dists}
+        return graph, stats, {"subgraphs_s": t_sub,
+                              "merge_s": time.time() - t0}, extras
+
+    def _build_outofcore(self, root, data, sizes, trace_fn):
+        import numpy as np
+
+        from repro.core.outofcore import Spool, build_out_of_core
+        cfg = self.config
+        spool = Spool(cfg.spool_dir)
+        # build_out_of_core owns both stages (subgraphs + pair merges) and
+        # its own key folding — pass root through so the facade is
+        # bit-identical to a direct legacy call (and resume keeps working).
+        phase_times: dict[str, float] = {}
+        graph = build_out_of_core(root, spool, np.asarray(data), sizes,
+                                  k=cfg.k, lam=cfg.lam,
+                                  inner_iters=cfg.inner_iters,
+                                  nnd_iters=cfg.subgraph_iters,
+                                  metric=cfg.metric,
+                                  phase_times=phase_times)
+        m = len(sizes)
+        stats = {"subsets": m, "pairs": len(spool.manifest()["pairs_done"])}
+        extras = {"spool": spool}
+        return graph, stats, phase_times, extras
+
+
+def _empty_stats() -> dict:
+    return {"updates": [], "evals": [], "iters": 0, "total_evals": 0}

@@ -1,0 +1,117 @@
+"""Build configuration for the unified construction facade.
+
+One frozen dataclass describes every way this repo can construct a k-NN
+graph; :class:`~repro.api.builder.GraphBuilder` dispatches on
+``strategy``. Validation happens eagerly at construction so a bad config
+fails before any compute, and per-dataset checks (partition divisibility)
+happen in :meth:`BuildConfig.partition_sizes`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.metrics import METRICS
+
+#: merge backends selectable via ``BuildConfig.strategy``
+STRATEGIES = ("twoway", "multiway", "hierarchy", "distributed", "outofcore")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Everything needed to build a k-NN graph, strategy included.
+
+    Attributes:
+      strategy:       one of :data:`STRATEGIES`.
+      k:              neighbors per vertex in the output graph.
+      lam:            the paper's λ — sample / reverse-cache cap per round.
+      metric:         ``"l2"`` (squared), ``"ip"`` or ``"cos"``.
+      delta:          NN-Descent convergence threshold (stop when a round's
+                      accepted updates fall below ``delta·n·k``).
+      max_iters:      merge-round cap for the adaptive strategies
+                      (twoway / multiway / hierarchy).
+      subgraph_iters: NN-Descent round cap for the per-subset builds.
+      inner_iters:    FIXED per-pair merge budget for the strategies that
+                      cannot read convergence on-host (distributed, outofcore).
+      n_subsets:      how many contiguous subsets to partition the data into
+                      (=: the paper's m; ignored when ``sizes`` is given).
+      sizes:          explicit partition sizes, overriding ``n_subsets``.
+      seed:           rng seed for the default build key.
+      spool_dir:      external-storage directory (required for outofcore).
+      alpha:          diversification slack for ``to_index`` (Eq. 1).
+      max_degree:     index-graph degree cap for ``to_index`` (default: k).
+    """
+
+    strategy: str = "twoway"
+    k: int = 16
+    lam: int = 8
+    metric: str = "l2"
+    delta: float = 0.001
+    max_iters: int = 30
+    subgraph_iters: int = 30
+    inner_iters: int = 8
+    n_subsets: int = 2
+    sizes: tuple[int, ...] | None = None
+    seed: int = 0
+    spool_dir: str | None = None
+    alpha: float = 1.1
+    max_degree: int | None = None
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        if self.metric not in METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; "
+                             f"expected one of {METRICS}")
+        for name in ("k", "lam", "max_iters", "subgraph_iters", "inner_iters"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        if self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+        if self.sizes is not None:
+            sizes = tuple(int(s) for s in self.sizes)
+            if not sizes or any(s < 1 for s in sizes):
+                raise ValueError(f"sizes must be positive, got {self.sizes}")
+            object.__setattr__(self, "sizes", sizes)
+            object.__setattr__(self, "n_subsets", len(sizes))
+        if self.n_subsets < 1:
+            raise ValueError(f"n_subsets must be >= 1, got {self.n_subsets}")
+        if self.strategy == "twoway" and self.n_subsets > 2:
+            raise ValueError(
+                f"twoway merges exactly 2 subsets, got n_subsets="
+                f"{self.n_subsets}; use multiway or hierarchy for m > 2")
+        if self.strategy == "outofcore" and not self.spool_dir:
+            raise ValueError("outofcore requires spool_dir (external storage)")
+
+    def partition_sizes(self, n: int) -> tuple[int, ...]:
+        """Per-subset sizes for an ``n``-vector dataset.
+
+        Explicit ``sizes`` must sum to ``n``. The distributed strategy
+        needs equal shards (one per mesh node), so ``n`` must divide by
+        ``n_subsets``; everything else folds the remainder into the last
+        subset.
+        """
+        if self.sizes is not None:
+            if sum(self.sizes) != n:
+                raise ValueError(
+                    f"sizes {self.sizes} sum to {sum(self.sizes)}, "
+                    f"dataset has {n} vectors")
+            if self.strategy == "distributed" and len(set(self.sizes)) > 1:
+                raise ValueError(
+                    f"distributed needs equal shards, got sizes={self.sizes}")
+            return self.sizes
+        m = self.n_subsets
+        if n < m:
+            raise ValueError(f"cannot split {n} vectors into {m} subsets")
+        if self.strategy == "distributed":
+            if n % m:
+                raise ValueError(
+                    f"distributed needs n divisible by n_subsets: "
+                    f"{n} % {m} == {n % m} (pad or pass explicit sizes)")
+            return (n // m,) * m
+        base = n // m
+        return (base,) * (m - 1) + (n - base * (m - 1),)
+
+    def replace(self, **kw) -> "BuildConfig":
+        return dataclasses.replace(self, **kw)

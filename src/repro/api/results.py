@@ -1,0 +1,68 @@
+"""Uniform build output: the same result object from every strategy.
+
+``BuildResult`` carries the finished graph plus everything downstream
+consumers need — per-round stats, per-phase timings, a recall hook
+against an exact oracle, and the ``diversify()``/``to_index()`` step that
+turns the k-NN graph into the search-ready index the RAG path serves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.graph import KnnGraph
+from repro.core.graph import recall as graph_recall
+
+
+@dataclasses.dataclass
+class BuildResult:
+    """What :meth:`repro.api.GraphBuilder.build` returns, every strategy.
+
+    Attributes:
+      graph:   the full k-NN graph over the whole dataset (global ids).
+      data:    the vectors the graph was built over (host or device array).
+      config:  the :class:`~repro.api.config.BuildConfig` that produced it.
+      stats:   merge statistics; always has ``"strategy"``, adaptive
+               strategies add ``"iters"`` / ``"total_evals"`` /
+               per-round ``"updates"`` / ``"evals"``.
+      timings: wall seconds per phase: ``"subgraphs_s"``, ``"merge_s"``,
+               ``"total_s"``.
+      extras:  strategy-specific artifacts (e.g. the distributed build's
+               mesh and concatenated subgraph arrays, for HLO dry-runs).
+    """
+
+    graph: KnnGraph
+    data: Any
+    config: Any
+    stats: dict
+    timings: dict
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def recall(self, gt_ids=None, at: int = 10) -> float:
+        """Recall@``at``; computes the brute-force oracle when not given."""
+        if gt_ids is None:
+            from repro.core.bruteforce import knn_bruteforce
+            gt_ids = knn_bruteforce(jnp.asarray(self.data),
+                                    max(at, self.config.k)).ids
+        return float(graph_recall(self.graph, gt_ids, at))
+
+    def diversify(self, alpha: float | None = None,
+                  max_degree: int | None = None) -> KnnGraph:
+        """α-prune the k-NN graph into an index graph (paper Eq. 1)."""
+        from repro.core.diversify import diversify as _diversify
+        cfg = self.config
+        return _diversify(self.graph, jnp.asarray(self.data),
+                          alpha=alpha if alpha is not None else cfg.alpha,
+                          metric=cfg.metric,
+                          max_degree=max_degree or cfg.max_degree or cfg.k)
+
+    def to_index(self, alpha: float | None = None,
+                 max_degree: int | None = None):
+        """Diversify and wrap into the search-ready :class:`KnnIndex`."""
+        from repro.retrieval.index import KnnIndex
+        return KnnIndex(graph=self.diversify(alpha, max_degree),
+                        data=jnp.asarray(self.data),
+                        metric=self.config.metric)

@@ -1,0 +1,64 @@
+"""jax version compatibility shims (single import site for moving APIs).
+
+The repo tracks current jax (``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.shard_map``) but must also run on the
+0.4.x line where those live elsewhere or don't exist. Everything
+version-sensitive funnels through here so call sites stay clean:
+
+  * :func:`make_mesh`      — concrete mesh, with Auto axis types when the
+                             installed jax supports them;
+  * :func:`abstract_mesh`  — ``AbstractMesh`` across both constructor
+                             signatures (0.4.x takes ``((name, size), …)``);
+  * :func:`shard_map`      — ``jax.shard_map`` or the experimental export.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x: meshes are implicitly fully auto
+    _AxisType = None
+
+try:  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {}
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # 0.4.x's replication checker mishandles nested jitted calls (returns
+    # a None rep and crashes); the modern default is unchecked anyway.
+    _SHARD_MAP_KW = {"check_rep": False}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if _AxisType is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(_AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Device-free ``AbstractMesh`` across both constructor generations."""
+    from jax.sharding import AbstractMesh
+
+    if _AxisType is not None:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                            axis_types=(_AxisType.Auto,) * len(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SHARD_MAP_KW)
+
+
+def axis_size(axis: str):
+    """``jax.lax.axis_size`` (>= 0.5), or its psum(1) equivalent."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.graph import INVALID_ID, KnnGraph, empty_graph
 from repro.core.localjoin import local_join_insert
 from repro.core.mergesort import merge_graphs
@@ -135,9 +136,9 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
         return g_i.ids, g_i.dists
 
     spec = P(axis, None)
-    fn = jax.shard_map(node_fn, mesh=mesh,
-                       in_specs=(P(axis, None), spec, spec),
-                       out_specs=(spec, spec))
+    fn = shard_map(node_fn, mesh=mesh,
+                   in_specs=(P(axis, None), spec, spec),
+                   out_specs=(spec, spec))
     return fn(data, g_ids, g_dists)
 
 

@@ -70,15 +70,21 @@ class Spool:
 def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                       sizes: Sequence[int], *, k: int, lam: int,
                       inner_iters: int = 8, nnd_iters: int = 20,
-                      metric: str = "l2") -> KnnGraph:
+                      metric: str = "l2",
+                      phase_times: dict | None = None) -> KnnGraph:
     """Full out-of-core build: subset NN-Descent + all-pairs Two-way Merge.
 
     ``data`` may be a numpy memmap — it is sliced per subset and only two
     subsets are device-resident at a time. Restartable via the manifest.
+    ``phase_times``, when passed, receives wall seconds per stage
+    (``"subgraphs_s"`` / ``"merge_s"``; near-zero for resumed stages).
     """
+    import time
+
     m = len(sizes)
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(int)
     man = spool.manifest()
+    t0 = time.time()
 
     # ---- stage 1: per-subset subgraphs, one at a time ------------------
     for i in range(m):
@@ -91,6 +97,10 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
         spool.put(f"g{i}", ids=g.ids, dists=g.dists, s=s_ids)
         man["subgraphs_done"] = sorted(set(man["subgraphs_done"]) | {i})
         spool.write_manifest(man)
+
+    if phase_times is not None:
+        phase_times["subgraphs_s"] = time.time() - t0
+    t0 = time.time()
 
     # ---- stage 2: pairwise merges, two subsets resident ----------------
     # Follows Alg. 3's pair order (node-major); each pair durable on finish.
@@ -148,6 +158,8 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
         man["pairs_done"].append(tag)
         spool.write_manifest(man)
 
+    if phase_times is not None:
+        phase_times["merge_s"] = time.time() - t0
     ids = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["ids"])
                            for i in range(m)])
     dists = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["dists"])

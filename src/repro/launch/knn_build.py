@@ -1,13 +1,18 @@
-"""Distributed k-NN graph construction launcher (paper Alg. 3).
+"""k-NN graph construction launcher — thin CLI over ``repro.api``.
 
-Run with m host devices (the multi-node stand-in; on real hardware the
-same shard_map runs over the pod's 'nodes' axis):
+Every backend behind one flag (paper Alg. 1–3):
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
-  python -m repro.launch.knn_build --nodes 8 --n 4096 --k 16
+  # distributed, m host devices standing in for TPU hosts
+  python -m repro.launch.knn_build --strategy distributed --nodes 8 --n 4096
 
-Also drives the out-of-core single-node mode (--out-of-core SPOOL_DIR),
-which is restartable — kill it mid-build and rerun to resume.
+  # out-of-core single node (restartable: kill mid-build and rerun)
+  python -m repro.launch.knn_build --strategy outofcore --spool /tmp/spool
+
+  # single-device merges
+  python -m repro.launch.knn_build --strategy twoway|multiway|hierarchy
+
+``--out-of-core SPOOL_DIR`` is kept as a legacy alias for
+``--strategy outofcore --spool SPOOL_DIR``.
 """
 
 from __future__ import annotations
@@ -18,70 +23,70 @@ import sys
 import time
 
 
-def main():
+def _ensure_host_devices(m: int) -> None:
+    """Make sure jax will see >= m host devices (must run pre-import)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={m}").strip()
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--strategy", default=None,
+                    choices=("twoway", "multiway", "hierarchy",
+                             "distributed", "outofcore"),
+                    help="merge backend (default: distributed, or "
+                         "outofcore when --out-of-core/--spool is given)")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="subset count m (mesh nodes for distributed; "
+                         "default 2 for twoway, else 4)")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--d", type=int, default=24)
     ap.add_argument("--k", type=int, default=12)
     ap.add_argument("--lam", type=int, default=6)
     ap.add_argument("--inner-iters", type=int, default=6)
     ap.add_argument("--nnd-iters", type=int, default=15)
-    ap.add_argument("--out-of-core", default=None, metavar="SPOOL_DIR")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spool", default=None, metavar="SPOOL_DIR")
+    ap.add_argument("--out-of-core", dest="spool_legacy", default=None,
+                    metavar="SPOOL_DIR", help=argparse.SUPPRESS)
     ap.add_argument("--eval", action="store_true",
                     help="compute recall@10 vs brute force")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    if args.out_of_core is None and "--xla_force_host_platform_device_count" \
-            not in os.environ.get("XLA_FLAGS", ""):
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.nodes}").strip()
+    spool = args.spool or args.spool_legacy
+    strategy = args.strategy or ("outofcore" if spool else "distributed")
+    if strategy == "outofcore" and not spool:
+        ap.error("--strategy outofcore requires --spool SPOOL_DIR")
+    if args.nodes is None:
+        args.nodes = 2 if strategy == "twoway" else 4
+    if strategy == "twoway" and args.nodes > 2:
+        ap.error(f"--strategy twoway merges exactly 2 subsets "
+                 f"(got --nodes {args.nodes}); use multiway or hierarchy")
+    if strategy == "distributed":
+        _ensure_host_devices(args.nodes)
 
     import jax
-    import jax.numpy as jnp
-    import numpy as np
 
+    from repro.api import BuildConfig, GraphBuilder
     from repro.data.vectors import sift_like
 
     n = args.n - args.n % args.nodes
+    cfg = BuildConfig(strategy=strategy, k=args.k, lam=args.lam,
+                      n_subsets=args.nodes, seed=args.seed,
+                      inner_iters=args.inner_iters,
+                      subgraph_iters=args.nnd_iters, spool_dir=spool)
     data = sift_like(jax.random.key(0), n, args.d)
     t0 = time.time()
-
-    if args.out_of_core:
-        from repro.core.outofcore import Spool, build_out_of_core
-        g = build_out_of_core(
-            jax.random.key(1), Spool(args.out_of_core), np.asarray(data),
-            (n // args.nodes,) * args.nodes, k=args.k, lam=args.lam,
-            inner_iters=args.inner_iters, nnd_iters=args.nnd_iters)
-        ids = g.ids
-    else:
-        from repro.core.distributed import build_distributed
-        from repro.core.graph import KnnGraph
-        from repro.core.nndescent import build_subgraphs
-        from repro.launch.mesh import make_nodes_mesh
-        mesh = make_nodes_mesh(args.nodes)
-        sizes = (n // args.nodes,) * args.nodes
-        subs = build_subgraphs(jax.random.key(2), data, sizes, args.k,
-                               lam=args.lam, max_iters=args.nnd_iters)
-        print(f"[knn_build] {args.nodes} subgraphs built "
-              f"({time.time()-t0:.1f}s)", flush=True)
-        ids, dists = build_distributed(
-            mesh, data, jnp.concatenate([s.ids for s in subs]),
-            jnp.concatenate([s.dists for s in subs]), jax.random.key(3),
-            k=args.k, lam=args.lam, inner_iters=args.inner_iters)
-        ids.block_until_ready()
-    print(f"[knn_build] graph built: n={n} k={args.k} "
-          f"({time.time()-t0:.1f}s total)", flush=True)
+    result = GraphBuilder(cfg).build(data)
+    print(f"[knn_build] {strategy}: graph built n={n} k={args.k} "
+          f"(subgraphs {result.timings['subgraphs_s']:.1f}s, "
+          f"merge {result.timings['merge_s']:.1f}s, "
+          f"{time.time() - t0:.1f}s total)", flush=True)
 
     if args.eval:
-        from repro.core.bruteforce import knn_bruteforce
-        from repro.core.graph import KnnGraph, recall
-        gt = knn_bruteforce(data, args.k)
-        g = KnnGraph(ids=jnp.asarray(ids),
-                     dists=jnp.zeros_like(jnp.asarray(ids), jnp.float32),
-                     flags=jnp.zeros_like(jnp.asarray(ids), bool))
-        r = float(recall(g, gt.ids, 10))
+        r = result.recall(at=10)
         print(f"[knn_build] recall@10 = {r:.4f}")
         sys.exit(0 if r > 0.8 else 2)
 

@@ -16,14 +16,14 @@ mesh re-enters cleanly from the checkpoint).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int | None = None, *, model_parallel: int = 0):
@@ -33,13 +33,12 @@ def make_mesh_for(n_devices: int | None = None, *, model_parallel: int = 0):
     while model > 1 and n % model:
         model //= 2
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_nodes_mesh(m: int):
     """1-D mesh for the distributed k-NN build (paper's m nodes)."""
-    return jax.make_mesh((m,), ("nodes",), axis_types=(AxisType.Auto,))
+    return make_mesh((m,), ("nodes",))
 
 
 def _largest_pow2_le(x: int) -> int:

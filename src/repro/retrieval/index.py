@@ -3,8 +3,10 @@ first-class framework feature (RAG / kNN-LM serving path).
 
 ``embed_corpus`` pools a model's final hidden states; ``KnnIndex.build``
 constructs the k-NN graph by the PAPER's pipeline — per-subset NN-Descent
-then Two-way/Multi-way graph merge (never a from-scratch global build) —
-and α-diversifies it into an index graph for beam search.
+then graph merge (never a from-scratch global build) — via the unified
+:class:`repro.api.GraphBuilder` facade, then α-diversifies it into an
+index graph for beam search. The raw k-NN path and this RAG path share
+that one construction surface.
 """
 
 from __future__ import annotations
@@ -13,15 +15,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.diversify import diversify
 from repro.core.graph import KnnGraph
-from repro.core.mergesort import concat_subgraphs
-from repro.core.multiway import multi_way_merge, two_way_hierarchy
-from repro.core.nndescent import build_subgraphs
 from repro.core.search import beam_search
-from repro.core.twoway import merge_full, two_way_merge
 from repro.models.model import Model
 
 
@@ -45,25 +41,15 @@ class KnnIndex:
               n_subsets: int = 2, method: str = "twoway",
               alpha: float = 1.1, max_degree: int | None = None,
               metric: str = "l2") -> "KnnIndex":
-        n = data.shape[0]
-        base = n // n_subsets
-        sizes = [base] * (n_subsets - 1) + [n - base * (n_subsets - 1)]
-        subs = build_subgraphs(jax.random.fold_in(key, 1), data, sizes, k,
-                               lam=lam, metric=metric)
-        g0 = concat_subgraphs(subs)
-        if n_subsets == 1:
-            full = subs[0]
-        elif method == "multiway" or n_subsets > 2:
-            gc, _ = multi_way_merge(jax.random.fold_in(key, 2), data, sizes,
-                                    g0, lam=lam, metric=metric)
-            full = merge_full(gc, g0)
-        else:
-            gc, _ = two_way_merge(jax.random.fold_in(key, 2), data, sizes,
-                                  g0, lam=lam, metric=metric)
-            full = merge_full(gc, g0)
-        idx_graph = diversify(full, data, alpha=alpha, metric=metric,
-                              max_degree=max_degree or k)
-        return cls(graph=idx_graph, data=data, metric=metric)
+        from repro.api import BuildConfig, GraphBuilder
+
+        # legacy contract: >2 subsets silently upgrade twoway → multiway
+        strategy = "multiway" if (method == "twoway" and n_subsets > 2) \
+            else method
+        cfg = BuildConfig(strategy=strategy, k=k, lam=lam, metric=metric,
+                          n_subsets=n_subsets, alpha=alpha,
+                          max_degree=max_degree)
+        return GraphBuilder(cfg).build(data, key=key).to_index()
 
     def search(self, queries: jax.Array, k: int = 10, beam: int = 32):
         ids, dists, evals = beam_search(self.graph, self.data, queries, k,

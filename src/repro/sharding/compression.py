@@ -16,6 +16,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def quantize(x: jax.Array):
     """fp→int8 with symmetric per-tensor scale. Returns (q, scale)."""
@@ -36,7 +38,7 @@ def compressed_psum(grads: Any, axis: str, error: Any):
     Returns (mean_grads, new_error). Must run inside shard_map with
     ``axis`` in scope.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
 
     def one(g, e):
         g32 = g.astype(jnp.float32) + e

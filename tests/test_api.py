@@ -1,0 +1,195 @@
+"""Unified Build API: config validation + exact parity with the legacy
+hand-chained pipelines (the facade must be wiring, not a new algorithm)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import STRATEGIES, BuildConfig, BuildResult, GraphBuilder
+from repro.core.mergesort import concat_subgraphs
+from repro.core.multiway import multi_way_merge
+from repro.core.nndescent import build_subgraphs
+from repro.core.twoway import merge_full, two_way_merge
+
+N, D, K, LAM = 400, 12, 8, 4
+FAST = dict(k=K, lam=LAM, max_iters=8, subgraph_iters=8)
+
+
+@pytest.fixture(scope="module")
+def data(small_data):
+    return small_data[:N, :D]
+
+
+def assert_graphs_identical(a, b):
+    assert bool(jnp.all(a.ids == b.ids)), "neighbor ids differ"
+    both = jnp.where(jnp.isinf(a.dists), 0.0, a.dists)
+    legacy = jnp.where(jnp.isinf(b.dists), 0.0, b.dists)
+    np.testing.assert_array_equal(np.asarray(both), np.asarray(legacy))
+
+
+# ---- parity: facade == legacy hand-chained pipeline ----------------------
+
+def test_twoway_parity(data):
+    key = jax.random.key(11)
+    res = GraphBuilder(BuildConfig(strategy="twoway", **FAST)).build(
+        data, key=key)
+    sizes = (N // 2, N // 2)
+    subs = build_subgraphs(jax.random.fold_in(key, 1), data, sizes, K,
+                           lam=LAM, max_iters=8)
+    g0 = concat_subgraphs(subs)
+    gc, st = two_way_merge(jax.random.fold_in(key, 2), data, sizes, g0,
+                           lam=LAM, max_iters=8)
+    assert_graphs_identical(res.graph, merge_full(gc, g0))
+    assert res.stats["total_evals"] == st["total_evals"]
+    assert res.stats["iters"] == st["iters"]
+
+
+def test_multiway_parity(data):
+    key = jax.random.key(13)
+    cfg = BuildConfig(strategy="multiway", n_subsets=4, **FAST)
+    res = GraphBuilder(cfg).build(data, key=key)
+    sizes = cfg.partition_sizes(N)
+    subs = build_subgraphs(jax.random.fold_in(key, 1), data, sizes, K,
+                           lam=LAM, max_iters=8)
+    g0 = concat_subgraphs(subs)
+    gc, st = multi_way_merge(jax.random.fold_in(key, 2), data, sizes, g0,
+                             lam=LAM, k=K, max_iters=8)
+    assert_graphs_identical(res.graph, merge_full(gc, g0))
+    assert res.stats["total_evals"] == st["total_evals"]
+
+
+def test_outofcore_parity(data, tmp_path):
+    from repro.core.outofcore import Spool, build_out_of_core
+    key = jax.random.key(17)
+    cfg = BuildConfig(strategy="outofcore", n_subsets=2, inner_iters=4,
+                      spool_dir=str(tmp_path / "facade"), **FAST)
+    res = GraphBuilder(cfg).build(data, key=key)
+    legacy = build_out_of_core(key, Spool(str(tmp_path / "legacy")),
+                               np.asarray(data), cfg.partition_sizes(N),
+                               k=K, lam=LAM, inner_iters=4, nnd_iters=8)
+    assert_graphs_identical(res.graph, legacy)
+    # restartability survives the facade: a rebuild resumes to the same graph
+    res2 = GraphBuilder(cfg).build(data, key=key)
+    assert bool(jnp.all(res2.graph.ids == res.graph.ids))
+
+
+def test_seed_determinism(data):
+    cfg = BuildConfig(strategy="twoway", seed=5, **FAST)
+    a = GraphBuilder(cfg).build(data)
+    b = GraphBuilder(cfg).build(data)
+    assert_graphs_identical(a.graph, b.graph)
+
+
+# ---- uniform result surface ----------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["twoway", "multiway", "hierarchy"])
+def test_uniform_build_result(data, strategy, small_gt):
+    cfg = BuildConfig(strategy=strategy, n_subsets=2, **FAST)
+    res = GraphBuilder(cfg).build(data)
+    assert isinstance(res, BuildResult)
+    assert res.graph.ids.shape == (N, K)
+    assert res.stats["strategy"] == strategy
+    for phase in ("subgraphs_s", "merge_s", "total_s"):
+        assert res.timings[phase] >= 0
+    assert 0.0 <= res.recall(at=5) <= 1.0
+
+
+def test_to_index_matches_knn_index(data):
+    from repro.retrieval.index import KnnIndex
+    key = jax.random.key(3)
+    idx = KnnIndex.build(key, data, k=K, lam=LAM, n_subsets=2)
+    cfg = BuildConfig(strategy="twoway", k=K, lam=LAM)
+    res = GraphBuilder(cfg).build(data, key=key)
+    assert bool(jnp.all(idx.graph.ids == res.to_index().graph.ids))
+    ids, _, _ = res.to_index().search(data[:3], k=4)
+    assert ids.shape == (3, 4)
+
+
+def test_single_subset_degenerates_to_nndescent(data):
+    res = GraphBuilder(BuildConfig(strategy="twoway", n_subsets=1,
+                                   **FAST)).build(data)
+    assert res.graph.ids.shape == (N, K)
+    assert res.stats["iters"] == 0          # nothing merged
+
+
+# ---- config validation ----------------------------------------------------
+
+def test_bad_strategy_rejected():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        BuildConfig(strategy="brute")
+
+
+def test_bad_metric_rejected():
+    with pytest.raises(ValueError, match="unknown metric"):
+        BuildConfig(metric="hamming")
+
+
+def test_bad_scalars_rejected():
+    with pytest.raises(ValueError, match="k must be"):
+        BuildConfig(k=0)
+    with pytest.raises(ValueError, match="delta"):
+        BuildConfig(delta=-0.1)
+    with pytest.raises(ValueError, match="n_subsets"):
+        BuildConfig(strategy="multiway", n_subsets=0)
+
+
+def test_twoway_rejects_many_subsets():
+    with pytest.raises(ValueError, match="exactly 2"):
+        BuildConfig(strategy="twoway", n_subsets=3)
+
+
+def test_outofcore_requires_spool():
+    with pytest.raises(ValueError, match="spool_dir"):
+        BuildConfig(strategy="outofcore")
+
+
+def test_non_divisible_distributed_sizes():
+    cfg = BuildConfig(strategy="distributed", n_subsets=3)
+    with pytest.raises(ValueError, match="divisible"):
+        cfg.partition_sizes(400)
+    with pytest.raises(ValueError, match="equal shards"):
+        BuildConfig(strategy="distributed",
+                    sizes=(100, 100, 200)).partition_sizes(400)
+
+
+def test_sizes_must_sum_to_n():
+    with pytest.raises(ValueError, match="sum"):
+        BuildConfig(sizes=(100, 100)).partition_sizes(400)
+
+
+def test_sizes_override_n_subsets():
+    cfg = BuildConfig(strategy="multiway", sizes=(100, 100, 200))
+    assert cfg.n_subsets == 3
+    assert cfg.partition_sizes(400) == (100, 100, 200)
+
+
+def test_remainder_goes_to_last_subset():
+    assert BuildConfig(strategy="multiway",
+                       n_subsets=3).partition_sizes(401) == (133, 133, 135)
+
+
+def test_distributed_needs_devices(data):
+    # the test process keeps the default single device (see conftest)
+    cfg = BuildConfig(strategy="distributed", n_subsets=4, **FAST)
+    with pytest.raises(RuntimeError, match="needs 4 devices"):
+        GraphBuilder(cfg).build(data)
+
+
+def test_trace_fn_only_on_round_loop_strategies(data, tmp_path):
+    cfg = BuildConfig(strategy="hierarchy", n_subsets=2, **FAST)
+    with pytest.raises(ValueError, match="trace_fn"):
+        GraphBuilder(cfg).build(data, trace_fn=lambda g, it, st: None)
+
+
+def test_trace_fn_sees_full_graph(data):
+    seen = []
+    res = GraphBuilder(BuildConfig(strategy="twoway", **FAST)).build(
+        data, trace_fn=lambda g, it, st: seen.append((g.ids.shape, it)))
+    assert len(seen) == res.stats["iters"]
+    assert all(shape == (N, K) for shape, _ in seen)
+
+
+def test_all_strategies_listed():
+    assert set(STRATEGIES) == {"twoway", "multiway", "hierarchy",
+                               "distributed", "outofcore"}

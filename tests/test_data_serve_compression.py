@@ -35,19 +35,20 @@ def test_quantize_roundtrip_bound():
 
 def test_error_feedback_converges():
     """int8-compressed gradient descent tracks the uncompressed optimum."""
-    from jax.sharding import AxisType
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import make_mesh, shard_map
+
     target = jnp.asarray([1.0, -2.0, 0.5, 3.0])
-    mesh = jax.make_mesh((1,), ("dp",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("dp",))
 
     def inner(w_, e_):
         g = {"w": 2 * (w_ - target)}
         g, e2 = compressed_psum(g, "dp", {"w": e_})
         return w_ - 0.05 * g["w"], e2["w"]
 
-    step = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=(P(), P()),
-                                 out_specs=(P(), P())))
+    step = jax.jit(shard_map(inner, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P())))
     w, e = jnp.zeros(4), jnp.zeros(4)
     for _ in range(200):
         w, e = step(w, e)

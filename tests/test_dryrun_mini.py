@@ -17,15 +17,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, os.environ["REPRO_SRC"])
 import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get, reduced
 from repro.models.model import build
 from repro.train.optim import AdamW
 from repro.train.step import make_serve_steps, make_train_step
 from repro.launch.hlo_stats import analyze
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced(get("qwen2-7b"))
 model = build(cfg)
 opt = AdamW()

@@ -2,7 +2,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import (INVALID_ID, KnnGraph, check_invariants,
                               empty_graph, random_graph, recall,

@@ -1,7 +1,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import INVALID_ID, empty_graph, check_invariants
 from repro.core.insertion import cap_scatter, insert_candidates, merge_rows

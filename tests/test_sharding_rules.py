@@ -3,9 +3,9 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, AxisType
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs import ARCH_NAMES, get
 from repro.models.model import build
 from repro.sharding import partition
@@ -14,7 +14,7 @@ from repro.sharding import partition
 def abstract_production_mesh(multi_pod=False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return abstract_mesh(shape, axes)
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
