@@ -1,0 +1,179 @@
+"""Local-join microbench: fused join_topk pipeline vs the seed triple stream.
+
+The inner loop of every merge figure is one local-join round:
+
+  legacy : pair_block (full (g,A,B) block to HBM) → join_triples
+           (E = 2·g·A·B flat triples) → two chained stable argsorts
+           (cap_scatter_twosort) → double sort_rows_dedupe merge.
+  fused  : join_topk (per-slot top-cap reduction before the stream exists,
+           E' = g·(A+B)·cap) → ONE packed-key sort → topk_merge merge.
+
+Emits ``name=value`` CSV rows plus ``BENCH_localjoin.json`` with
+rounds/sec, distance-evals/sec and the analytic peak candidate bytes for
+both arms, and a tiny interpret=True exercise of the Pallas kernel so the
+kernel path is covered even on the CPU oracle. Run with ``--toy`` in CI.
+
+    PYTHONPATH=src python benchmarks/bench_localjoin.py [--n 100000] [--toy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from common import Timer, dataset, emit  # noqa: E402
+
+from repro.core.graph import random_graph  # noqa: E402
+from repro.core import insertion as ins  # noqa: E402
+from repro.core import localjoin as lj  # noqa: E402
+from repro.core.sampling import (reverse_cap, sample_flagged,  # noqa: E402
+                                 union_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "metric", "variant"))
+def _round(g, data, lam: int, metric: str, variant: str):
+    """One NN-Descent-shaped local-join round under a pipeline variant."""
+    n = g.n
+    new, g = sample_flagged(g, lam)
+    new2 = union_cache(new, reverse_cap(new, n, lam))
+    joins = [(new2, new2, False, True)]
+    if variant == "fused":
+        return lj.local_join_insert(g, data, joins, metric, fused=True)
+    if variant == "stream":                      # triple stream, new sorts
+        return lj.local_join_insert(g, data, joins, metric, fused=False)
+    # seed pipeline: triple stream + two-sort scatter + two-pass merge
+    cap = g.k
+    all_r, all_c, all_d = [], [], []
+    n_evals = jnp.zeros((n,), jnp.int32)
+    for a_ids, b_ids, excl, sym in joins:
+        d, ne = lj.pair_block(data, a_ids, b_ids, metric,
+                              exclude_same_subset=excl, symmetric_dedupe=sym)
+        r, c, dd = lj.join_triples(a_ids, b_ids, d)
+        all_r.append(r); all_c.append(c); all_d.append(dd)
+        n_evals = n_evals + ne
+    rows = jnp.concatenate(all_r)
+    cols = jnp.concatenate(all_c)
+    dvals = jnp.concatenate(all_d)
+    cand_ids, cand_dists = ins.cap_scatter_twosort(rows, cols, dvals, n, cap)
+    g, n_upd = ins.merge_rows_twopass(g, cand_ids, cand_dists)
+    return g, n_upd, n_evals
+
+
+def candidate_bytes(n: int, lam: int, k: int, variant: str) -> int:
+    """Peak bytes of the materialized candidate stream feeding the sort."""
+    w = 2 * lam                                   # cache width of new2
+    if variant == "fused":
+        e = n * (w + w) * k                       # (A+B)·cap per group
+    else:
+        e = 2 * n * w * w                         # both directions, full block
+    per = 12                                      # int32 row + col, f32 dist
+    block = 0 if variant == "fused" else n * w * w * 4   # (g,A,B) spill
+    return e * per + block
+
+
+def bench_variant(data, *, k: int, lam: int, rounds: int, variant: str,
+                  metric: str = "l2"):
+    n = data.shape[0]
+    g = random_graph(jax.random.key(1), n, k, data)
+    # warmup / compile
+    g1, _, ev = _round(g, data, lam, metric, variant)
+    g1.ids.block_until_ready()
+    total_evals = 0
+    with Timer() as t:
+        gg = g
+        for _ in range(rounds):
+            gg, _, ev = _round(gg, data, lam, metric, variant)
+            total_evals += lj.eval_count(ev)
+        gg.ids.block_until_ready()
+    return {
+        "variant": variant,
+        "rounds": rounds,
+        "sec": round(t.s, 4),
+        "rounds_per_sec": round(rounds / t.s, 4),
+        "evals": total_evals,
+        "evals_per_sec": round(total_evals / t.s, 1),
+        "peak_candidate_bytes": candidate_bytes(n, lam, k, variant),
+    }
+
+
+def kernel_smoke() -> dict:
+    """Exercise the Pallas kernel under interpret=True vs the oracle.
+
+    Raises on divergence so the CI bench step fails loudly; ids must match
+    exactly, distances to float tolerance (lane padding may reorder the
+    matmul reduction by ~1 ulp, same contract as tests/test_join_topk.py).
+    """
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.join_topk import join_topk_pallas
+
+    rng = np.random.default_rng(0)
+    va = jnp.asarray(rng.normal(size=(4, 8, 16)).astype(np.float32))
+    aid = jnp.asarray(rng.integers(-1, 40, (4, 8)).astype(np.int32))
+    got = join_topk_pallas(va, va, aid, aid, 4, symmetric=True,
+                           interpret=True)
+    want = ref.join_topk(va, va, aid, aid, 4, symmetric=True)
+    for name, g_, w in zip(("fwd_ids", "fwd_d", "rev_ids", "rev_d", "evals"),
+                           got, want):
+        g_, w = np.asarray(g_), np.asarray(w)
+        if w.dtype == np.float32:
+            np.testing.assert_array_equal(np.isinf(g_), np.isinf(w),
+                                          err_msg=name)
+            np.testing.assert_allclose(np.where(np.isinf(g_), 0, g_),
+                                       np.where(np.isinf(w), 0, w),
+                                       rtol=1e-5, atol=1e-5, err_msg=name)
+        else:
+            np.testing.assert_array_equal(g_, w, err_msg=name)
+    return {"interpret_parity": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=24)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--lam", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--toy", action="store_true",
+                    help="CI smoke: n=2000, 2 rounds")
+    ap.add_argument("--out", default="BENCH_localjoin.json")
+    args = ap.parse_args(argv)
+    if args.toy:
+        args.n, args.rounds = 2000, 2
+    data = dataset(args.n, args.d)
+    results = {"n": args.n, "d": args.d, "k": args.k, "lam": args.lam,
+               "backend": jax.default_backend(), "variants": []}
+    for variant in ("seed", "fused"):
+        row = bench_variant(data, k=args.k, lam=args.lam,
+                            rounds=args.rounds, variant=variant)
+        results["variants"].append(row)
+        emit({"bench": "localjoin", "n": args.n, **row})
+    seed_row, fused_row = results["variants"]
+    results["fused_speedup"] = round(
+        fused_row["rounds_per_sec"] / seed_row["rounds_per_sec"], 3)
+    results["candidate_bytes_ratio"] = round(
+        seed_row["peak_candidate_bytes"]
+        / fused_row["peak_candidate_bytes"], 3)
+    results["kernel"] = kernel_smoke()
+    emit({"bench": "localjoin", "fused_speedup": results["fused_speedup"],
+          "candidate_bytes_ratio": results["candidate_bytes_ratio"],
+          "kernel_parity": results["kernel"]["interpret_parity"]})
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+
+
+def run(n: int = 2000, rounds: int = 2):
+    """Entry point for ``benchmarks.run`` (CPU-scale defaults)."""
+    main(["--n", str(n), "--rounds", str(rounds)])
+
+
+if __name__ == "__main__":
+    main()

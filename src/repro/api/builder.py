@@ -98,7 +98,7 @@ class GraphBuilder:
         subs = build_subgraphs(jax.random.fold_in(root, 1), data, sizes,
                                cfg.k, lam=cfg.lam,
                                max_iters=cfg.subgraph_iters, delta=cfg.delta,
-                               metric=cfg.metric)
+                               metric=cfg.metric, fused=cfg.fused_localjoin)
         return subs, time.time() - t0
 
     # ---- strategy implementations --------------------------------------
@@ -123,7 +123,9 @@ class GraphBuilder:
         g_cross, stats = merge_fn(jax.random.fold_in(root, 2), data, sizes,
                                   g0, lam=cfg.lam, k=cfg.k,
                                   max_iters=cfg.max_iters, delta=cfg.delta,
-                                  metric=cfg.metric, trace_fn=wrapped)
+                                  metric=cfg.metric,
+                                  fused=cfg.fused_localjoin,
+                                  trace_fn=wrapped)
         graph = merge_full(g_cross, g0)
         return graph, stats, {"subgraphs_s": t_sub,
                               "merge_s": time.time() - t0}, {}
@@ -138,7 +140,8 @@ class GraphBuilder:
         graph, stats = two_way_hierarchy(jax.random.fold_in(root, 2), data,
                                          sizes, subs, lam=cfg.lam, k=cfg.k,
                                          max_iters=cfg.max_iters,
-                                         delta=cfg.delta, metric=cfg.metric)
+                                         delta=cfg.delta, metric=cfg.metric,
+                                         fused=cfg.fused_localjoin)
         return graph, stats, {"subgraphs_s": t_sub,
                               "merge_s": time.time() - t0}, {}
 
@@ -162,7 +165,8 @@ class GraphBuilder:
                                        jax.random.fold_in(root, 2), k=cfg.k,
                                        lam=cfg.lam,
                                        inner_iters=cfg.inner_iters,
-                                       metric=cfg.metric)
+                                       metric=cfg.metric,
+                                       fused=cfg.fused_localjoin)
         ids.block_until_ready()
         graph = KnnGraph(ids=ids, dists=dists,
                          flags=jnp.zeros_like(ids, dtype=bool))
@@ -188,6 +192,7 @@ class GraphBuilder:
                                   inner_iters=cfg.inner_iters,
                                   nnd_iters=cfg.subgraph_iters,
                                   metric=cfg.metric,
+                                  fused=cfg.fused_localjoin,
                                   phase_times=phase_times)
         m = len(sizes)
         stats = {"subsets": m, "pairs": len(spool.manifest()["pairs_done"])}

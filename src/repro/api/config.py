@@ -40,6 +40,11 @@ class BuildConfig:
       spool_dir:      external-storage directory (required for outofcore).
       alpha:          diversification slack for ``to_index`` (Eq. 1).
       max_degree:     index-graph degree cap for ``to_index`` (default: k).
+      fused_localjoin: route local-join rounds through the fused
+                      ``join_topk`` candidate pipeline (default). ``False``
+                      falls back to the legacy triple-stream path — same
+                      graph quality, strictly more candidate memory traffic
+                      (kept for parity tests and benchmarking).
     """
 
     strategy: str = "twoway"
@@ -56,6 +61,7 @@ class BuildConfig:
     spool_dir: str | None = None
     alpha: float = 1.1
     max_degree: int | None = None
+    fused_localjoin: bool = True
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:

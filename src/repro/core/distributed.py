@@ -46,7 +46,7 @@ from repro.core.sampling import (reverse_cap, sample_flagged, support_graph,
 
 def pair_two_way_fixed(key: jax.Array, seg: jax.Array, n_left: int,
                        s_ids: jax.Array, *, k: int, lam: int, iters: int,
-                       metric: str = "l2"):
+                       metric: str = "l2", fused: bool = True):
     """Jittable Two-way Merge over a concatenated [left | right] segment.
 
     ``seg``: (n_left + n_right, d) vectors; ``s_ids``: (n, 2λ) supporting
@@ -68,18 +68,19 @@ def pair_two_way_fixed(key: jax.Array, seg: jax.Array, n_left: int,
             new, g = sample_flagged(g, lam)
         new2 = union_cache(new, reverse_cap(new, n, lam))
         g, _, _ = local_join_insert(g, seg, [(new2, s_ids, False, False)],
-                                    metric)
+                                    metric, fused=fused)
     return g
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "axis", "k", "lam", "inner_iters", "metric",
-                     "start_round"))
+                     "start_round", "fused"))
 def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
                       g_dists: jax.Array, key: jax.Array, *, axis: str = "nodes",
                       k: int, lam: int, inner_iters: int = 8,
-                      metric: str = "l2", start_round: int = 1):
+                      metric: str = "l2", start_round: int = 1,
+                      fused: bool = True):
     """Alg. 3 across the ``axis`` dimension of ``mesh``.
 
     data   : (n, d)  row-sharded over ``axis``  — node i holds subset C_i
@@ -116,7 +117,8 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
                 axis=0)
             kk = jax.random.fold_in(jax.random.fold_in(key, r), i)
             g_cross = pair_two_way_fixed(kk, seg, n_loc, s_pair, k=k, lam=lam,
-                                         iters=inner_iters, metric=metric)
+                                         iters=inner_iters, metric=metric,
+                                         fused=fused)
             j_base = j * n_loc
             # my half: neighbors live in C_j (local ids ≥ n_loc) → global
             mine = KnnGraph(
@@ -144,7 +146,7 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
 
 def reference_pairwise(key: jax.Array, data, sizes: Sequence[int],
                        subgraphs, *, k: int, lam: int, inner_iters: int = 8,
-                       metric: str = "l2"):
+                       metric: str = "l2", fused: bool = True):
     """Single-device oracle for Alg. 3: run every unordered pair merge
     sequentially and merge-sort the halves — the schedule-free fixed point
     the distributed build must match exactly (property test)."""
@@ -176,7 +178,8 @@ def reference_pairwise(key: jax.Array, data, sizes: Sequence[int],
                  jnp.where(s_all[j] == INVALID_ID, INVALID_ID, s_all[j] + ni)])
             kk = jax.random.fold_in(jax.random.fold_in(key, rr), i)
             g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
-                                         iters=inner_iters, metric=metric)
+                                         iters=inner_iters, metric=metric,
+                                         fused=fused)
             mine = KnnGraph(
                 ids=jnp.where(g_cross.ids[:ni] == INVALID_ID, INVALID_ID,
                               g_cross.ids[:ni] - ni + starts[j]),

@@ -4,17 +4,27 @@ The paper inserts candidate edges into per-vertex lists under locks. Here a
 round's candidate edges are flattened to ``(row, col, dist)`` triples and
 merged with one deterministic, fully-vectorized pipeline:
 
-  1. ``cap_scatter``  — sort triples by (row, dist), rank within the row
-     segment, keep ranks < cap, scatter into a dense ``(n, cap)`` buffer.
-     (Lossless for the final top-k whenever cap ≥ k: at most k candidates can
-     enter a row's top-k.)
-  2. ``merge_rows``   — concatenate existing row + candidate buffer, dedupe
-     by id (existing entries win so their flags survive), sort by distance,
-     truncate to k. New survivors carry flag=True (the paper's "new" mark).
+  1. ``cap_scatter``  — ONE fused sort over a packed ``(row, monotone-bits
+     (dist))`` key (two chained stable argsorts in the seed), rank within
+     the row segment, keep ranks < cap, scatter into a dense ``(n, cap)``
+     buffer. (Lossless for the final top-k whenever cap ≥ k: at most k
+     candidates can enter a row's top-k.) ``dedupe=True`` additionally
+     collapses duplicate edges — paper-idempotent try-insert, opt-in
+     because it shifts the pinned round-count baselines (DESIGN.md).
+  2. ``merge_rows``   — sorted-merge the candidate buffer into the existing
+     rows via the ``topk_merge`` kernel (rank sort, duplicate ids keep the
+     existing slot) and recover flags + the paper's ``n_updates`` convergence
+     counter from a single membership pass — no full re-sort, no second
+     dedupe pass.
 
 The same ``cap_scatter`` primitive also builds the paper's capped reverse
 caches R[i] (``R[u].size < λ`` gate ⇒ first-λ-by-distance wins here; the
 paper's first-λ-by-arrival is scheduling noise on CPU threads).
+
+The seed implementations are kept as ``cap_scatter_twosort`` /
+``merge_rows_twopass`` — they are the baseline arm of
+``benchmarks/bench_localjoin.py`` and the equivalence ground truth in
+``tests/test_join_topk.py``. Memory math and tie-handling: DESIGN.md.
 """
 
 from __future__ import annotations
@@ -23,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import INVALID_ID, KnnGraph, sort_rows_dedupe
+from repro.kernels import ops as kops
 
 
 def _lexsort_rows_key(rows: jax.Array, secondary: jax.Array):
@@ -33,33 +44,64 @@ def _lexsort_rows_key(rows: jax.Array, secondary: jax.Array):
     return order_a[order_b]
 
 
-def segment_ranks(sorted_rows: jax.Array) -> jax.Array:
-    """Rank of each element within its (contiguous) row segment."""
+def _monotone_u32(d: jax.Array) -> jax.Array:
+    """float32 → uint32 with the same total order (IEEE-754 key trick).
+
+    Non-negative floats map to ``bits | 0x80000000``; negatives flip all
+    bits. ±0.0 are collapsed first so equal distances get equal keys.
+    """
+    d = jnp.where(d == 0.0, 0.0, d).astype(jnp.float32)
+    b = jax.lax.bitcast_convert_type(d, jnp.uint32)
+    neg = (b >> jnp.uint32(31)) == jnp.uint32(1)
+    return jnp.where(neg, ~b, b | jnp.uint32(0x80000000))
+
+
+def segment_ranks(sorted_rows: jax.Array, kept: jax.Array | None = None):
+    """Rank of each element within its (contiguous) row segment.
+
+    With ``kept`` (bool mask), ranks count only kept predecessors — the
+    rank a dropped-duplicate-free stream would assign. Ranks of non-kept
+    elements are meaningless (callers must mask them out).
+    """
     e = sorted_rows.shape[0]
     idx = jnp.arange(e, dtype=jnp.int32)
     is_start = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_rows[1:] != sorted_rows[:-1]])
     seg_start = jax.lax.associative_scan(
         jnp.maximum, jnp.where(is_start, idx, 0))
-    return idx - seg_start
+    if kept is None:
+        return idx - seg_start
+    kept_excl = jnp.cumsum(kept.astype(jnp.int32)) - kept  # exclusive prefix
+    return kept_excl - kept_excl[seg_start]
 
 
-def cap_scatter(rows: jax.Array, cols: jax.Array, dists: jax.Array,
-                n: int, cap: int, by_dist: bool = True):
-    """Dense (n, cap) buffers holding ≤cap candidates per row.
+def _sort_triples(rows: jax.Array, bits: jax.Array, cols: jax.Array,
+                  dists: jax.Array, by_col_too: bool = False):
+    """ONE fused ascending sort of triples by (row, key-bits[, col]).
 
-    rows/cols: (E,) int32; dists: (E,) float32. Entries with row or col == -1
-    are dropped. When ``by_dist`` the cap keeps the *closest* candidates,
-    otherwise an arbitrary-but-deterministic subset (used for reverse caches).
-    Returns (cand_ids, cand_dists): (n, cap) with -1/+inf padding.
+    With x64 available the first two keys pack into a single uint64
+    ``row << 32 | bits``; otherwise ``lax.sort`` runs a single variadic
+    sort with ``num_keys=2`` — either way one sort pass replaces the
+    seed's two chained stable argsorts plus their gather fan-out.
+    ``by_col_too`` adds ``col`` as a tie-breaking key (dedupe mode needs
+    every copy of the same edge adjacent even when a *distinct*
+    equal-distance candidate interleaves the stream).
     """
-    invalid = (rows == INVALID_ID) | (cols == INVALID_ID)
-    rows = jnp.where(invalid, n, rows)  # park invalids in a virtual row n
-    key2 = dists if by_dist else cols.astype(jnp.float32)
-    order = _lexsort_rows_key(rows, key2)
-    r_s, c_s, d_s = rows[order], cols[order], dists[order]
-    rank = segment_ranks(r_s)
-    keep = (rank < cap) & (r_s < n)
+    if jax.config.x64_enabled:
+        packed = (rows.astype(jnp.uint64) << jnp.uint64(32)) | bits.astype(
+            jnp.uint64)
+        packed, c_s, d_s = jax.lax.sort((packed, cols, dists),
+                                        num_keys=2 if by_col_too else 1,
+                                        is_stable=True)
+        r_s = (packed >> jnp.uint64(32)).astype(jnp.int32)
+        b_s = (packed & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+        return r_s, b_s, c_s, d_s
+    return jax.lax.sort((rows, bits, cols, dists),
+                        num_keys=3 if by_col_too else 2, is_stable=True)
+
+
+def _scatter_capped(r_s, c_s, d_s, keep, rank, n: int, cap: int):
+    """Scatter rank<cap survivors of a row-sorted stream into (n, cap)."""
     out_ids = jnp.full((n + 1, cap), INVALID_ID, dtype=jnp.int32)
     out_dists = jnp.full((n + 1, cap), jnp.inf, dtype=jnp.float32)
     r_t = jnp.where(keep, r_s, n)
@@ -71,6 +113,65 @@ def cap_scatter(rows: jax.Array, cols: jax.Array, dists: jax.Array,
     return out_ids[:n], out_dists[:n]
 
 
+def cap_scatter(rows: jax.Array, cols: jax.Array, dists: jax.Array,
+                n: int, cap: int, by_dist: bool = True,
+                dedupe: bool = False):
+    """Dense (n, cap) buffers holding ≤cap candidates per row — one sort.
+
+    rows/cols: (E,) int32; dists: (E,) float32. Entries with row or col == -1
+    are dropped. When ``by_dist`` the cap keeps the *closest* candidates,
+    otherwise an arbitrary-but-deterministic subset (used for reverse caches).
+    ``dedupe`` collapses exact duplicates — same (row, col) with bit-equal
+    sort key, i.e. the same edge produced by several join slots in one round
+    — to their first copy so they cannot crowd distinct candidates out of
+    the cap. Off by default: it makes try-insert idempotent like the
+    paper's, but changes round dynamics vs the pinned baselines (measured
+    ~3× fewer rounds to convergence at equal quality — see DESIGN.md).
+    Returns (cand_ids, cand_dists): (n, cap) with -1/+inf padding.
+    """
+    invalid = (rows == INVALID_ID) | (cols == INVALID_ID)
+    rows = jnp.where(invalid, n, rows)  # park invalids in a virtual row n
+    key2 = dists if by_dist else cols.astype(jnp.float32)
+    bits = _monotone_u32(key2)
+    r_s, b_s, c_s, d_s = _sort_triples(rows, bits, cols, dists,
+                                       by_col_too=dedupe)
+    if dedupe:
+        dup = jnp.concatenate(
+            [jnp.zeros((1,), bool),
+             (r_s[1:] == r_s[:-1]) & (b_s[1:] == b_s[:-1])
+             & (c_s[1:] == c_s[:-1])])
+        rank = segment_ranks(r_s, kept=~dup)
+        keep = ~dup & (rank < cap) & (r_s < n)
+    else:
+        rank = segment_ranks(r_s)
+        keep = (rank < cap) & (r_s < n)
+    return _scatter_capped(r_s, c_s, d_s, keep, rank, n, cap)
+
+
+def cap_scatter_twosort(rows: jax.Array, cols: jax.Array, dists: jax.Array,
+                        n: int, cap: int, by_dist: bool = True):
+    """The seed's two-chained-argsort cap_scatter (no duplicate collapse).
+
+    Kept as the legacy baseline for the single-sort equivalence test and
+    the ``bench_localjoin`` comparison — not used by the build pipeline.
+    """
+    invalid = (rows == INVALID_ID) | (cols == INVALID_ID)
+    rows = jnp.where(invalid, n, rows)
+    key2 = dists if by_dist else cols.astype(jnp.float32)
+    order = _lexsort_rows_key(rows, key2)
+    r_s, c_s, d_s = rows[order], cols[order], dists[order]
+    rank = segment_ranks(r_s)
+    keep = (rank < cap) & (r_s < n)
+    return _scatter_capped(r_s, c_s, d_s, keep, rank, n, cap)
+
+
+def _mask_self(cand_ids: jax.Array, cand_dists: jax.Array, n: int):
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    self_hit = cand_ids == rows
+    return (jnp.where(self_hit, INVALID_ID, cand_ids),
+            jnp.where(self_hit, jnp.inf, cand_dists))
+
+
 def merge_rows(g: KnnGraph, cand_ids: jax.Array, cand_dists: jax.Array,
                self_rows: bool = True):
     """Merge candidate buffers into graph rows; returns (graph, n_updates).
@@ -78,14 +179,40 @@ def merge_rows(g: KnnGraph, cand_ids: jax.Array, cand_dists: jax.Array,
     Candidates equal to the row index are dropped (no self edges). Duplicate
     ids keep the existing slot (flag preserved); fresh survivors get
     flag=True. ``n_updates`` counts candidate entries that made it into the
-    final top-k (the paper's convergence counter).
+    final top-k (the paper's convergence counter), returned as per-row
+    int32 counts (each ≤ k — a scalar int32 total would wrap past 2³¹
+    updates, i.e. n·k at billion scale; total with
+    :func:`repro.core.localjoin.eval_count`).
+
+    One ``topk_merge`` (Pallas rank-sort kernel on TPU, jnp oracle
+    elsewhere) + one membership pass replace the seed's two full
+    ``sort_rows_dedupe`` sweeps: an output id present in the old row IS the
+    old slot (duplicate suppression keeps the row side), so flags transfer
+    by lookup and fresh survivors are exactly the non-members.
     """
     n, k = g.ids.shape
     if self_rows:
-        rows = jnp.arange(n, dtype=jnp.int32)[:, None]
-        self_hit = cand_ids == rows
-        cand_ids = jnp.where(self_hit, INVALID_ID, cand_ids)
-        cand_dists = jnp.where(self_hit, jnp.inf, cand_dists)
+        cand_ids, cand_dists = _mask_self(cand_ids, cand_dists, n)
+    ids_f, dists_f = kops.topk_merge(g.ids, g.dists, cand_ids, cand_dists)
+    valid = ids_f != INVALID_ID
+    same = (ids_f[:, :, None] == g.ids[:, None, :]) & (
+        g.ids[:, None, :] != INVALID_ID)
+    was_old = jnp.any(same, axis=2)
+    old_flag = jnp.any(same & g.flags[:, None, :], axis=2)
+    flags_f = jnp.where(was_old, old_flag, valid)
+    n_updates = jnp.sum(valid & ~was_old, axis=1, dtype=jnp.int32)
+    return KnnGraph(ids=ids_f, dists=dists_f, flags=flags_f), n_updates
+
+
+def merge_rows_twopass(g: KnnGraph, cand_ids: jax.Array,
+                       cand_dists: jax.Array, self_rows: bool = True):
+    """The seed's double-``sort_rows_dedupe`` merge (legacy baseline only).
+
+    Same per-row int32 ``n_updates`` contract as :func:`merge_rows`.
+    """
+    n, k = g.ids.shape
+    if self_rows:
+        cand_ids, cand_dists = _mask_self(cand_ids, cand_dists, n)
     w_ids = jnp.concatenate([g.ids, cand_ids], axis=1)
     w_dists = jnp.concatenate([g.dists, cand_dists], axis=1)
     w_flags = jnp.concatenate(
@@ -95,12 +222,11 @@ def merge_rows(g: KnnGraph, cand_ids: jax.Array, cand_dists: jax.Array,
          jnp.zeros_like(cand_ids, dtype=bool)], axis=1)
     is_new = ~prefer
     ids_f, dists_f, flags_f = sort_rows_dedupe(w_ids, w_dists, w_flags, prefer)
-    # count survivors that came from the candidate side: re-run the dedupe
-    # bookkeeping on the marker plane by treating it as the flag.
     _, _, new_f = sort_rows_dedupe(w_ids, w_dists, is_new, prefer)
     out = KnnGraph(ids=ids_f[:, :k], dists=dists_f[:, :k],
                    flags=flags_f[:, :k])
-    n_updates = jnp.sum(new_f[:, :k] & (ids_f[:, :k] != INVALID_ID))
+    n_updates = jnp.sum(new_f[:, :k] & (ids_f[:, :k] != INVALID_ID),
+                        axis=1, dtype=jnp.int32)
     return out, n_updates
 
 

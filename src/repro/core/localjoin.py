@@ -1,18 +1,29 @@
-"""Local-Join: the paper's hot spot, as batched gathered pair-distances.
+"""Local-Join: the paper's hot spot, as a fused on-chip candidate pipeline.
 
 Per vertex i the paper double-loops ``for v in new[i], u in S[i]: d=metric(u,v);
-try-insert both ways``. Here a whole round is three dense steps:
+try-insert both ways``. The seed ran a whole round as three dense steps —
+gather blocks, full ``(g, A, B)`` pair distances spilled to HBM, flatten to
+``E = 2·g·A·B`` triples, two chained full-length sorts — the memory-bound
+triple stream that bounded every figure's wall time.
 
-  1. gather operand blocks  A=(n, A, d), B=(n, B, d)
-  2. pair distances         D=(n, A, B)   — `‖u‖²+‖v‖²−2u·vᵀ` on the MXU
-                             (Pallas ``pairdist`` kernel on TPU, jnp oracle
-                             elsewhere), invalid / self / same-subset pairs
-                             masked to +inf
-  3. flatten to (row, col, dist) triples both directions and run the
-     lock-free insertion pipeline (``insertion.py``).
+The fused path (default) collapses steps 2–3 into one ``join_topk`` call
+(Pallas kernel on TPU, jnp oracle elsewhere): pair distances are reduced to
+per-slot top-``cap`` candidate blocks **before anything leaves the chip**,
+so the insertion sort sees ``E' = g·(A+B)·cap`` pre-sorted candidates
+instead of the raw cross product — lossless for the final top-k whenever
+``cap ≥ k`` (a single join slot can contribute at most k survivors to a
+row). See DESIGN.md for the memory math.
 
-Row-blocking bounds the peak (n, A, B) footprint; distance-evaluation counts
-(the paper's cost proxy) are returned for the benchmark harness.
+``fused=False`` keeps the seed's triple-stream candidate generation (same
+single-sort scatter + kernel merge downstream) — it is the parity ground
+truth for tests and the baseline arm of ``bench_localjoin``.
+
+Distance-evaluation counts (the paper's cost proxy) are returned as a
+chunked int32 partial-sum vector (4096 rows per chunk) and totaled
+exactly on the host in int64 (``eval_count``) — a device-side int32
+scalar overflows past ~2.1B evals, i.e. exactly the paper's
+billion-scale regime, and a full per-row readback would move 4 GB per
+round at n = 10⁹.
 """
 
 from __future__ import annotations
@@ -22,6 +33,38 @@ import jax.numpy as jnp
 
 from repro.core.graph import INVALID_ID, KnnGraph
 from repro.core.insertion import cap_scatter, merge_rows
+from repro.kernels import ops as kops
+
+
+#: rows per device-side partial sum. A chunk total stays inside int32 as
+#: long as a row evaluates < 2^31 / 4096 ≈ 524k pairs — i.e. per-round
+#: join widths Σ A·B < 2^19, far above any λ this repo runs.
+_EVAL_CHUNK = 4096
+
+
+def _partial_evals(per_row: jax.Array) -> jax.Array:
+    """(n,) int32 per-row counts → (⌈n/4096⌉,) int32 chunk partials.
+
+    Keeps the host transfer tiny (≈1 MB per round at n = 10⁹ instead of
+    4 GB) while every partial stays exactly representable in int32; the
+    final cross-chunk total happens on host in int64 (:func:`eval_count`).
+    """
+    n = per_row.shape[0]
+    pad = (-n) % _EVAL_CHUNK
+    v = jnp.pad(per_row, (0, pad))
+    return jnp.sum(v.reshape(-1, _EVAL_CHUNK), axis=1, dtype=jnp.int32)
+
+
+def eval_count(n_evals) -> int:
+    """Exact host-side total of per-chunk eval counts (overflow-safe).
+
+    Device accumulation is kept int32 per chunk (see ``_EVAL_CHUNK``); the
+    cross-chunk reduction happens here in int64 so the total survives the
+    billion-scale regime even with x64 disabled.
+    """
+    import numpy as np
+
+    return int(np.asarray(jax.device_get(n_evals)).sum(dtype=np.int64))
 
 
 def pair_block(data: jax.Array, a_ids: jax.Array, b_ids: jax.Array,
@@ -32,10 +75,9 @@ def pair_block(data: jax.Array, a_ids: jax.Array, b_ids: jax.Array,
 
     ``symmetric_dedupe`` drops the lower triangle for self-joins (new × new)
     so each unordered pair is evaluated once, like the paper's pairwise loop.
-    Returns (dists, n_evals) — masked entries are +inf.
+    Returns (dists, n_evals) — masked entries are +inf, ``n_evals`` is the
+    per-group (g,) int32 count of evaluated pairs.
     """
-    from repro.kernels import ops as kops
-
     va = data[jnp.maximum(a_ids, 0)]          # (g, A, d)
     vb = data[jnp.maximum(b_ids, 0)]          # (g, B, d)
     d = kops.pairdist(va, vb, metric=metric)  # (g, A, B)
@@ -50,7 +92,7 @@ def pair_block(data: jax.Array, a_ids: jax.Array, b_ids: jax.Array,
         A = a_ids.shape[1]
         tri = jnp.arange(A)[:, None] < jnp.arange(A)[None, :]
         ok &= tri[None, :, :]
-    n_evals = jnp.sum(ok)
+    n_evals = jnp.sum(ok, axis=(1, 2), dtype=jnp.int32)
     return jnp.where(ok, d, jnp.inf), n_evals
 
 
@@ -68,26 +110,52 @@ def join_triples(a_ids: jax.Array, b_ids: jax.Array, dists: jax.Array):
     return rows, cols, jnp.concatenate([d, d])
 
 
+def _fused_join_candidates(data, a_ids, b_ids, excl, sym, metric, sof, cap):
+    """One fused join → flattened pre-reduced triples (both directions)."""
+    va = data[jnp.maximum(a_ids, 0)]
+    vb = data[jnp.maximum(b_ids, 0)]
+    if excl:
+        assert sof is not None
+    sofa = sof[jnp.maximum(a_ids, 0)] if excl else None
+    sofb = sof[jnp.maximum(b_ids, 0)] if excl else None
+    fid, fd, rid, rd, ne = kops.join_topk(
+        va, vb, a_ids, b_ids, cap, metric=metric, sofa=sofa, sofb=sofb,
+        exclude_same=excl, symmetric=sym)
+    rows = jnp.concatenate(
+        [jnp.broadcast_to(a_ids[:, :, None], fid.shape).reshape(-1),
+         jnp.broadcast_to(b_ids[:, :, None], rid.shape).reshape(-1)])
+    cols = jnp.concatenate([fid.reshape(-1), rid.reshape(-1)])
+    dvals = jnp.concatenate([fd.reshape(-1), rd.reshape(-1)])
+    return rows, cols, dvals, ne
+
+
 def local_join_insert(g: KnnGraph, data: jax.Array, joins, metric: str,
-                      sof: jax.Array | None = None, cap: int | None = None):
+                      sof: jax.Array | None = None, cap: int | None = None,
+                      fused: bool = True):
     """Run a list of joins and insert all produced edges into ``g``.
 
     ``joins``: iterable of (a_ids, b_ids, exclude_same_subset, symmetric).
     One fused cap_scatter+merge per call keeps a single sort pipeline per
-    round. Returns (g, n_updates, n_evals).
+    round. Returns ``(g, n_updates, n_evals)`` — both counters are
+    (⌈n/4096⌉,) int32 chunked count vectors (a device int32 scalar wraps
+    at billion scale); total them with :func:`eval_count`.
     """
     cap = cap or g.k
     all_rows, all_cols, all_d = [], [], []
-    n_evals = jnp.zeros((), jnp.int64 if jax.config.x64_enabled else jnp.int32)
+    n_evals = jnp.zeros((g.n,), jnp.int32)
     for a_ids, b_ids, excl, sym in joins:
-        d, ne = pair_block(data, a_ids, b_ids, metric, sof=sof,
-                           exclude_same_subset=excl, symmetric_dedupe=sym)
-        r, c, dd = join_triples(a_ids, b_ids, d)
+        if fused:
+            r, c, dd, ne = _fused_join_candidates(
+                data, a_ids, b_ids, excl, sym, metric, sof, cap)
+        else:
+            d, ne = pair_block(data, a_ids, b_ids, metric, sof=sof,
+                               exclude_same_subset=excl, symmetric_dedupe=sym)
+            r, c, dd = join_triples(a_ids, b_ids, d)
         all_rows.append(r); all_cols.append(c); all_d.append(dd)
-        n_evals = n_evals + ne.astype(n_evals.dtype)
+        n_evals = n_evals + ne
     rows = jnp.concatenate(all_rows)
     cols = jnp.concatenate(all_cols)
     dvals = jnp.concatenate(all_d)
     cand_ids, cand_dists = cap_scatter(rows, cols, dvals, g.n, cap)
     g, n_upd = merge_rows(g, cand_ids, cand_dists)
-    return g, n_upd, n_evals
+    return g, _partial_evals(n_upd), _partial_evals(n_evals)

@@ -22,10 +22,12 @@ from repro.core.sampling import (reverse_cap, sample_flagged,
 from repro.core.twoway import _merge_common, merge_full  # noqa: F401 (re-export)
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "metric", "first"))
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "metric", "first", "fused"))
 def multi_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
                     sof: jax.Array, starts: jax.Array, sizes_arr: jax.Array,
-                    key: jax.Array, lam: int, metric: str, first: bool):
+                    key: jax.Array, lam: int, metric: str, first: bool,
+                    fused: bool = True):
     n = g.n
     if first:
         new = sample_random_other(key, sof, starts, sizes_arr, lam)
@@ -40,22 +42,24 @@ def multi_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
         (new2, new2, True, True),     # new × new    minus same-subset pairs
         (new2, old2, True, False),    # new × old    minus same-subset pairs
     ]
-    return local_join_insert(g, data, joins, metric, sof=sof)
+    return local_join_insert(g, data, joins, metric, sof=sof, fused=fused)
 
 
 def multi_way_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
                     lam: int, k: int | None = None, max_iters: int = 30,
-                    delta: float = 0.001, metric: str = "l2", trace_fn=None):
+                    delta: float = 0.001, metric: str = "l2",
+                    fused: bool = True, trace_fn=None):
     """Alg. 2. ``sizes``=(n₁,…,n_m); ``g0``=Ω(G₁,…,G_m) in global ids."""
     assert len(sizes) >= 2
     return _merge_common(key, data, sizes, g0, multi_way_round, lam=lam, k=k,
                          max_iters=max_iters, delta=delta, metric=metric,
-                         trace_fn=trace_fn)
+                         fused=fused, trace_fn=trace_fn)
 
 
 def two_way_hierarchy(key: jax.Array, data: jax.Array, sizes, subgraphs, *,
                       lam: int, k: int | None = None, max_iters: int = 30,
-                      delta: float = 0.001, metric: str = "l2"):
+                      delta: float = 0.001, metric: str = "l2",
+                      fused: bool = True):
     """Bottom-up hierarchical Two-way Merge (paper Fig. 3(a)).
 
     m−1 pairwise merges; returns the final FULL graph plus aggregated stats.
@@ -91,7 +95,8 @@ def two_way_hierarchy(key: jax.Array, data: jax.Array, sizes, subgraphs, *,
                           flags=jnp.concatenate([g1.flags, g2.flags]))
             gc, st = two_way_merge(
                 jax.random.fold_in(key, 7919 * level + j), seg, (n1, n2), g0,
-                lam=lam, k=k, max_iters=max_iters, delta=delta, metric=metric)
+                lam=lam, k=k, max_iters=max_iters, delta=delta, metric=metric,
+                fused=fused)
             gm = merge_full(gc, g0)
             total_stats["total_evals"] += st["total_evals"]
             total_stats["iters"] += st["iters"]

@@ -19,13 +19,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import KnnGraph, random_graph
-from repro.core.localjoin import local_join_insert
+from repro.core.localjoin import eval_count, local_join_insert
 from repro.core.sampling import (reverse_cap, sample_flagged,
                                  sample_unflagged, union_cache)
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "metric"))
-def nn_descent_round(g: KnnGraph, data: jax.Array, lam: int, metric: str):
+@functools.partial(jax.jit, static_argnames=("lam", "metric", "fused"))
+def nn_descent_round(g: KnnGraph, data: jax.Array, lam: int, metric: str,
+                     fused: bool = True):
     n = g.n
     new, g = sample_flagged(g, lam)
     old = sample_unflagged(g, lam)
@@ -35,23 +36,24 @@ def nn_descent_round(g: KnnGraph, data: jax.Array, lam: int, metric: str):
         (new2, new2, False, True),    # new × new, each unordered pair once
         (new2, old2, False, False),   # new × old
     ]
-    return local_join_insert(g, data, joins, metric)
+    return local_join_insert(g, data, joins, metric, fused=fused)
 
 
 def nn_descent_rounds(g: KnnGraph, data: jax.Array, *, lam: int,
                       max_iters: int = 30, delta: float = 0.001,
-                      metric: str = "l2",
+                      metric: str = "l2", fused: bool = True,
                       trace_fn: Callable[[KnnGraph, int, dict], None] | None = None):
     """Iterate rounds on an existing graph until convergence."""
     n, k = g.ids.shape
     stats: dict[str, Any] = {"updates": [], "evals": [], "iters": 0,
                              "total_evals": 0}
     for it in range(max_iters):
-        g, upd, evals = nn_descent_round(g, data, lam, metric)
-        upd = int(upd)
+        g, upd, evals = nn_descent_round(g, data, lam, metric, fused)
+        upd = eval_count(upd)
+        ev = eval_count(evals)
         stats["updates"].append(upd)
-        stats["evals"].append(int(evals))
-        stats["total_evals"] += int(evals)
+        stats["evals"].append(ev)
+        stats["total_evals"] += ev
         stats["iters"] = it + 1
         if trace_fn is not None:
             trace_fn(g, it, stats)
@@ -62,23 +64,26 @@ def nn_descent_rounds(g: KnnGraph, data: jax.Array, *, lam: int,
 
 def nn_descent(key: jax.Array, data: jax.Array, k: int, *, lam: int | None = None,
                max_iters: int = 30, delta: float = 0.001, metric: str = "l2",
-               trace_fn=None):
+               fused: bool = True, trace_fn=None):
     """Full NN-Descent from a random initial graph."""
     lam = lam or max(1, k // 2)
     g = random_graph(key, data.shape[0], k, data, metric=metric)
     return nn_descent_rounds(g, data, lam=lam, max_iters=max_iters,
-                             delta=delta, metric=metric, trace_fn=trace_fn)
+                             delta=delta, metric=metric, fused=fused,
+                             trace_fn=trace_fn)
 
 
 def build_subgraphs(key: jax.Array, data: jax.Array, sizes, k: int, *,
                     lam: int | None = None, max_iters: int = 30,
-                    delta: float = 0.001, metric: str = "l2"):
+                    delta: float = 0.001, metric: str = "l2",
+                    fused: bool = True):
     """NN-Descent per contiguous subset — the merge experiments' input."""
     gs, offset = [], 0
     for i, s in enumerate(sizes):
         sub = jax.lax.dynamic_slice_in_dim(data, offset, s, axis=0)
         g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
-                          max_iters=max_iters, delta=delta, metric=metric)
+                          max_iters=max_iters, delta=delta, metric=metric,
+                          fused=fused)
         gs.append(g)
         offset += s
     return gs

@@ -70,7 +70,7 @@ class Spool:
 def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                       sizes: Sequence[int], *, k: int, lam: int,
                       inner_iters: int = 8, nnd_iters: int = 20,
-                      metric: str = "l2",
+                      metric: str = "l2", fused: bool = True,
                       phase_times: dict | None = None) -> KnnGraph:
     """Full out-of-core build: subset NN-Descent + all-pairs Two-way Merge.
 
@@ -92,7 +92,7 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
             continue
         sub = jnp.asarray(data[starts[i]:starts[i] + sizes[i]])
         g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
-                          max_iters=nnd_iters, metric=metric)
+                          max_iters=nnd_iters, metric=metric, fused=fused)
         s_ids = support_graph(g, lam)
         spool.put(f"g{i}", ids=g.ids, dists=g.dists, s=s_ids)
         man["subgraphs_done"] = sorted(set(man["subgraphs_done"]) | {i})
@@ -128,7 +128,8 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                        jnp.asarray(bj["s"]) + ni)])
         kk = jax.random.fold_in(jax.random.fold_in(key, 101 + i), j)
         g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
-                                     iters=inner_iters, metric=metric)
+                                     iters=inner_iters, metric=metric,
+                                     fused=fused)
         # merge halves into the durable per-subset FULL graphs
         for (a, sl, base_other, na) in ((i, slice(0, ni), starts[j], ni),
                                         (j, slice(ni, None), starts[i], nj)):

@@ -38,8 +38,9 @@ def s_merge_init(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph,
 
 def s_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
             lam: int, max_iters: int = 30, delta: float = 0.001,
-            metric: str = "l2", trace_fn=None):
+            metric: str = "l2", fused: bool = True, trace_fn=None):
     """Full S-Merge: init + NN-Descent refinement. Returns the FULL graph."""
     g = s_merge_init(key, data, sizes, g0, metric=metric)
     return nn_descent_rounds(g, data, lam=lam, max_iters=max_iters,
-                             delta=delta, metric=metric, trace_fn=trace_fn)
+                             delta=delta, metric=metric, fused=fused,
+                             trace_fn=trace_fn)

@@ -22,17 +22,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import KnnGraph, empty_graph
-from repro.core.localjoin import local_join_insert
+from repro.core.localjoin import eval_count, local_join_insert
 from repro.core.mergesort import make_sof, merge_graphs, subset_starts
 from repro.core.sampling import (reverse_cap, sample_flagged,
                                  sample_random_other, support_graph,
                                  union_cache)
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "metric", "first"))
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "metric", "first", "fused"))
 def two_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
                   sof: jax.Array, starts: jax.Array, sizes_arr: jax.Array,
-                  key: jax.Array, lam: int, metric: str, first: bool):
+                  key: jax.Array, lam: int, metric: str, first: bool,
+                  fused: bool = True):
     n = g.n
     if first:
         new = sample_random_other(key, sof, starts, sizes_arr, lam)
@@ -41,21 +43,23 @@ def two_way_round(g: KnnGraph, data: jax.Array, s_ids: jax.Array,
     new2 = union_cache(new, reverse_cap(new, n, lam))
     # local-join new2 × S: new2 ⊆ C\SoF(i), S ⊆ SoF(i) ⇒ pairs are strictly
     # cross-subset; both directions inserted into the cross graph G.
-    return local_join_insert(g, data, [(new2, s_ids, False, False)], metric)
+    return local_join_insert(g, data, [(new2, s_ids, False, False)], metric,
+                             fused=fused)
 
 
 def two_way_merge(key: jax.Array, data: jax.Array, sizes, g0: KnnGraph, *,
                   lam: int, k: int | None = None, max_iters: int = 30,
-                  delta: float = 0.001, metric: str = "l2", trace_fn=None):
+                  delta: float = 0.001, metric: str = "l2",
+                  fused: bool = True, trace_fn=None):
     """Alg. 1. ``sizes``=(n₁, n₂); ``g0``=Ω(G₁,G₂) in global ids."""
     assert len(sizes) == 2
     return _merge_common(key, data, sizes, g0, two_way_round, lam=lam, k=k,
                          max_iters=max_iters, delta=delta, metric=metric,
-                         trace_fn=trace_fn)
+                         fused=fused, trace_fn=trace_fn)
 
 
 def _merge_common(key, data, sizes, g0, round_fn, *, lam, k, max_iters,
-                  delta, metric, trace_fn):
+                  delta, metric, trace_fn, fused=True):
     n = data.shape[0]
     assert g0.n == n
     k = k or g0.k
@@ -69,10 +73,12 @@ def _merge_common(key, data, sizes, g0, round_fn, *, lam, k, max_iters,
     for it in range(max_iters):
         g, upd, evals = round_fn(g, data, s_ids, sof, starts, sizes_arr,
                                  jax.random.fold_in(key, it), lam, metric,
-                                 it == 0)
-        stats["updates"].append(int(upd))
-        stats["evals"].append(int(evals))
-        stats["total_evals"] += int(evals)
+                                 it == 0, fused)
+        upd = eval_count(upd)
+        ev = eval_count(evals)
+        stats["updates"].append(upd)
+        stats["evals"].append(ev)
+        stats["total_evals"] += ev
         stats["iters"] = it + 1
         if trace_fn is not None:
             trace_fn(g, it, stats)

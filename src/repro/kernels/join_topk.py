@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: fused local-join + per-slot top-cap reduction.
+
+The legacy local-join chain (``pair_block`` → ``join_triples``) writes the
+full ``(G, A, B)`` distance block to HBM and then expands it into
+``E = 2·G·A·B`` `(row, col, dist)` triples — the memory-bound pattern that
+dominates every merge round. This kernel fuses the two stages: one grid
+step stages a row group of both gathered operand blocks in VMEM, puts the
+cross term on the MXU, applies the pair masks (invalid / self /
+same-subset / symmetric-triangle) and immediately reduces each source slot
+to its ``cap`` closest partners **in VMEM** via the same stable rank sort
+``topk_merge`` uses (see DESIGN.md).  Only the dense reduced blocks
+
+  fwd: (G, A, cap)   candidates FOR the a-side ids
+  rev: (G, B, cap)   candidates FOR the b-side ids
+
+ever reach HBM — per-round candidate traffic drops from ``O(G·A·B)`` to
+``O(G·(A+B)·cap)`` and the full triple stream is never materialized.
+
+Masked / missing slots come back as (-1, +inf), matching the jnp oracle
+(`repro.kernels.ref.join_topk`): ranks break ties by slot position
+exactly like a stable argsort, so selected ids match the oracle exactly;
+distances may differ by ~1 ulp where lane padding reorders the matmul
+reduction (cos normalization), which on tied distances can legitimately
+flip which of two equal candidates a TPU build keeps.  Per-a-slot eval
+counts (the paper's cost proxy) fall out of the same mask pass for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import INVALID_ID
+from repro.kernels.topk_merge import rank_topc
+
+
+def _kernel(va_ref, vb_ref, aid_ref, bid_ref, sofa_ref, sofb_ref,
+            fid_ref, fd_ref, rid_ref, rd_ref, cnt_ref, *,
+            cap, metric, exclude_same, symmetric):
+    va = va_ref[...]                                   # (bg, A, d)
+    vb = vb_ref[...]                                   # (bg, B, d)
+    aid = aid_ref[...]                                 # (bg, A)
+    bid = bid_ref[...]                                 # (bg, B)
+    bg, A, _ = va.shape
+    B = vb.shape[1]
+    if metric == "cos":
+        va = va / jnp.maximum(
+            jnp.sqrt(jnp.sum(va * va, axis=-1, keepdims=True)), 1e-12)
+        vb = vb / jnp.maximum(
+            jnp.sqrt(jnp.sum(vb * vb, axis=-1, keepdims=True)), 1e-12)
+    cross = jax.lax.dot_general(
+        va, vb, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # (bg, A, B) on the MXU
+    if metric == "ip":
+        dm = -cross
+    elif metric == "cos":
+        dm = 1.0 - cross
+    else:                                              # squared L2
+        an = jnp.sum(va * va, axis=-1)
+        bn = jnp.sum(vb * vb, axis=-1)
+        dm = jnp.maximum(an[:, :, None] + bn[:, None, :] - 2.0 * cross, 0.0)
+    ok = (aid[:, :, None] != INVALID_ID) & (bid[:, None, :] != INVALID_ID)
+    ok &= aid[:, :, None] != bid[:, None, :]           # no self pairs
+    if exclude_same:
+        ok &= sofa_ref[...][:, :, None] != sofb_ref[...][:, None, :]
+    if symmetric:
+        ia = jax.lax.broadcasted_iota(jnp.int32, (A, B), 0)
+        ib = jax.lax.broadcasted_iota(jnp.int32, (A, B), 1)
+        ok &= (ia < ib)[None]
+    cnt_ref[...] = jnp.sum(ok, axis=-1, dtype=jnp.int32)          # (bg, A)
+    dm = jnp.where(ok, dm, jnp.inf)
+    fwd_pay = jnp.broadcast_to(bid[:, None, :], (bg, A, B)).reshape(bg * A, B)
+    fd, fi = rank_topc(dm.reshape(bg * A, B), fwd_pay, cap)
+    fid_ref[...] = fi.reshape(bg, A, cap)
+    fd_ref[...] = fd.reshape(bg, A, cap)
+    dmt = jnp.swapaxes(dm, 1, 2)                       # (bg, B, A)
+    rev_pay = jnp.broadcast_to(aid[:, None, :], (bg, B, A)).reshape(bg * B, A)
+    rd, ri = rank_topc(dmt.reshape(bg * B, A), rev_pay, cap)
+    rid_ref[...] = ri.reshape(bg, B, cap)
+    rd_ref[...] = rd.reshape(bg, B, cap)
+
+
+def _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, *, cap: int,
+                    metric: str, exclude_same: bool, symmetric: bool,
+                    interpret: bool = False):
+    """(G,A,d) × (G,B,d) → reduced candidate blocks; see module docstring."""
+    G, A, d = va.shape
+    B = vb.shape[1]
+    va = va.astype(jnp.float32)
+    vb = vb.astype(jnp.float32)
+    dp, Ap, Bp = (-d) % 128, (-A) % 8, (-B) % 8
+    va = jnp.pad(va, ((0, 0), (0, Ap), (0, dp)))
+    vb = jnp.pad(vb, ((0, 0), (0, Bp), (0, dp)))
+    a_ids = jnp.pad(a_ids, ((0, 0), (0, Ap)), constant_values=INVALID_ID)
+    b_ids = jnp.pad(b_ids, ((0, 0), (0, Bp)), constant_values=INVALID_ID)
+    sofa = jnp.pad(sofa, ((0, 0), (0, Ap)))
+    sofb = jnp.pad(sofb, ((0, 0), (0, Bp)))
+    A2, B2, d2 = A + Ap, B + Bp, d + dp
+    # VMEM per row group: operands + dist block + the two (W, W) rank
+    # matrices behind the top-cap reductions (the dominant term) + outputs.
+    per_group = 4 * ((A2 + B2) * d2 + A2 * B2
+                     + A2 * B2 * B2 + B2 * A2 * A2
+                     + (A2 + B2) * cap * 2 + A2)
+    bg = max(1, min(G, (8 << 20) // max(per_group, 1)))
+    Gp = (-G) % bg
+    pad_g = ((0, Gp), (0, 0))
+    va = jnp.pad(va, ((0, Gp), (0, 0), (0, 0)))
+    vb = jnp.pad(vb, ((0, Gp), (0, 0), (0, 0)))
+    a_ids = jnp.pad(a_ids, pad_g, constant_values=INVALID_ID)
+    b_ids = jnp.pad(b_ids, pad_g, constant_values=INVALID_ID)
+    sofa = jnp.pad(sofa, pad_g)
+    sofb = jnp.pad(sofb, pad_g)
+    G2 = G + Gp
+    kern = functools.partial(_kernel, cap=cap, metric=metric,
+                             exclude_same=exclude_same, symmetric=symmetric)
+    fid, fd, rid, rd, cnt = pl.pallas_call(
+        kern,
+        grid=(G2 // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, A2, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, B2, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, A2), lambda i: (i, 0)),
+            pl.BlockSpec((bg, B2), lambda i: (i, 0)),
+            pl.BlockSpec((bg, A2), lambda i: (i, 0)),
+            pl.BlockSpec((bg, B2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bg, A2, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, A2, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, B2, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, B2, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bg, A2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G2, A2, cap), jnp.int32),
+            jax.ShapeDtypeStruct((G2, A2, cap), jnp.float32),
+            jax.ShapeDtypeStruct((G2, B2, cap), jnp.int32),
+            jax.ShapeDtypeStruct((G2, B2, cap), jnp.float32),
+            jax.ShapeDtypeStruct((G2, A2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(va, vb, a_ids, b_ids, sofa, sofb)
+    n_evals = jnp.sum(cnt[:G, :A], axis=1, dtype=jnp.int32)
+    return (fid[:G, :A], fd[:G, :A], rid[:G, :B], rd[:G, :B], n_evals)
+
+
+_join_topk_jit = jax.jit(
+    _join_topk_impl,
+    static_argnames=("cap", "metric", "exclude_same", "symmetric"))
+
+
+def join_topk_pallas(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
+                     sofa=None, sofb=None, exclude_same: bool = False,
+                     symmetric: bool = False, interpret: bool = False):
+    """Fused pair-distance + per-slot top-cap; see the module docstring.
+
+    ``sofa``/``sofb`` are only read when ``exclude_same``; zeros are staged
+    otherwise so the kernel signature stays static.  interpret=True runs the
+    kernel body eagerly (CPU validation path) — NOT under jit: compiling the
+    interpreter loop is pathologically slow (see pairdist).
+    """
+    if sofa is None:
+        sofa = jnp.zeros(a_ids.shape, jnp.int32)
+    if sofb is None:
+        sofb = jnp.zeros(b_ids.shape, jnp.int32)
+    if interpret:
+        return _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, cap=cap,
+                               metric=metric, exclude_same=exclude_same,
+                               symmetric=symmetric, interpret=True)
+    return _join_topk_jit(va, vb, a_ids, b_ids, sofa, sofb, cap=cap,
+                          metric=metric, exclude_same=exclude_same,
+                          symmetric=symmetric)

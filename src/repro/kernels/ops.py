@@ -37,6 +37,26 @@ def pairdist(a: jax.Array, b: jax.Array, metric: str = "l2") -> jax.Array:
     return _ref.pairdist(a, b, metric=metric)
 
 
+def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
+              sofa=None, sofb=None, exclude_same: bool = False,
+              symmetric: bool = False):
+    """Fused local-join pair distances + per-slot top-cap reduction.
+
+    Returns ``(fwd_ids, fwd_dists, rev_ids, rev_dists, n_evals)`` — dense
+    ``(G, A, cap)`` / ``(G, B, cap)`` candidate blocks and per-group eval
+    counts. The jnp oracle is the parity ground truth and the non-TPU path.
+    """
+    if use_pallas() and va.ndim == 3:
+        from repro.kernels import join_topk as _k
+        return _k.join_topk_pallas(va, vb, a_ids, b_ids, cap, metric=metric,
+                                   sofa=sofa, sofb=sofb,
+                                   exclude_same=exclude_same,
+                                   symmetric=symmetric)
+    return _ref.join_topk(va, vb, a_ids, b_ids, cap, metric=metric,
+                          sofa=sofa, sofb=sofb, exclude_same=exclude_same,
+                          symmetric=symmetric)
+
+
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
     if use_pallas() and row_ids.ndim == 2:
         from repro.kernels import topk_merge as _k

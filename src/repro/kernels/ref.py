@@ -30,10 +30,70 @@ def pairdist(a: jax.Array, b: jax.Array, metric: str = "l2") -> jax.Array:
     return jnp.maximum(an[..., :, None] + bn[..., None, :] - 2.0 * cross, 0.0)
 
 
+def _topc(keys: jax.Array, payload: jax.Array, cap: int):
+    """Per-row stable top-``cap``: (…, W) keys → (…, cap) (keys, payload).
+
+    +inf keys mean "masked"; their payload comes back as -1. When W < cap the
+    tail is padded with (+inf, -1). Ties break by slot position (stable), the
+    same contract the ``join_topk`` kernel's rank sort implements.
+    """
+    order = jnp.argsort(keys, axis=-1, stable=True)[..., :cap]
+    kk = jnp.take_along_axis(keys, order, axis=-1)
+    pp = jnp.take_along_axis(payload, order, axis=-1)
+    pp = jnp.where(jnp.isfinite(kk), pp, -1)
+    pad = cap - kk.shape[-1]
+    if pad > 0:
+        cfg = [(0, 0)] * (kk.ndim - 1) + [(0, pad)]
+        kk = jnp.pad(kk, cfg, constant_values=jnp.inf)
+        pp = jnp.pad(pp, cfg, constant_values=-1)
+    return kk, pp
+
+
+def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
+              sofa=None, sofb=None, exclude_same: bool = False,
+              symmetric: bool = False):
+    """Fused local-join: masked pair distances reduced to per-slot top-cap.
+
+    va/vb: (G, A, d)/(G, B, d) gathered operand blocks; a_ids/b_ids:
+    (G, A)/(G, B) the ids they were gathered from (-1 = padding). Pairs are
+    masked exactly like ``localjoin.pair_block`` (invalid / self /
+    same-subset via sofa==sofb / lower triangle when ``symmetric``).
+
+    Returns ``(fwd_ids, fwd_dists, rev_ids, rev_dists, n_evals)``:
+      fwd_*: (G, A, cap) — the cap closest valid b-partners of each a-slot,
+      rev_*: (G, B, cap) — the cap closest valid a-partners of each b-slot,
+      n_evals: (G,) int32 — masked-in pair count (each unordered pair once
+      when ``symmetric``).
+
+    This is the ground truth the Pallas ``join_topk`` kernel is tested
+    against, and the CPU/GPU execution path.
+    """
+    G, A = a_ids.shape
+    B = b_ids.shape[1]
+    d = pairdist(va, vb, metric=metric)                       # (G, A, B)
+    ok = (a_ids[:, :, None] != -1) & (b_ids[:, None, :] != -1)
+    ok &= a_ids[:, :, None] != b_ids[:, None, :]              # no self pairs
+    if exclude_same:
+        ok &= sofa[:, :, None] != sofb[:, None, :]
+    if symmetric:
+        tri = jnp.arange(A)[:, None] < jnp.arange(B)[None, :]
+        ok &= tri[None]
+    n_evals = jnp.sum(ok, axis=(1, 2), dtype=jnp.int32)
+    dm = jnp.where(ok, d, jnp.inf)
+    fwd_d, fwd_i = _topc(dm, jnp.broadcast_to(b_ids[:, None, :], (G, A, B)),
+                         cap)
+    rev_d, rev_i = _topc(jnp.swapaxes(dm, 1, 2),
+                         jnp.broadcast_to(a_ids[:, None, :], (G, B, A)), cap)
+    return fwd_i, fwd_d, rev_i, rev_d, n_evals
+
+
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
-    """Merge a sorted neighbor row with sorted candidates → sorted top-k.
+    """Merge a sorted neighbor row with candidates → sorted top-k.
 
     (…, k) + (…, c) → (…, k). Duplicate ids keep the row-side entry.
+    Candidates need not be pre-sorted (full stable argsort inside); among
+    duplicate candidate ids the earliest slot wins, which is the closest
+    copy only for ascending blocks — see ``topk_merge_pallas`` contract.
     """
     k = row_ids.shape[-1]
     ids = jnp.concatenate([row_ids, cand_ids], axis=-1)

@@ -29,18 +29,37 @@ from jax.experimental import pallas as pl
 from repro.core.graph import INVALID_ID
 
 
-def _rank_sort(d: jax.Array, i: jax.Array):
-    """Stable ascending sort of (…, W) keys d with payload i via rank-sort."""
-    W = d.shape[-1]
+def rank_topc(keys: jax.Array, payload: jax.Array, cap: int,
+              mask_inf: bool = True):
+    """Stable top-``cap`` of (…, W) keys with int payload via rank sort.
+
+    rank[i] = #{j : key[j] < key[i] or (key[j] == key[i] and j < i)} — the
+    position a stable ascending argsort would assign slot i — then a
+    one-hot contraction against the first ``cap`` ranks places keys and
+    payloads: two wide ops, no serial chain (see DESIGN.md §1). With
+    ``cap == W`` this is a full stable sort. Unmatched output slots
+    (W < cap) come back as (+inf, INVALID_ID); ``mask_inf`` additionally
+    maps +inf-key payloads to INVALID_ID (``join_topk``'s "no candidate"
+    convention — ``topk_merge`` must NOT, its oracle keeps ids on inf
+    slots). The shared core of both kernels: input order never affects the
+    *output* order (it is a full sort), only which of several
+    bit-equal-key duplicates lands first (slot order).
+    """
+    W = keys.shape[-1]
     pos = jnp.arange(W, dtype=jnp.int32)
-    strictly_less = d[..., :, None] > d[..., None, :]       # key_j < key_i
-    tie_before = (d[..., :, None] == d[..., None, :]) & (
+    strictly_less = keys[..., :, None] > keys[..., None, :]  # key_j < key_i
+    tie_before = (keys[..., :, None] == keys[..., None, :]) & (
         pos[:, None] > pos[None, :])                         # stable ties
     rank = jnp.sum(strictly_less | tie_before, axis=-1)      # (…, W) unique
-    onehot = rank[..., :, None] == pos[None, :]               # [i, r] perm
-    d_out = jnp.sum(jnp.where(onehot, d[..., :, None], 0.0), axis=-2)
-    i_out = jnp.sum(jnp.where(onehot, i[..., :, None], 0), axis=-2)
-    return d_out, i_out.astype(i.dtype)
+    onehot = rank[..., :, None] == jnp.arange(cap, dtype=jnp.int32)
+    kk = jnp.sum(jnp.where(onehot, keys[..., :, None], 0.0), axis=-2)
+    pp = jnp.sum(jnp.where(onehot, payload[..., :, None], 0), axis=-2)
+    hit = jnp.any(onehot, axis=-2)
+    kk = jnp.where(hit, kk, jnp.inf)
+    pp = jnp.where(hit, pp.astype(payload.dtype), INVALID_ID)
+    if mask_inf:
+        pp = jnp.where(jnp.isfinite(kk), pp, INVALID_ID)
+    return kk, pp
 
 
 def _kernel(rid_ref, rd_ref, cid_ref, cd_ref, oid_ref, od_ref, *, k, c, W):
@@ -62,7 +81,7 @@ def _kernel(rid_ref, rd_ref, cid_ref, cd_ref, oid_ref, od_ref, *, k, c, W):
     rid = jnp.where(dup_in_row, INVALID_ID, rid)
     keys = jnp.concatenate([rd, cd], axis=-1)
     vals = jnp.concatenate([rid, cid], axis=-1)
-    keys, vals = _rank_sort(keys, vals)
+    keys, vals = rank_topc(keys, vals, k + c, mask_inf=False)
     oid_ref[...] = vals[:, :k]
     od_ref[...] = keys[:, :k]
 
@@ -107,7 +126,17 @@ _topk_merge_jit = jax.jit(_topk_merge_impl)
 
 def topk_merge_pallas(row_ids, row_dists, cand_ids, cand_dists, *,
                       interpret: bool = False):
-    """(n,k) sorted rows + (n,c) sorted candidates -> (n,k) sorted rows.
+    """(n,k) sorted rows + (n,c) candidates -> (n,k) sorted rows.
+
+    CONTRACT (kernel and jnp oracle alike): the output is a full stable
+    sort of the merged slots, so candidate blocks need NOT be pre-sorted
+    for the output order to be correct. Pre-sortedness only matters to
+    duplicate suppression, where the earliest slot survives — equal to
+    the *closest* copy only when the block is ascending. Callers with
+    duplicate candidate ids (merge_rows via cap_scatter) pass sorted
+    blocks; callers with distinct candidates (beam_search) may pass
+    unsorted ones. Any reimplementation as a true sorted-merge network
+    must keep an unsorted-candidate path or update those callers.
 
     interpret=True bypasses jit (eager interpreter; see pairdist)."""
     if interpret:

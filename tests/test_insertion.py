@@ -35,11 +35,12 @@ def test_merge_rows_counts_updates():
     cand_ids = jnp.asarray([[1, 2], [0, INVALID_ID], [INVALID_ID, INVALID_ID]])
     cand_d = jnp.asarray([[0.1, 0.2], [0.3, np.inf], [np.inf, np.inf]])
     g2, n_upd = merge_rows(g, cand_ids, cand_d)
-    assert int(n_upd) == 3
+    # n_updates is per-row int32 (scalar int32 would wrap at billion scale)
+    assert n_upd.tolist() == [2, 1, 0]
     check_invariants(g2)
     # second insert of identical candidates: no updates
     g3, n_upd2 = merge_rows(g2, cand_ids, cand_d)
-    assert int(n_upd2) == 0
+    assert int(n_upd2.sum()) == 0
     assert bool(jnp.all(g3.ids == g2.ids))
 
 
@@ -49,6 +50,6 @@ def test_no_self_edges():
     cols = jnp.asarray([0, 0], jnp.int32)    # (0,0) is a self edge
     d = jnp.asarray([0.1, 0.2])
     g2, n = insert_candidates(g, rows, cols, d)
-    assert int(n) == 1
+    assert int(n.sum()) == 1
     assert int(g2.ids[0, 0]) == INVALID_ID
     assert int(g2.ids[1, 0]) == 0

@@ -1,0 +1,180 @@
+"""Fused local-join pipeline: kernel parity, single-sort equivalence,
+fused-vs-legacy build parity.
+
+Three layers of ground truth, bottom up:
+
+  1. ``join_topk`` Pallas kernel (interpret=True) vs the jnp oracle —
+     shape/metric/mask sweep incl. INVALID_ID padding; ids must match
+     exactly, distances to float tolerance (lane padding reorders the
+     matmul reduction by ≤1 ulp for cos).
+  2. single-sort ``cap_scatter`` vs the seed's two-chained-argsort
+     ``cap_scatter_twosort`` — bit-identical on every input (same stable
+     (row, dist) order; the packed monotone-bits key preserves float
+     order), plus the opt-in ``dedupe=True`` duplicate collapse.
+  3. whole builds with ``fused=True`` vs the legacy triple-stream
+     candidate generation (``fused=False``) — bit-exact graphs: any
+     candidate a per-slot top-cap reduction drops is dominated by ≥cap
+     closer candidates in the same slot, so the capped row buffers are
+     content-identical (ties between *distinct* equal-distance pairs are
+     the only divergence channel; absent in float random data).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from repro.core.graph import INVALID_ID
+from repro.core.insertion import cap_scatter, cap_scatter_twosort, merge_rows
+from repro.kernels import ref
+from repro.kernels.join_topk import join_topk_pallas
+
+
+# ---- 1. kernel vs oracle --------------------------------------------------
+
+@pytest.mark.parametrize("G,A,B,d,cap", [(5, 4, 6, 10, 3), (16, 12, 12, 32, 8),
+                                         (3, 9, 17, 50, 5), (7, 8, 8, 128, 4)])
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_join_topk_shape_metric_sweep(G, A, B, d, cap, metric):
+    rng = np.random.default_rng(G * 100 + A)
+    va = jnp.asarray(rng.normal(size=(G, A, d)).astype(np.float32))
+    vb = jnp.asarray(rng.normal(size=(G, B, d)).astype(np.float32))
+    # ids with -1 padding sprinkled in, range chosen to force self-pairs
+    aid = jnp.asarray(rng.integers(-1, 24, (G, A)).astype(np.int32))
+    bid = jnp.asarray(rng.integers(-1, 24, (G, B)).astype(np.int32))
+    want = ref.join_topk(va, vb, aid, bid, cap, metric=metric)
+    got = join_topk_pallas(va, vb, aid, bid, cap, metric=metric,
+                           interpret=True)
+    _assert_join_equal(got, want)
+
+
+@pytest.mark.parametrize("exclude_same,symmetric", [(True, False),
+                                                    (False, True),
+                                                    (True, True)])
+def test_join_topk_masks(exclude_same, symmetric):
+    rng = np.random.default_rng(0)
+    G, A, d, cap = 6, 10, 12, 4
+    va = jnp.asarray(rng.normal(size=(G, A, d)).astype(np.float32))
+    aid = jnp.asarray(rng.integers(-1, 30, (G, A)).astype(np.int32))
+    sofa = jnp.asarray(rng.integers(0, 3, (G, A)).astype(np.int32))
+    want = ref.join_topk(va, va, aid, aid, cap, sofa=sofa, sofb=sofa,
+                         exclude_same=exclude_same, symmetric=symmetric)
+    got = join_topk_pallas(va, va, aid, aid, cap, sofa=sofa, sofb=sofa,
+                           exclude_same=exclude_same, symmetric=symmetric,
+                           interpret=True)
+    _assert_join_equal(got, want)
+
+
+def test_join_topk_all_invalid_and_overwide_cap():
+    G, A, B, d = 2, 3, 5, 9
+    va = jnp.ones((G, A, d), jnp.float32)
+    vb = jnp.ones((G, B, d), jnp.float32)
+    aid = jnp.full((G, A), INVALID_ID, jnp.int32)
+    bid = jnp.asarray(np.arange(G * B).reshape(G, B), jnp.int32)
+    # all-invalid a-side: every slot empty, counts zero; cap > B pads
+    fid, fd, rid, rd, ne = join_topk_pallas(va, vb, aid, bid, 8,
+                                            interpret=True)
+    assert fid.shape == (G, A, 8) and rid.shape == (G, B, 8)
+    assert bool(jnp.all(fid == INVALID_ID)) and bool(jnp.all(rid == INVALID_ID))
+    assert bool(jnp.all(jnp.isinf(fd))) and bool(jnp.all(jnp.isinf(rd)))
+    assert bool(jnp.all(ne == 0))
+
+
+def _assert_join_equal(got, want):
+    for name, w, g in zip(("fwd_ids", "fwd_d", "rev_ids", "rev_d", "evals"),
+                          want, got):
+        w, g = np.asarray(w), np.asarray(g)
+        assert w.shape == g.shape, name
+        if w.dtype == np.float32:
+            assert_array_equal(np.isinf(g), np.isinf(w), err_msg=name)
+            assert_allclose(np.where(np.isinf(g), 0, g),
+                            np.where(np.isinf(w), 0, w),
+                            rtol=1e-5, atol=1e-5, err_msg=name)
+        else:
+            assert_array_equal(g, w, err_msg=name)
+
+
+# ---- 2. single-sort cap_scatter vs the seed two-sort ----------------------
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("by_dist", [True, False])
+def test_cap_scatter_single_sort_matches_twosort(seed, by_dist):
+    rng = np.random.default_rng(seed)
+    e, n, cap = 500, 37, 4
+    rows = jnp.asarray(rng.integers(-1, n, e).astype(np.int32))
+    cols = jnp.asarray(rng.integers(-1, n, e).astype(np.int32))
+    dists = jnp.asarray(rng.random(e).astype(np.float32))
+    a_ids, a_d = cap_scatter(rows, cols, dists, n, cap, by_dist=by_dist)
+    b_ids, b_d = cap_scatter_twosort(rows, cols, dists, n, cap,
+                                     by_dist=by_dist)
+    assert_array_equal(np.asarray(a_ids), np.asarray(b_ids))
+    assert_array_equal(np.asarray(a_d), np.asarray(b_d))
+
+
+def test_cap_scatter_dedupe_collapses_exact_duplicates():
+    # row 0 receives the same edge (0←7, d=.5) three times plus two distinct
+    # farther candidates; cap=2. Without dedupe the copies crowd the cap.
+    rows = jnp.asarray([0, 0, 0, 0, 0], jnp.int32)
+    cols = jnp.asarray([7, 7, 7, 3, 4], jnp.int32)
+    dists = jnp.asarray([0.5, 0.5, 0.5, 0.6, 0.7], jnp.float32)
+    ids_nd, _ = cap_scatter(rows, cols, dists, 1, 2)
+    assert ids_nd[0].tolist() == [7, 7]
+    ids_dd, dd = cap_scatter(rows, cols, dists, 1, 2, dedupe=True)
+    assert ids_dd[0].tolist() == [7, 3]
+    assert_allclose(np.asarray(dd[0]), [0.5, 0.6])
+
+
+# ---- 3. fused builds == legacy triple-stream builds -----------------------
+
+def _graphs_identical(a, b):
+    assert bool(jnp.all(a.ids == b.ids)), "neighbor ids differ"
+    da = jnp.where(jnp.isinf(a.dists), 0.0, a.dists)
+    db = jnp.where(jnp.isinf(b.dists), 0.0, b.dists)
+    assert_array_equal(np.asarray(da), np.asarray(db))
+    assert bool(jnp.all(a.flags == b.flags)), "flags differ"
+
+
+@pytest.mark.parametrize("strategy,n_subsets", [("twoway", 2),
+                                                ("multiway", 4)])
+def test_fused_build_parity(small_data, strategy, n_subsets):
+    from repro.api import BuildConfig, GraphBuilder
+    data = small_data[:400, :12]
+    kw = dict(strategy=strategy, n_subsets=n_subsets, k=8, lam=4,
+              max_iters=8, subgraph_iters=8)
+    res_f = GraphBuilder(BuildConfig(fused_localjoin=True, **kw)).build(data)
+    res_l = GraphBuilder(BuildConfig(fused_localjoin=False, **kw)).build(data)
+    _graphs_identical(res_f.graph, res_l.graph)
+    assert res_f.stats["total_evals"] == res_l.stats["total_evals"]
+    assert res_f.stats["iters"] == res_l.stats["iters"]
+
+
+def test_fused_nndescent_parity(small_data):
+    from repro.core.nndescent import nn_descent
+    data = small_data[:300, :12]
+    gf, sf = nn_descent(jax.random.key(7), data, 8, lam=4, max_iters=10,
+                        fused=True)
+    gl, sl = nn_descent(jax.random.key(7), data, 8, lam=4, max_iters=10,
+                        fused=False)
+    _graphs_identical(gf, gl)
+    assert sf["evals"] == sl["evals"] and sf["updates"] == sl["updates"]
+
+
+def test_merge_rows_single_pass_flags_and_count():
+    # existing row {1:.1 flag=F, 5:.9 flag=T}; candidates {5 dup, 2 new, 0 self}
+    from repro.core.graph import KnnGraph
+    g = KnnGraph(ids=jnp.asarray([[1, 5]], jnp.int32),
+                 dists=jnp.asarray([[0.1, 0.9]], jnp.float32),
+                 flags=jnp.asarray([[False, True]]))
+    cand_ids = jnp.asarray([[5, 2, 0]], jnp.int32)
+    cand_d = jnp.asarray([[0.9, 0.3, 0.0]], jnp.float32)
+    g2, n_upd = merge_rows(g, cand_ids, cand_d)
+    assert int(n_upd.sum()) == 1                 # only id 2 is new
+    assert g2.ids[0].tolist() == [1, 2]          # self edge (row 0, id 0) gone
+    assert g2.flags[0].tolist() == [False, True]
+
+
+def test_eval_count_is_overflow_safe():
+    from repro.core.localjoin import eval_count
+    big = jnp.full((4,), 2**30, jnp.int32)       # sums past int32 range
+    assert eval_count(big) == 4 * 2**30
