@@ -1,0 +1,202 @@
+"""Search-side microbench: pre-fusion scan loop vs fused early-exit search.
+
+Three arms over the same NN-Descent graph and query set:
+
+  seed     : ``beam_search_scan`` — one expansion per fixed ``lax.scan``
+             step, explicit dup mask, ``topk_merge`` beam update, no
+             early exit (the PR-2 loop, kept verbatim).
+  fused    : ``SearchEngine`` over the fused ``beam_expand`` search,
+             expand=1 — bit-identical results, while-loop early exit.
+  fused+E4 : same engine at expand=4 — multi-expansion amortizes each
+             gather/merge across 4·kg evals, ~4× fewer steps.
+
+Emits ``name=value`` CSV rows plus ``BENCH_search.json`` with QPS,
+recall@10 and evals/query per arm, the fused speedups, and a tiny
+interpret=True exercise of the Pallas kernel so the kernel path is
+covered even on the CPU oracle. Run with ``--toy`` in CI.
+
+    PYTHONPATH=src python benchmarks/bench_search.py [--n 100000] [--toy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from common import Timer, emit  # noqa: E402
+
+from repro.core.bruteforce import knn_search_bruteforce  # noqa: E402
+from repro.core.nndescent import nn_descent  # noqa: E402
+from repro.core.search import (beam_search, beam_search_scan,  # noqa: E402
+                               search_recall)
+from repro.data.vectors import clustered  # noqa: E402
+from repro.serve.knn_engine import SearchEngine  # noqa: E402
+
+
+#: strided entry seeds; 32 keeps clustered data navigable (every compared
+#: arm uses the identical seeding, so the comparison stays fair)
+N_ENTRIES = 32
+
+
+def bench_seed(g, data, queries, *, k, beam, reps):
+    nq = queries.shape[0]
+    ids, _, ev = beam_search_scan(g, data, queries, k, beam=beam,
+                                  n_entries=N_ENTRIES)
+    ids.block_until_ready()                      # compile + warm
+    with Timer() as t:
+        for _ in range(reps):
+            ids, _, ev = beam_search_scan(g, data, queries, k, beam=beam,
+                                          n_entries=N_ENTRIES)
+            # block per call, like the engine: a serving loop cannot
+            # pipeline dispatches ahead of returning results
+            ids.block_until_ready()
+    return ids, ev, {"variant": "seed", "qps": round(reps * nq / t.s, 2),
+                     "sec": round(t.s, 4)}
+
+
+def bench_fused(g, data, queries, *, k, beam, expand, reps, label, slots):
+    nq = queries.shape[0]
+    slots = min(slots, nq)
+    eng = SearchEngine(graph=g, data=data, k=k, beam=beam, expand=expand,
+                       n_entries=N_ENTRIES, slots=slots)
+    eng.search(queries)                          # compile + warm
+    eng.reset_stats()
+    with Timer() as t:
+        for _ in range(reps):
+            ids, _, ev = eng.search(queries)
+    st = eng.stats()
+    return ids, ev, {"variant": label, "slots": slots,
+                     "qps": round(reps * nq / t.s, 2),
+                     "sec": round(t.s, 4),
+                     "engine_qps": round(st["qps"], 2),
+                     "mean_batch_s": round(st["mean_batch_s"], 4)}
+
+
+def kernel_smoke() -> dict:
+    """Exercise the Pallas kernel under interpret=True vs the oracle.
+
+    Raises on divergence so the CI bench step fails loudly; ids/flags must
+    match exactly, distances to float tolerance (MXU matmul form vs the
+    oracle's elementwise form — same contract as tests/test_beam_expand.py).
+    """
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.beam_expand import beam_expand_pallas
+
+    rng = np.random.default_rng(0)
+    nq, C, d, beam = 5, 12, 16, 8
+    qs = jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
+    nv = jnp.asarray(rng.normal(size=(nq, C, d)).astype(np.float32))
+    nid = jnp.asarray(rng.integers(-1, 40, (nq, C)).astype(np.int32))
+    bid = np.full((nq, beam), -1, np.int32)
+    for r in range(nq):
+        bid[r, :6] = rng.choice(40, 6, replace=False)
+    bid = jnp.asarray(bid)
+    bd = jnp.where(bid != -1,
+                   jnp.asarray(np.sort(rng.random((nq, beam))
+                                       .astype(np.float32), axis=1)),
+                   jnp.inf)
+    bexp = jnp.asarray(rng.integers(0, 2, (nq, beam)).astype(bool)) \
+        & (bid != -1)
+    got = beam_expand_pallas(qs, nv, nid, bid, bd, bexp, interpret=True)
+    want = ref.beam_expand(qs, nv, nid, bid, bd, bexp)
+    for name, g_, w in zip(("ids", "dists", "exp", "evals"), got, want):
+        g_, w = np.asarray(g_), np.asarray(w)
+        if w.dtype == np.float32:
+            np.testing.assert_array_equal(np.isinf(g_), np.isinf(w),
+                                          err_msg=name)
+            np.testing.assert_allclose(np.where(np.isinf(g_), 0, g_),
+                                       np.where(np.isinf(w), 0, w),
+                                       rtol=1e-5, atol=1e-5, err_msg=name)
+        else:
+            np.testing.assert_array_equal(g_, w, err_msg=name)
+    return {"interpret_parity": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=24)
+    ap.add_argument("--k", type=int, default=16, help="graph degree")
+    ap.add_argument("--lam", type=int, default=8)
+    ap.add_argument("--build-iters", type=int, default=8)
+    ap.add_argument("--beam", type=int, default=32)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--nq", type=int, default=512)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=128,
+                    help="engine batch width (per-batch early exit)")
+    ap.add_argument("--toy", action="store_true",
+                    help="CI smoke: n=2000, nq=64, 2 reps")
+    ap.add_argument("--out", default="BENCH_search.json")
+    args = ap.parse_args(argv)
+    if args.toy:
+        args.n, args.nq, args.reps = 2000, 64, 2
+
+    # clustered data: uniform-random vectors have no metric structure to
+    # navigate, so every graph search (seed and fused alike) degenerates;
+    # clusters give the recall axis meaning at any n
+    data = clustered(jax.random.key(0), args.n, args.d,
+                     n_clusters=max(8, args.n // 2500), scale=0.8)
+    t0 = time.time()
+    g, _ = nn_descent(jax.random.key(1), data, args.k, lam=args.lam,
+                      max_iters=args.build_iters)
+    build_s = time.time() - t0
+    queries = data[:args.nq] + 0.02 * jax.random.normal(
+        jax.random.key(9), (args.nq, args.d))
+    gt_ids, _ = knn_search_bruteforce(data, queries, args.topk)
+
+    results = {"n": args.n, "d": args.d, "k": args.k, "beam": args.beam,
+               "nq": args.nq, "reps": args.reps,
+               "build_s": round(build_s, 1),
+               "backend": jax.default_backend(), "variants": []}
+    runs = [
+        lambda: bench_seed(g, data, queries, k=args.topk, beam=args.beam,
+                           reps=args.reps),
+        lambda: bench_fused(g, data, queries, k=args.topk, beam=args.beam,
+                            expand=1, reps=args.reps, label="fused",
+                            slots=args.slots),
+        lambda: bench_fused(g, data, queries, k=args.topk, beam=args.beam,
+                            expand=4, reps=args.reps, label="fused+E4",
+                            slots=args.slots),
+    ]
+    for run_fn in runs:
+        ids, ev, row = run_fn()
+        row["recall@10"] = round(float(search_recall(ids, gt_ids,
+                                                     args.topk)), 4)
+        row["evals_per_query"] = round(float(ev.mean()), 1)
+        results["variants"].append(row)
+        emit({"bench": "search", "n": args.n, **row})
+
+    seed_row = results["variants"][0]
+    for row in results["variants"][1:]:
+        results[f"{row['variant']}_speedup"] = round(
+            row["qps"] / seed_row["qps"], 3)
+    # the acceptance number: best fused arm that gives up no recall
+    eligible = [r for r in results["variants"][1:]
+                if r["recall@10"] >= seed_row["recall@10"] - 0.005]
+    results["speedup_at_equal_recall"] = round(
+        max((r["qps"] for r in eligible), default=0.0) / seed_row["qps"], 3)
+    results["kernel"] = kernel_smoke()
+    emit({"bench": "search",
+          "speedup_at_equal_recall": results["speedup_at_equal_recall"],
+          "kernel_parity": results["kernel"]["interpret_parity"]})
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+
+
+def run(n: int = 2000, nq: int = 64, reps: int = 2):
+    """Entry point for ``benchmarks.run`` (CPU-scale defaults)."""
+    main(["--n", str(n), "--nq", str(nq), "--reps", str(reps)])
+
+
+if __name__ == "__main__":
+    main()

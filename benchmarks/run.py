@@ -5,8 +5,9 @@
 fig5/6  λ sweep              fig7   subgraph→merged quality
 fig8    merge vs baselines   fig9   m-subgraph sweep
 fig10   index-graph search   fig12  merge vs scratch cost
-tab3    distributed (Alg.3)  roofline  dry-run aggregation (if artifacts)
+tab3    distributed (Alg.3)  roofline  kernel models + dry-run aggregation
 localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
+search     fused beam_expand search vs seed scan loop (BENCH json)
 """
 
 import sys
@@ -15,12 +16,14 @@ import time
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from benchmarks import (bench_localjoin, fig5_fig6_lambda,
+    from benchmarks import (bench_localjoin, bench_search, fig5_fig6_lambda,
                             fig7_subgraph_quality, fig8_merge_vs_baselines,
                             fig9_multiway, fig10_index_search,
                             fig12_build_time, roofline, tab3_distributed)
     jobs = [
         ("localjoin", lambda: bench_localjoin.run(n=1200 if fast else 2000)),
+        ("search", lambda: bench_search.run(n=1200 if fast else 2000,
+                                            nq=32 if fast else 64)),
         ("fig5/6", lambda: fig5_fig6_lambda.run(
             n=1200 if fast else 2000, lams=(2, 8) if fast else (2, 4, 8, 12))),
         ("fig7", lambda: fig7_subgraph_quality.run(n=1200 if fast else 2000)),

@@ -66,3 +66,13 @@ class BuildResult:
         return KnnIndex(graph=self.diversify(alpha, max_degree),
                         data=jnp.asarray(self.data),
                         metric=self.config.metric)
+
+    def to_engine(self, alpha: float | None = None,
+                  max_degree: int | None = None, **engine_kw):
+        """``to_index()`` + serving engine: build → serve in one call.
+
+        ``engine_kw`` forwards to
+        :class:`repro.serve.knn_engine.SearchEngine` (k, beam, expand,
+        slots, …).
+        """
+        return self.to_index(alpha, max_degree).engine(**engine_kw)

@@ -8,9 +8,9 @@ merged with one deterministic, fully-vectorized pipeline:
      (dist))`` key (two chained stable argsorts in the seed), rank within
      the row segment, keep ranks < cap, scatter into a dense ``(n, cap)``
      buffer. (Lossless for the final top-k whenever cap ≥ k: at most k
-     candidates can enter a row's top-k.) ``dedupe=True`` additionally
-     collapses duplicate edges — paper-idempotent try-insert, opt-in
-     because it shifts the pinned round-count baselines (DESIGN.md).
+     candidates can enter a row's top-k.) ``dedupe`` (default ON since
+     PR 3) additionally collapses duplicate edges — paper-idempotent
+     try-insert, ~3× fewer rounds to convergence (DESIGN.md §2.6).
   2. ``merge_rows``   — sorted-merge the candidate buffer into the existing
      rows via the ``topk_merge`` kernel (rank sort, duplicate ids keep the
      existing slot) and recover flags + the paper's ``n_updates`` convergence
@@ -115,7 +115,7 @@ def _scatter_capped(r_s, c_s, d_s, keep, rank, n: int, cap: int):
 
 def cap_scatter(rows: jax.Array, cols: jax.Array, dists: jax.Array,
                 n: int, cap: int, by_dist: bool = True,
-                dedupe: bool = False):
+                dedupe: bool = True):
     """Dense (n, cap) buffers holding ≤cap candidates per row — one sort.
 
     rows/cols: (E,) int32; dists: (E,) float32. Entries with row or col == -1
@@ -124,9 +124,11 @@ def cap_scatter(rows: jax.Array, cols: jax.Array, dists: jax.Array,
     ``dedupe`` collapses exact duplicates — same (row, col) with bit-equal
     sort key, i.e. the same edge produced by several join slots in one round
     — to their first copy so they cannot crowd distinct candidates out of
-    the cap. Off by default: it makes try-insert idempotent like the
-    paper's, but changes round dynamics vs the pinned baselines (measured
-    ~3× fewer rounds to convergence at equal quality — see DESIGN.md).
+    the cap. Default ON since PR 3 (try-insert is idempotent like the
+    paper's locked insert; measured ~3× fewer rounds to convergence at
+    equal quality — DESIGN.md §2.6; the convergence-trajectory baselines
+    the claim tests pin were re-measured under it). Pass ``dedupe=False``
+    to reproduce the pre-PR-3 crowding dynamics.
     Returns (cand_ids, cand_dists): (n, cap) with -1/+inf padding.
     """
     invalid = (rows == INVALID_ID) | (cols == INVALID_ID)

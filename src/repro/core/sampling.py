@@ -57,8 +57,10 @@ def reverse_cap(sample_ids: jax.Array, n: int, cap: int) -> jax.Array:
     src = jnp.broadcast_to(jnp.arange(n_rows, dtype=jnp.int32)[:, None],
                            (n_rows, s)).reshape(-1)
     dst = sample_ids.reshape(-1)
+    # dedupe=False: (u ← i) pairs are distinct by the row invariant, so
+    # duplicate collapse has nothing to do — skip its extra sort key.
     ids, _ = cap_scatter(dst, src, src.astype(jnp.float32), n, cap,
-                         by_dist=False)
+                         by_dist=False, dedupe=False)
     return ids
 
 
@@ -76,7 +78,7 @@ def support_graph(g0: KnnGraph, lam: int) -> jax.Array:
     src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                            g0.ids.shape).reshape(-1)
     rev_ids, _ = cap_scatter(g0.ids.reshape(-1), src, g0.dists.reshape(-1),
-                             n, lam, by_dist=True)
+                             n, lam, by_dist=True, dedupe=False)
     return jnp.concatenate([fwd, rev_ids], axis=1)
 
 

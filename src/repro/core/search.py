@@ -6,13 +6,21 @@ DISTANCE EVALUATIONS (the hardware-free cost that determines QPS on any
 machine) alongside wall time.
 
 Batched over queries with an explicit (q, beam) state — not vmap — so the
-beam update runs through the 2-D ``topk_merge`` primitive (Pallas
-rank-sort kernel on TPU, jnp oracle elsewhere; a vmapped 1-D call would
-always fall back to the oracle). Fixed expansion budget keeps the cost
-model deterministic and the loop jittable. Entries dropped from the beam
-may be revisited (no global visited set) — the standard fixed-beam
-approximation; the eval counter includes such revisits, so comparisons
-stay fair.
+per-step beam update runs through the fused ``beam_expand`` primitive
+(Pallas kernel on TPU, jnp oracle elsewhere): distance evaluation,
+duplicate masking and the rank-sort merge happen in one VMEM-resident
+pass, and multi-expansion (``expand`` > 1) amortizes each HBM gather and
+beam update across ``expand·kg`` candidate evaluations. The step loop is a
+``lax.while_loop`` with an all-converged early exit: a query is converged
+when every valid beam entry has been expanded, converged queries are exact
+fixed points of the step (no evals, no state change), so results AND eval
+counts are identical to the fixed-budget scan — the exit only stops paying
+for steps nobody needs. ``beam_search_scan`` keeps the pre-fusion
+fixed-``lax.scan`` loop as the parity ground truth and benchmark baseline.
+
+Entries dropped from the beam may be revisited (no global visited set) —
+the standard fixed-beam approximation; the eval counter includes such
+revisits, so comparisons stay fair.
 """
 
 from __future__ import annotations
@@ -27,35 +35,114 @@ from repro.core.graph import INVALID_ID, KnnGraph
 from repro.kernels import ops as kops
 
 
-@functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
-                                              "k", "n_entries"))
-def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
-                beam: int = 32, max_steps: int | None = None,
-                metric: str = "l2", n_entries: int = 8):
-    """Search each query; returns (ids (q,k), dists (q,k), evals (q,)).
+def _check_k_beam(k: int, beam: int):
+    # raises at trace time (k/beam are static) — the silent ids[:, :k]
+    # truncation used to hand back k columns of garbage for k > beam.
+    if k > beam:
+        raise ValueError(
+            f"beam_search needs k <= beam to return k neighbors, got "
+            f"k={k} > beam={beam}; raise beam (the ef/L parameter)")
 
-    ``beam`` is the ef/L parameter of HNSW/Vamana. ``max_steps`` bounds the
-    number of expansions (default 2·beam). The beam is seeded with
-    ``n_entries`` strided entry points — the flat-graph stand-in for HNSW's
-    upper levels / Vamana's medoid (a bare k-NN graph on clustered data is
+
+def _init_beam(g: KnnGraph, data: jax.Array, queries: jax.Array,
+               beam: int, metric: str, n_entries: int):
+    """Strided entry points — the flat-graph stand-in for HNSW's upper
+    levels / Vamana's medoid (a bare k-NN graph on clustered data is
     disconnected across clusters, so single-entry greedy search cannot
-    navigate between them; identical seeding for every compared graph keeps
-    the QPS-recall comparison fair).
-    """
-    max_steps = max_steps or 2 * beam
-    kg = g.k
+    navigate between them; identical seeding for every compared graph
+    keeps the QPS-recall comparison fair)."""
     n = data.shape[0]
     nq = queries.shape[0]
     n_entries = min(n_entries, beam, n)
     entries = jnp.linspace(0, n - 1, n_entries).astype(jnp.int32)
-
-    # beam state, batched (q, beam): ids/dists ascending, expanded flags
     ids0 = jnp.broadcast_to(
         jnp.full((beam,), INVALID_ID, jnp.int32).at[:n_entries].set(entries),
         (nq, beam))
     d0 = jnp.full((nq, beam), jnp.inf).at[:, :n_entries].set(
         _metrics.dist_point(metric, queries[:, None, :], data[entries][None]))
     exp0 = jnp.zeros((nq, beam), bool)
+    return ids0, d0, exp0
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
+                                              "k", "n_entries", "expand"))
+def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
+                beam: int = 32, max_steps: int | None = None,
+                metric: str = "l2", n_entries: int = 8, expand: int = 1):
+    """Search each query; returns (ids (q,k), dists (q,k), evals (q,)).
+
+    ``beam`` is the ef/L parameter of HNSW/Vamana (must be >= k).
+    ``expand`` expands the E best unexpanded frontier nodes per step — one
+    gather, one fused distance+merge pass for all E·kg candidates.
+    ``max_steps`` bounds the number of LOOP steps (default ⌈2·beam/E⌉, so
+    the total expansion budget matches the pre-fusion loop); the
+    while-loop exits early once every query has converged, with results
+    and eval counts identical to running the full budget.
+    """
+    _check_k_beam(k, beam)
+    if not 1 <= expand <= beam:
+        raise ValueError(f"expand must be in [1, beam], got {expand}")
+    max_steps = max_steps or -(-2 * beam // expand)
+    kg = g.k
+    nq = queries.shape[0]
+    ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries)
+    # ``beam_expand`` requires rows ascending (its merge exploits the
+    # invariant); entry seeds arrive in stride order, so sort them once.
+    # Result-neutral vs the scan loop: its first merge performs the same
+    # stable sort before anything is compared across steps.
+    order = jnp.argsort(d0, axis=1, stable=True)
+    ids0 = jnp.take_along_axis(ids0, order, axis=1)
+    d0 = jnp.take_along_axis(d0, order, axis=1)
+
+    def cond(state):
+        ids, _, expanded, _, step = state
+        return (step < max_steps) & jnp.any(~expanded & (ids != INVALID_ID))
+
+    def body(state):
+        ids, dists, expanded, evals, step = state
+        cand = ~expanded & (ids != INVALID_ID)
+        masked = jnp.where(cand, dists, jnp.inf)
+        # E closest unexpanded entries; top_k takes the earliest slot on
+        # ties, matching the scan loop's argmax-over-mask pick.
+        _, sl = jax.lax.top_k(-masked, expand)                      # (q, E)
+        open_e = jnp.take_along_axis(cand, sl, axis=1)              # (q, E)
+        hit = jnp.any((jnp.arange(beam)[None, None, :] == sl[:, :, None])
+                      & open_e[:, :, None], axis=1)
+        expanded = expanded | hit
+        picked = jnp.take_along_axis(ids, sl, axis=1)               # (q, E)
+        nbrs = g.ids[jnp.maximum(picked, 0)]                        # (q, E, kg)
+        nbrs = jnp.where(open_e[:, :, None], nbrs,
+                         INVALID_ID).reshape(nq, expand * kg)
+        vecs = data[jnp.maximum(nbrs, 0)]                           # (q, C, d)
+        # expand == 1 → the candidate block is one graph row, whose ids
+        # are duplicate-free, so the merge skips the (C, C) dup pass
+        ids, dists, expanded, ev = kops.beam_expand(
+            queries, vecs, nbrs, ids, dists, expanded, metric=metric,
+            distinct_cands=expand == 1)
+        return ids, dists, expanded, evals + ev, step + 1
+
+    init = (ids0, d0, exp0, jnp.zeros((nq,), jnp.int32), jnp.int32(0))
+    ids, dists, _, evals, _ = jax.lax.while_loop(cond, body, init)
+    return ids[:, :k], dists[:, :k], evals
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
+                                              "k", "n_entries"))
+def beam_search_scan(g: KnnGraph, data: jax.Array, queries: jax.Array,
+                     k: int, beam: int = 32, max_steps: int | None = None,
+                     metric: str = "l2", n_entries: int = 8):
+    """The pre-fusion fixed-budget loop (one expansion per ``lax.scan``
+    step, explicit dup mask, ``topk_merge`` beam update, no early exit).
+
+    Kept verbatim as the parity ground truth for ``beam_search`` at
+    ``expand=1`` (bit-identical ids/dists/evals on the oracle path —
+    pinned by tests/test_beam_expand.py) and as the baseline arm of
+    ``benchmarks/bench_search.py``.
+    """
+    _check_k_beam(k, beam)
+    max_steps = max_steps or 2 * beam
+    nq = queries.shape[0]
+    ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries)
 
     def step(state, _):
         ids, dists, expanded, evals = state

@@ -1,0 +1,181 @@
+"""Pallas TPU kernel: fused beam-expansion step for graph NN search.
+
+The pre-fusion search loop paid, per expansion step and per query: a gather
+of the frontier node's neighbor vectors from HBM, an elementwise distance
+pass, an O(C·beam) duplicate-membership check, a ``topk_merge`` call and a
+separate membership pass to transfer the expanded flags — five HBM-visible
+stages whose intermediates (the (q, C) candidate block, the dup mask, the
+merged-width workspace) all round-tripped through memory.
+
+This kernel fuses everything after the gather: one grid step stages a block
+of queries, their beam state and the gathered neighbor vectors of the top-E
+unexpanded frontier nodes in VMEM, puts the (q, E·kg) cross term on the MXU
+via ``dot_general``, masks duplicates against the beam in-register, and
+rank-sort-merges candidates into the beam (§1 of DESIGN.md) with the
+expanded flags riding the same one-hot permutation as a second payload —
+the per-step candidate block never reaches HBM. Multi-expansion (E > 1)
+amortizes each beam update and each HBM gather across E·kg distance
+evaluations, cutting the step count ~E×.
+
+Input contract: beam rows hold DISTINCT valid ids (the search-loop
+invariant — every merge dedupes); the kernel skips an intra-beam
+duplicate pass on that basis, while the oracle happens to tolerate
+duplicate beam ids via ``topk_merge``'s suppression.
+
+Parity contract vs the jnp oracle (``repro.kernels.ref.beam_expand``):
+ids and flags match exactly (the rank sort is a stable ascending argsort);
+distances may differ by ~1 ulp because the kernel uses the matmul identity
+``‖u‖²+‖v‖²−2u·v`` on the MXU while the oracle keeps the pre-fusion loop's
+elementwise form — on tied distances that can legitimately flip which of
+two equal candidates survives, the same caveat as ``join_topk``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import INVALID_ID
+from repro.kernels.topk_merge import rank_topc_multi
+
+
+def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref,
+            oid_ref, od_ref, oexp_ref, cnt_ref, *, beam, metric,
+            distinct_cands):
+    q = q_ref[...]                                     # (bq, d)
+    nv = nv_ref[...]                                   # (bq, C, d)
+    nid = nid_ref[...]                                 # (bq, C)
+    bid = bid_ref[...]                                 # (bq, beam)
+    bd = bd_ref[...]
+    bexp = bexp_ref[...]                               # (bq, beam) int32
+    C = nid.shape[1]
+    if metric == "cos":
+        q = q / jnp.maximum(
+            jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True)), 1e-12)
+        nv = nv / jnp.maximum(
+            jnp.sqrt(jnp.sum(nv * nv, axis=-1, keepdims=True)), 1e-12)
+    cross = jax.lax.dot_general(
+        nv, q, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # (bq, C) on the MXU
+    if metric == "ip":
+        nd = -cross
+    elif metric == "cos":
+        nd = 1.0 - cross
+    else:                                              # squared L2
+        qn = jnp.sum(q * q, axis=-1)                   # (bq,)
+        nn = jnp.sum(nv * nv, axis=-1)                 # (bq, C)
+        nd = jnp.maximum(nn + qn[:, None] - 2.0 * cross, 0.0)
+    valid = nid != INVALID_ID
+    cnt_ref[...] = jnp.sum(valid, axis=-1, keepdims=True,
+                           dtype=jnp.int32)            # (bq, 1)
+    # -- duplicate suppression (same contract as topk_merge): a candidate
+    # already in the beam keeps the beam slot (and its flag); among
+    # duplicate candidates the earliest slot wins.
+    dup_beam = jnp.any(nid[:, :, None] == bid[:, None, :], axis=-1)
+    if distinct_cands:
+        # one graph row: duplicate-free by the row invariant
+        bad = dup_beam | ~valid
+    else:
+        ia = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+        ib = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+        earlier = ia > ib
+        dup_cand = jnp.any(
+            (nid[:, :, None] == nid[:, None, :]) & earlier[None], axis=-1)
+        bad = dup_beam | dup_cand | ~valid
+    cd = jnp.where(bad, jnp.inf, nd)
+    cid = jnp.where(bad, INVALID_ID, nid)
+    keys = jnp.concatenate([bd, cd], axis=-1)          # (bq, beam + C)
+    ids = jnp.concatenate([bid, cid], axis=-1)
+    flg = jnp.concatenate([bexp, jnp.zeros_like(cid)], axis=-1)
+    kk, (ii, ff) = rank_topc_multi(
+        keys, ((ids, INVALID_ID), (flg, 0)), beam)
+    oid_ref[...] = ii
+    od_ref[...] = kk
+    oexp_ref[...] = ff
+
+
+def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
+                      expanded, *, metric: str, distinct_cands: bool = False,
+                      interpret: bool = False):
+    """(q, d) × gathered (q, C, d) candidates → merged (q, beam) state."""
+    nq, beam = beam_ids.shape
+    C, d = nbr_vecs.shape[1], nbr_vecs.shape[2]
+    queries = queries.astype(jnp.float32)
+    nbr_vecs = nbr_vecs.astype(jnp.float32)
+    dp, Cp = (-d) % 128, (-C) % 8
+    queries = jnp.pad(queries, ((0, 0), (0, dp)))
+    nbr_vecs = jnp.pad(nbr_vecs, ((0, 0), (0, Cp), (0, dp)))
+    nbr_ids = jnp.pad(nbr_ids, ((0, 0), (0, Cp)), constant_values=INVALID_ID)
+    C2, d2 = C + Cp, d + dp
+    W = beam + C2
+    # VMEM per query: operands + dup masks + the (W, W) rank block and the
+    # (W, beam) one-hot (dominant) + beam state and outputs, 4 B words.
+    per_q = ((C2 + 1) * d2 + C2 * (beam + C2) + W * W + 2 * W * beam
+             + 6 * beam + 2 * C2)
+    bq = max(1, min(nq, (8 << 20) // max(4 * per_q, 1)))
+    qpad = (-nq) % bq
+    queries = jnp.pad(queries, ((0, qpad), (0, 0)))
+    nbr_vecs = jnp.pad(nbr_vecs, ((0, qpad), (0, 0), (0, 0)))
+    nbr_ids = jnp.pad(nbr_ids, ((0, qpad), (0, 0)),
+                      constant_values=INVALID_ID)
+    beam_ids = jnp.pad(beam_ids, ((0, qpad), (0, 0)),
+                       constant_values=INVALID_ID)
+    beam_dists = jnp.pad(beam_dists, ((0, qpad), (0, 0)),
+                         constant_values=jnp.inf)
+    exp32 = jnp.pad(expanded.astype(jnp.int32), ((0, qpad), (0, 0)))
+    nq2 = nq + qpad
+    kern = functools.partial(_kernel, beam=beam, metric=metric,
+                             distinct_cands=distinct_cands)
+    oid, od, oexp, cnt = pl.pallas_call(
+        kern,
+        grid=(nq2 // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d2), lambda i: (i, 0)),
+            pl.BlockSpec((bq, C2, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, C2), lambda i: (i, 0)),
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
+            jax.ShapeDtypeStruct((nq2, beam), jnp.float32),
+            jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
+            jax.ShapeDtypeStruct((nq2, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, exp32)
+    return (oid[:nq], od[:nq], oexp[:nq].astype(bool), cnt[:nq, 0])
+
+
+_beam_expand_jit = jax.jit(_beam_expand_impl,
+                           static_argnames=("metric", "distinct_cands"))
+
+
+def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
+                       expanded, *, metric: str = "l2",
+                       distinct_cands: bool = False, interpret: bool = False):
+    """Fused beam-expansion step; see the module docstring.
+
+    ``distinct_cands`` asserts the candidate block has duplicate-free ids
+    (one graph row — expand=1), skipping the (C, C) duplicate pass.
+    interpret=True runs the kernel body eagerly (CPU validation
+    path) — NOT under jit: compiling the interpreter loop is
+    pathologically slow (see pairdist).
+    """
+    if interpret:
+        return _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids,
+                                 beam_dists, expanded, metric=metric,
+                                 distinct_cands=distinct_cands, interpret=True)
+    return _beam_expand_jit(queries, nbr_vecs, nbr_ids, beam_ids,
+                            beam_dists, expanded, metric=metric,
+                            distinct_cands=distinct_cands)

@@ -57,6 +57,29 @@ def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
                           symmetric=symmetric)
 
 
+def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
+                *, metric: str = "l2", distinct_cands: bool = False):
+    """Fused beam-expansion step for graph NN search.
+
+    Distances for the gathered candidate block, duplicate masking against
+    the beam, the rank-sort merge into the beam and the expanded-flag
+    transfer — all in one VMEM-resident pass on TPU. ``distinct_cands``
+    asserts the candidate block has duplicate-free ids (one graph row —
+    the ``expand=1`` case), skipping the (C, C) duplicate pass.
+    Returns ``(new_ids, new_dists, new_expanded, n_evals)``; the jnp
+    oracle is the parity ground truth and the non-TPU path (bit-identical
+    to the pre-fusion search loop).
+    """
+    if use_pallas() and queries.ndim == 2:
+        from repro.kernels import beam_expand as _k
+        return _k.beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids,
+                                     beam_dists, expanded, metric=metric,
+                                     distinct_cands=distinct_cands)
+    return _ref.beam_expand(queries, nbr_vecs, nbr_ids, beam_ids,
+                            beam_dists, expanded, metric=metric,
+                            distinct_cands=distinct_cands)
+
+
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
     if use_pallas() and row_ids.ndim == 2:
         from repro.kernels import topk_merge as _k

@@ -87,6 +87,107 @@ def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
     return fwd_i, fwd_d, rev_i, rev_d, n_evals
 
 
+def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
+                expanded, *, metric: str = "l2",
+                distinct_cands: bool = False):
+    """One fused beam-expansion step — oracle for the ``beam_expand`` kernel.
+
+    queries: (q, d); nbr_vecs/nbr_ids: (q, C, d)/(q, C) the gathered
+    neighbor rows of the just-expanded frontier nodes (-1 = padding /
+    masked-off query); beam_ids/beam_dists/expanded: (q, beam) beam state.
+    INPUT CONTRACT: beam rows hold distinct valid ids sorted ASCENDING by
+    distance with (-1, +inf) padding at the tail — the search-loop
+    invariant (``beam_search`` sorts its entry seeds, every merge output
+    is sorted).
+
+    Distances use the ELEMENTWISE form (``Σ(a−b)²``), not the matmul
+    identity — bit-identical to the pre-fusion ``beam_search`` loop, which
+    evaluated candidates through ``metrics.dist_point``. The Pallas kernel
+    puts the same contraction on the MXU (matmul form), so its distances
+    may differ by ~1 ulp, same contract as ``join_topk``.
+
+    The merge exploits the ascending invariant: instead of re-sorting the
+    concatenated ``beam + C`` slots (the (W, W) rank matrix + a second
+    beam² membership pass for the flags, what ``topk_merge`` would do), it
+    computes the candidates' output positions with one compare-count
+    block —
+
+      pos_cand[j] = rank_j + #{i : beam[i] <= cand[j]}     (ties → beam)
+
+    (``rank_j`` = stable rank among candidates) and then fills output slot
+    ``o`` by GATHER: the candidate with ``pos_cand == o`` if one exists,
+    else beam entry ``o − #{j : pos_cand[j] < o}`` (runs keep their order
+    under a stable merge, so that index is exact). Positions are unique,
+    the two cases partition the slots, and dropped entries — positions
+    past the beam — are simply never gathered; masked/padding contributors
+    carry exactly the (-1, +inf, False) fill values. O(beam·C + C²) work
+    per query instead of O((beam+C)²) — and the expanded flags ride the
+    beam-side gather directly, no membership pass. The result is
+    bit-identical to the stable-argsort merge: positions ARE the stable
+    ranks of the concatenated slots.
+
+    ``distinct_cands`` asserts the candidate block is ONE graph row —
+    duplicate-free ids by the row invariant (the ``expand=1`` case) — so
+    the intra-candidate duplicate pass is skipped. (The rank compare
+    stays: the row is sorted by distance to its OWNER, not to the query.)
+
+    Returns ``(new_ids, new_dists, new_expanded, n_evals)``; candidates
+    duplicating a beam entry are suppressed (beam side wins, keeping its
+    flag), among duplicate candidates the earliest slot wins, fresh
+    survivors come back unexpanded. ``n_evals`` counts every valid
+    candidate (q,) int32 — including beam duplicates, exactly like the
+    unfused loop, so recall-vs-evals comparisons stay honest.
+    """
+    q = queries[:, None, :]
+    if metric == "ip":
+        nd = -jnp.sum(q * nbr_vecs, axis=-1)
+    elif metric == "cos":
+        a = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        b = nbr_vecs / jnp.maximum(
+            jnp.linalg.norm(nbr_vecs, axis=-1, keepdims=True), 1e-12)
+        nd = 1.0 - jnp.sum(a * b, axis=-1)
+    else:
+        diff = q - nbr_vecs
+        nd = jnp.sum(diff * diff, axis=-1)
+    nq, beam = beam_ids.shape
+    C = nbr_ids.shape[1]
+    valid = nbr_ids != -1
+    dup_beam = jnp.any(nbr_ids[:, :, None] == beam_ids[:, None, :], axis=-1)
+    earlier = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]
+    if distinct_cands:
+        ok = valid & ~dup_beam
+    else:
+        dup_cand = jnp.any((nbr_ids[:, :, None] == nbr_ids[:, None, :])
+                           & earlier[None], axis=-1)
+        ok = valid & ~dup_beam & ~dup_cand
+    cd = jnp.where(ok, nd, jnp.inf)
+    cid = jnp.where(ok, nbr_ids, -1)
+    # two-run stable merge by compare-counts (see docstring)
+    le = beam_dists[:, :, None] <= cd[:, None, :]          # (q, beam, C)
+    rank_c = jnp.sum((cd[:, None, :] < cd[:, :, None])
+                     | ((cd[:, None, :] == cd[:, :, None]) & earlier[None]),
+                     axis=-1, dtype=jnp.int32)
+    pos_c = rank_c + jnp.sum(le, axis=-2, dtype=jnp.int32)  # (q, C)
+    # place by gather: output slot o holds either the candidate whose
+    # pos_c == o, else beam entry (o − #candidates placed before o) —
+    # positions are unique, so the two cases partition the slots.
+    slots = jnp.arange(beam, dtype=jnp.int32)
+    eq_po = pos_c[:, :, None] == slots                     # (q, C, beam)
+    is_cand = jnp.any(eq_po, axis=1)                       # (q, beam)
+    cand_src = jnp.sum(jnp.where(
+        eq_po, jnp.arange(C, dtype=jnp.int32)[:, None], 0), axis=1)
+    n_before = jnp.sum(pos_c[:, :, None] < slots, axis=1, dtype=jnp.int32)
+    beam_src = jnp.clip(slots - n_before, 0, beam - 1)     # (q, beam)
+    new_ids = jnp.where(
+        is_cand, jnp.take_along_axis(cid, cand_src, axis=1),
+        jnp.take_along_axis(beam_ids, beam_src, axis=1))
+    new_d = jnp.where(
+        is_cand, jnp.take_along_axis(cd, cand_src, axis=1),
+        jnp.take_along_axis(beam_dists, beam_src, axis=1))
+    new_e = ~is_cand & jnp.take_along_axis(expanded, beam_src, axis=1)
+    return new_ids, new_d, new_e, jnp.sum(valid, axis=-1, dtype=jnp.int32)
+
+
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
     """Merge a sorted neighbor row with candidates → sorted top-k.
 

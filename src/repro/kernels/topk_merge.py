@@ -29,21 +29,18 @@ from jax.experimental import pallas as pl
 from repro.core.graph import INVALID_ID
 
 
-def rank_topc(keys: jax.Array, payload: jax.Array, cap: int,
-              mask_inf: bool = True):
-    """Stable top-``cap`` of (…, W) keys with int payload via rank sort.
+def rank_topc_multi(keys: jax.Array, payloads, cap: int):
+    """Stable top-``cap`` of (…, W) keys carrying SEVERAL payload planes.
 
     rank[i] = #{j : key[j] < key[i] or (key[j] == key[i] and j < i)} — the
     position a stable ascending argsort would assign slot i — then a
     one-hot contraction against the first ``cap`` ranks places keys and
     payloads: two wide ops, no serial chain (see DESIGN.md §1). With
-    ``cap == W`` this is a full stable sort. Unmatched output slots
-    (W < cap) come back as (+inf, INVALID_ID); ``mask_inf`` additionally
-    maps +inf-key payloads to INVALID_ID (``join_topk``'s "no candidate"
-    convention — ``topk_merge`` must NOT, its oracle keeps ids on inf
-    slots). The shared core of both kernels: input order never affects the
-    *output* order (it is a full sort), only which of several
-    bit-equal-key duplicates lands first (slot order).
+    ``cap == W`` this is a full stable sort. ``payloads`` is an iterable of
+    ``(plane, fill)`` pairs; each plane rides the same one-hot permutation
+    and unmatched output slots (W < cap) come back as ``(+inf, fill)``.
+    Input order never affects the *output* order (it is a full sort), only
+    which of several bit-equal-key duplicates lands first (slot order).
     """
     W = keys.shape[-1]
     pos = jnp.arange(W, dtype=jnp.int32)
@@ -53,10 +50,26 @@ def rank_topc(keys: jax.Array, payload: jax.Array, cap: int,
     rank = jnp.sum(strictly_less | tie_before, axis=-1)      # (…, W) unique
     onehot = rank[..., :, None] == jnp.arange(cap, dtype=jnp.int32)
     kk = jnp.sum(jnp.where(onehot, keys[..., :, None], 0.0), axis=-2)
-    pp = jnp.sum(jnp.where(onehot, payload[..., :, None], 0), axis=-2)
     hit = jnp.any(onehot, axis=-2)
     kk = jnp.where(hit, kk, jnp.inf)
-    pp = jnp.where(hit, pp.astype(payload.dtype), INVALID_ID)
+    outs = []
+    for plane, fill in payloads:
+        pp = jnp.sum(jnp.where(onehot, plane[..., :, None], 0), axis=-2)
+        outs.append(jnp.where(hit, pp.astype(plane.dtype), fill))
+    return kk, outs
+
+
+def rank_topc(keys: jax.Array, payload: jax.Array, cap: int,
+              mask_inf: bool = True):
+    """Stable top-``cap`` of (…, W) keys with ONE int payload via rank sort.
+
+    Thin wrapper over :func:`rank_topc_multi`. Unmatched output slots
+    (W < cap) come back as (+inf, INVALID_ID); ``mask_inf`` additionally
+    maps +inf-key payloads to INVALID_ID (``join_topk``'s "no candidate"
+    convention — ``topk_merge`` must NOT, its oracle keeps ids on inf
+    slots).
+    """
+    kk, (pp,) = rank_topc_multi(keys, ((payload, INVALID_ID),), cap)
     if mask_inf:
         pp = jnp.where(jnp.isfinite(kk), pp, INVALID_ID)
     return kk, pp

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import KnnGraph
-from repro.core.search import beam_search
 from repro.models.model import Model
 
 
@@ -51,7 +50,25 @@ class KnnIndex:
                           max_degree=max_degree)
         return GraphBuilder(cfg).build(data, key=key).to_index()
 
-    def search(self, queries: jax.Array, k: int = 10, beam: int = 32):
-        ids, dists, evals = beam_search(self.graph, self.data, queries, k,
-                                        beam=beam, metric=self.metric)
-        return ids, dists, evals
+    def engine(self, **kw):
+        """A persistent :class:`repro.serve.knn_engine.SearchEngine` over
+        this index — the serving path (fixed slot batches, QPS stats)."""
+        from repro.serve.knn_engine import SearchEngine
+        return SearchEngine.from_index(self, **kw)
+
+    def search(self, queries: jax.Array, k: int = 10, beam: int = 32,
+               expand: int = 1):
+        """One-shot search: a single slot batch sized to the query block.
+
+        Routed through the serving engine so the one-shot and streaming
+        paths run the identical fused search; with ``slots == nq`` there
+        is no padding, so results match ``beam_search`` bit-for-bit.
+        ``record_stats=False``: this engine is a throwaway wrapper, so it
+        skips the per-batch host sync its stats would cost (keeping the
+        old direct call's async dispatch).
+        """
+        queries = jax.numpy.asarray(queries)
+        eng = self.engine(k=k, beam=beam, expand=expand,
+                          slots=max(queries.shape[0], 1),
+                          record_stats=False)
+        return eng.search(queries)

@@ -70,13 +70,31 @@ def test_two_way_merge_quality(data, gt, halves):
 
 
 def test_two_way_cheaper_than_smerge(data, gt, halves):
+    # The hardware-free core of the paper's 2× claim, re-pinned for the
+    # idempotent insert (cap_scatter dedupe, default since PR 3): at toy
+    # scale S-Merge's full-graph NN-Descent now refines PAST the merge
+    # quality band before its δ-stop (≈ a from-scratch rebuild), so total
+    # evals at convergence are no longer an equal-quality comparison.
+    # Fig. 8 compares cost at comparable quality — assert two-way reaches
+    # the subgraph quality band with fewer distance evaluations.
     sizes, subs, g0 = halves
-    _, st_tw = two_way_merge(jax.random.key(3), data, sizes, g0, lam=LAM,
-                             max_iters=20)
-    g_sm, st_sm = s_merge(jax.random.key(4), data, sizes, g0, lam=LAM,
-                          max_iters=20)
-    # the hardware-free core of the paper's 2× claim
-    assert st_tw["total_evals"] < st_sm["total_evals"]
+    target = 0.85
+
+    def evals_until(trace):
+        return min((ev for ev, r in trace if r >= target),
+                   default=float("inf"))
+
+    tw_trace, sm_trace = [], []
+    two_way_merge(jax.random.key(3), data, sizes, g0, lam=LAM, max_iters=20,
+                  trace_fn=lambda g, it, st: tw_trace.append(
+                      (st["total_evals"],
+                       float(recall(merge_full(g, g0), gt.ids, 10)))))
+    g_sm, _ = s_merge(jax.random.key(4), data, sizes, g0, lam=LAM,
+                      max_iters=20,
+                      trace_fn=lambda g, it, st: sm_trace.append(
+                          (st["total_evals"],
+                           float(recall(g, gt.ids, 10)))))
+    assert evals_until(tw_trace) < evals_until(sm_trace), (tw_trace, sm_trace)
     assert float(recall(g_sm, gt.ids, 10)) > 0.9
 
 

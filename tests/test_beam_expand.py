@@ -1,0 +1,183 @@
+"""Fused beam-expansion search: kernel parity, scan-loop bit-parity,
+early-exit equivalence.
+
+Three layers of ground truth, bottom up:
+
+  1. ``beam_expand`` Pallas kernel (interpret=True) vs the jnp oracle —
+     shape/metric sweep incl. INVALID_ID padding and partially-expanded
+     beams; ids and flags must match exactly, distances to float
+     tolerance (the kernel uses the MXU matmul identity, the oracle the
+     pre-fusion elementwise form).
+  2. the fused ``beam_search`` (while-loop + ``kops.beam_expand``) at
+     ``expand=1`` vs ``beam_search_scan`` (the pre-fusion fixed-budget
+     loop, kept verbatim) — bit-identical ids/dists/evals on the oracle
+     path.
+  3. early exit: stopping once every query converged changes neither
+     results nor eval counts (converged queries are exact fixed points of
+     the step), so the fixed-budget cost model stays honest.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from repro.core.bruteforce import knn_bruteforce, knn_search_bruteforce
+from repro.core.graph import INVALID_ID
+from repro.core.search import beam_search, beam_search_scan, search_recall
+from repro.data.vectors import clustered
+from repro.kernels import ref
+from repro.kernels.beam_expand import beam_expand_pallas
+
+
+def _random_state(rng, nq, C, d, beam, id_range=60):
+    """Inputs respecting the kernel contract: distinct valid beam ids."""
+    qs = jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
+    nv = jnp.asarray(rng.normal(size=(nq, C, d)).astype(np.float32))
+    nid = jnp.asarray(rng.integers(-1, id_range, (nq, C)).astype(np.int32))
+    bid = np.full((nq, beam), INVALID_ID, np.int32)
+    for r in range(nq):
+        nvalid = int(rng.integers(1, beam + 1))
+        bid[r, :nvalid] = rng.choice(id_range, nvalid, replace=False)
+    bid = jnp.asarray(bid)
+    bd = jnp.where(bid != INVALID_ID,
+                   jnp.asarray(np.sort(rng.random((nq, beam))
+                                       .astype(np.float32), axis=1)),
+                   jnp.inf)
+    bexp = jnp.asarray(rng.integers(0, 2, (nq, beam)).astype(bool)) \
+        & (bid != INVALID_ID)
+    return qs, nv, nid, bid, bd, bexp
+
+
+def _assert_expand_equal(got, want):
+    for name, w, g in zip(("ids", "dists", "expanded", "evals"), want, got):
+        w, g = np.asarray(w), np.asarray(g)
+        assert w.shape == g.shape, name
+        if w.dtype == np.float32:
+            assert_array_equal(np.isinf(g), np.isinf(w), err_msg=name)
+            assert_allclose(np.where(np.isinf(g), 0, g),
+                            np.where(np.isinf(w), 0, w),
+                            rtol=1e-5, atol=1e-5, err_msg=name)
+        else:
+            assert_array_equal(g, w, err_msg=name)
+
+
+# ---- 1. kernel vs oracle --------------------------------------------------
+
+@pytest.mark.parametrize("nq,C,d,beam", [(5, 8, 10, 6), (16, 32, 32, 16),
+                                         (3, 17, 50, 9), (7, 64, 128, 32),
+                                         (4, 16, 24, 32)])   # C < beam
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_beam_expand_shape_metric_sweep(nq, C, d, beam, metric):
+    rng = np.random.default_rng(nq * 100 + C)
+    args = _random_state(rng, nq, C, d, beam)
+    want = ref.beam_expand(*args, metric=metric)
+    got = beam_expand_pallas(*args, metric=metric, interpret=True)
+    _assert_expand_equal(got, want)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_beam_expand_distinct_cands_fast_path_equivalent(use_kernel):
+    # duplicate-free candidate ids (one graph row): the distinct_cands
+    # fast path must be indistinguishable from the generic path
+    rng = np.random.default_rng(3)
+    nq, C, d, beam = 6, 16, 12, 10
+    qs, nv, _, bid, bd, bexp = _random_state(rng, nq, C, d, beam)
+    nid = np.full((nq, C), INVALID_ID, np.int32)
+    for r in range(nq):
+        nid[r, :12] = rng.choice(60, 12, replace=False)
+    nid = jnp.asarray(nid)
+    fn = ((lambda *a, **k: beam_expand_pallas(*a, interpret=True, **k))
+          if use_kernel else ref.beam_expand)
+    want = fn(qs, nv, nid, bid, bd, bexp)
+    got = fn(qs, nv, nid, bid, bd, bexp, distinct_cands=True)
+    _assert_expand_equal(got, want)
+
+
+def test_beam_expand_all_invalid_candidates_is_identity():
+    rng = np.random.default_rng(1)
+    nq, C, d, beam = 4, 10, 12, 8
+    qs, nv, _, bid, bd, bexp = _random_state(rng, nq, C, d, beam)
+    nid = jnp.full((nq, C), INVALID_ID, jnp.int32)
+    oid, od, oexp, ev = beam_expand_pallas(qs, nv, nid, bid, bd, bexp,
+                                           interpret=True)
+    # a converged/closed query is a fixed point: sorted beam unchanged,
+    # flags transfer, zero evals — the basis of the early-exit guarantee
+    assert_array_equal(np.asarray(ev), 0)
+    assert_array_equal(np.asarray(oid), np.asarray(bid))
+    assert_array_equal(np.asarray(oexp), np.asarray(bexp))
+    fin = ~np.isinf(np.asarray(bd))
+    assert_array_equal(np.asarray(od)[fin], np.asarray(bd)[fin])
+
+
+def test_beam_expand_dup_candidates_keep_beam_slot():
+    # candidate id 3 already sits in the beam with flag=True: the beam
+    # copy (and its flag) must survive, the candidate eval still counts
+    qs = jnp.zeros((1, 4), jnp.float32)
+    nv = jnp.ones((1, 2, 4), jnp.float32)
+    nid = jnp.asarray([[3, 9]], jnp.int32)
+    bid = jnp.asarray([[3, -1]], jnp.int32)
+    bd = jnp.asarray([[0.25, np.inf]], jnp.float32)
+    bexp = jnp.asarray([[True, False]])
+    oid, od, oexp, ev = beam_expand_pallas(qs, nv, nid, bid, bd, bexp,
+                                           interpret=True)
+    want = ref.beam_expand(qs, nv, nid, bid, bd, bexp)
+    _assert_expand_equal((oid, od, oexp, ev), want)
+    assert oid[0].tolist() == [3, 9]
+    assert oexp[0].tolist() == [True, False]
+    assert_allclose(np.asarray(od[0]), [0.25, 4.0])
+    assert int(ev[0]) == 2
+
+
+# ---- 2. fused search == the pre-fusion scan loop --------------------------
+
+@pytest.fixture(scope="module")
+def search_setup():
+    data = clustered(jax.random.key(0), 1000, 16, n_clusters=8, scale=0.8)
+    g = knn_bruteforce(data, 10)
+    q = data[:32] + 0.02 * jax.random.normal(jax.random.key(3), (32, 16))
+    gt_ids, _ = knn_search_bruteforce(data, q, 10)
+    return data, g, q, gt_ids
+
+
+@pytest.mark.parametrize("beam", [16, 48])
+def test_fused_search_bit_parity_with_scan(search_setup, beam):
+    data, g, q, _ = search_setup
+    ids_s, d_s, ev_s = beam_search_scan(g, data, q, 10, beam=beam)
+    ids_f, d_f, ev_f = beam_search(g, data, q, 10, beam=beam)
+    assert_array_equal(np.asarray(ids_s), np.asarray(ids_f))
+    assert_array_equal(np.asarray(jnp.where(jnp.isinf(d_s), 0, d_s)),
+                       np.asarray(jnp.where(jnp.isinf(d_f), 0, d_f)))
+    assert_array_equal(np.asarray(ev_s), np.asarray(ev_f))
+
+
+def test_early_exit_matches_full_budget(search_setup):
+    # the while-loop exits once all queries converge; the scan loop has
+    # NO early exit, so driving it far past the default budget proves the
+    # fixed-point claim: extra steps change neither results nor evals
+    data, g, q, _ = search_setup
+    ids_a, d_a, ev_a = beam_search(g, data, q, 10, beam=32)
+    ids_b, d_b, ev_b = beam_search_scan(g, data, q, 10, beam=32,
+                                        max_steps=200)
+    assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    assert_array_equal(np.asarray(ev_a), np.asarray(ev_b))
+
+
+def test_multi_expansion_quality_and_evals(search_setup):
+    data, g, q, gt_ids = search_setup
+    ids1, _, ev1 = beam_search(g, data, q, 10, beam=48)
+    ids4, _, ev4 = beam_search(g, data, q, 10, beam=48, expand=4)
+    r1 = float(search_recall(ids1, gt_ids, 10))
+    r4 = float(search_recall(ids4, gt_ids, 10))
+    assert r4 > r1 - 0.02, (r1, r4)     # E>1 must not cost recall
+    # E=4 evaluates at most the full per-step budget more than E=1
+    assert float(ev4.mean()) < 4 * float(ev1.mean())
+
+
+def test_k_greater_than_beam_raises(search_setup):
+    data, g, q, _ = search_setup
+    with pytest.raises(ValueError, match="k <= beam"):
+        beam_search(g, data, q, 20, beam=16)
+    with pytest.raises(ValueError, match="k <= beam"):
+        beam_search_scan(g, data, q, 20, beam=16)

@@ -105,7 +105,10 @@ def test_cap_scatter_single_sort_matches_twosort(seed, by_dist):
     rows = jnp.asarray(rng.integers(-1, n, e).astype(np.int32))
     cols = jnp.asarray(rng.integers(-1, n, e).astype(np.int32))
     dists = jnp.asarray(rng.random(e).astype(np.float32))
-    a_ids, a_d = cap_scatter(rows, cols, dists, n, cap, by_dist=by_dist)
+    # dedupe=False isolates the sort-equivalence property — the twosort
+    # baseline never collapsed duplicates (collapse itself is pinned below)
+    a_ids, a_d = cap_scatter(rows, cols, dists, n, cap, by_dist=by_dist,
+                             dedupe=False)
     b_ids, b_d = cap_scatter_twosort(rows, cols, dists, n, cap,
                                      by_dist=by_dist)
     assert_array_equal(np.asarray(a_ids), np.asarray(b_ids))
@@ -114,13 +117,14 @@ def test_cap_scatter_single_sort_matches_twosort(seed, by_dist):
 
 def test_cap_scatter_dedupe_collapses_exact_duplicates():
     # row 0 receives the same edge (0←7, d=.5) three times plus two distinct
-    # farther candidates; cap=2. Without dedupe the copies crowd the cap.
+    # farther candidates; cap=2. Without dedupe the copies crowd the cap;
+    # the collapse is the DEFAULT since PR 3 (paper-idempotent try-insert).
     rows = jnp.asarray([0, 0, 0, 0, 0], jnp.int32)
     cols = jnp.asarray([7, 7, 7, 3, 4], jnp.int32)
     dists = jnp.asarray([0.5, 0.5, 0.5, 0.6, 0.7], jnp.float32)
-    ids_nd, _ = cap_scatter(rows, cols, dists, 1, 2)
+    ids_nd, _ = cap_scatter(rows, cols, dists, 1, 2, dedupe=False)
     assert ids_nd[0].tolist() == [7, 7]
-    ids_dd, dd = cap_scatter(rows, cols, dists, 1, 2, dedupe=True)
+    ids_dd, dd = cap_scatter(rows, cols, dists, 1, 2)
     assert ids_dd[0].tolist() == [7, 3]
     assert_allclose(np.asarray(dd[0]), [0.5, 0.6])
 

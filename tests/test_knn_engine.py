@@ -1,0 +1,152 @@
+"""Batched k-NN serving engine: slot batching, padding, stats, routing.
+
+The engine must be a pure wrapper: whatever slot width the queries are
+chopped into (and however the tail is padded), per-query results must be
+bit-identical to one direct ``beam_search`` call over all queries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.search import beam_search
+from repro.data.vectors import clustered
+from repro.serve.knn_engine import SearchEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = clustered(jax.random.key(0), 600, 12, n_clusters=4, scale=0.8)
+    g = knn_bruteforce(data, 8)
+    q = data[:37] + 0.02 * jax.random.normal(jax.random.key(5), (37, 12))
+    return data, g, q
+
+
+def test_engine_matches_direct_search_across_slot_widths(setup):
+    data, g, q = setup
+    want_ids, want_d, want_ev = beam_search(g, data, q, 5, beam=16)
+    for slots in (37, 16, 8):      # exact fit / ragged tail / many batches
+        eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=slots)
+        ids, dists, evals = eng.search(q)
+        assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+        assert_array_equal(np.asarray(jnp.where(jnp.isinf(dists), 0, dists)),
+                           np.asarray(jnp.where(jnp.isinf(want_d), 0,
+                                                want_d)))
+        assert_array_equal(np.asarray(evals), np.asarray(want_ev))
+
+
+def test_engine_stats_accumulate(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=10)
+    eng.search(q)
+    st = eng.stats()
+    assert st["queries"] == 37
+    assert st["batches"] == 4                  # ceil(37 / 10)
+    assert st["qps"] > 0 and st["total_s"] > 0
+    assert st["total_evals"] > 0
+    assert st["evals_per_query"] == pytest.approx(
+        st["total_evals"] / 37)
+    # padded tail rows must not contribute to the eval totals
+    _, _, ev = beam_search(g, data, q, 5, beam=16)
+    assert st["total_evals"] == int(np.asarray(ev).sum(dtype=np.int64))
+
+
+def test_engine_streaming_front_end(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=8)
+    got = dict()
+    for rid, ids, dists in eng.search_stream(
+            (f"req{i}", q[i]) for i in range(q.shape[0])):
+        got[rid] = np.asarray(ids)
+    want_ids, _, _ = beam_search(g, data, q, 5, beam=16)
+    assert len(got) == q.shape[0]
+    for i in range(q.shape[0]):
+        assert_array_equal(got[f"req{i}"], np.asarray(want_ids[i]))
+
+
+def test_empty_query_batch(setup):
+    # parity with the pre-engine path: zero queries → empty results
+    data, g, _ = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4)
+    ids, dists, evals = eng.search(jnp.zeros((0, data.shape[1])))
+    assert ids.shape == (0, 5) and dists.shape == (0, 5)
+    assert evals.shape == (0,)
+    from repro.retrieval.index import KnnIndex
+    idx = KnnIndex(graph=g, data=data)
+    ids, _, _ = idx.search(jnp.zeros((0, data.shape[1])), k=5, beam=16)
+    assert ids.shape == (0, 5)
+
+
+def test_engine_reset_stats(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=10)
+    eng.search(q)
+    eng.reset_stats()
+    assert eng.stats()["queries"] == 0 and eng.stats()["batches"] == 0
+    eng.search(q)
+    assert eng.stats()["queries"] == q.shape[0]
+
+
+def test_engine_validates_config(setup):
+    data, g, _ = setup
+    with pytest.raises(ValueError):
+        SearchEngine(graph=g, data=data, slots=0)
+    with pytest.raises(ValueError):
+        SearchEngine(graph=g, data=data, k=20, beam=16)
+
+
+def test_engine_duplicate_request_id_rejected_until_claimed(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4)
+    eng.submit("a", q[0])
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit("a", q[1])          # still queued
+    eng.drain()
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit("a", q[1])          # served but unclaimed
+    eng.result("a")
+    eng.submit("a", q[1])              # reusable once claimed
+    eng.drain()
+    assert eng.result("a")[0].shape == (5,)
+
+
+def test_engine_requeues_batch_on_failure(setup):
+    # a ragged query row must not strand the whole batch: run_batch puts
+    # the popped requests back, so fixing the input lets them be served
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4)
+    eng.submit("good", q[0])
+    eng.submit("bad", np.zeros(q.shape[1] + 1))
+    with pytest.raises(Exception):
+        eng.run_batch()
+    assert len(eng._pending) == 2              # both back in the queue
+    eng._pending.pop()                         # drop the ragged request
+    eng._in_flight.discard("bad")
+    eng.drain()
+    assert eng.result("good")[0].shape == (5,)
+
+
+def test_engine_record_stats_off_skips_accumulators(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=10,
+                       record_stats=False)
+    ids, _, _ = eng.search(q)
+    assert ids.shape == (q.shape[0], 5)
+    assert eng.stats()["queries"] == 0 and eng.stats()["batches"] == 0
+
+
+def test_index_and_result_route_through_engine(small_data):
+    from repro.api import BuildConfig, GraphBuilder
+    data = small_data[:300, :12]
+    res = GraphBuilder(BuildConfig(strategy="twoway", k=8, lam=4,
+                                   max_iters=6, subgraph_iters=6)).build(data)
+    idx = res.to_index()
+    ids_a, d_a, ev_a = idx.search(data[:5], k=4, beam=16)
+    eng = res.to_engine(k=4, beam=16, slots=5)
+    ids_b, d_b, ev_b = eng.search(data[:5])
+    assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    assert_array_equal(np.asarray(ev_a), np.asarray(ev_b))
+    assert eng.stats()["queries"] == 5
