@@ -1,19 +1,40 @@
-"""Search-side microbench: pre-fusion scan loop vs fused early-exit search.
+"""Search-side microbench: pre-fusion scan loop vs fused engine variants.
 
-Three arms over the same NN-Descent graph and query set:
+Arms over the same NN-Descent graph and a SKEWED-CONVERGENCE query set
+(mostly easy perturbed-data queries with off-manifold stragglers
+interleaved — the workload where whole-batch convergence barriers hurt
+most, i.e. production traffic):
 
-  seed     : ``beam_search_scan`` — one expansion per fixed ``lax.scan``
-             step, explicit dup mask, ``topk_merge`` beam update, no
-             early exit (the PR-2 loop, kept verbatim).
-  fused    : ``SearchEngine`` over the fused ``beam_expand`` search,
-             expand=1 — bit-identical results, while-loop early exit.
-  fused+E4 : same engine at expand=4 — multi-expansion amortizes each
-             gather/merge across 4·kg evals, ~4× fewer steps.
+  seed      : ``beam_search_scan`` — one expansion per fixed ``lax.scan``
+              step, explicit dup mask, ``topk_merge`` beam update, no
+              early exit (the PR-2 loop, kept verbatim). Full query
+              block in one call.
+  fused     : ``SearchEngine`` over the fused ``beam_expand`` search,
+              expand=1, full-queue batch mode — bit-identical results,
+              while-loop early exit, fixed slot batches.
+  fused+E4  : same engine at expand=4 — multi-expansion amortizes each
+              gather/merge across 4·kg evals, ~4× fewer steps.
+  streamed  : the SAME fixed-slot engine under the arrival cadence
+              (requests land in ``--burst``-sized waves, ``run_batch``
+              fires per wave): every partial batch is padded to the full
+              slot width and held to its slowest query — the two costs
+              compaction removes.
+  compacted : straggler compaction under the identical cadence — bounded
+              step chunks over resumable per-slot states, finished slots
+              harvested and backfilled mid-flight, so slots stay PACKED
+              across arrival waves (bit-identical per-query results;
+              QPS vs ``streamed`` is the claim).
+  visited   : bounded visited set (bloom plane) — dropped-then-revisited
+              candidates and beam duplicates stop re-paying distance
+              evals (evals/query at equal recall is the claim).
+  compacted+visited : both, under the cadence (not in the default set).
 
-Emits ``name=value`` CSV rows plus ``BENCH_search.json`` with QPS,
-recall@10 and evals/query per arm, the fused speedups, and a tiny
-interpret=True exercise of the Pallas kernel so the kernel path is
-covered even on the CPU oracle. Run with ``--toy`` in CI.
+Select arms with ``--arms a,b,…``; an unknown arm name FAILS LOUDLY
+(exit 2) instead of being skipped silently. Emits ``name=value`` CSV
+rows plus ``BENCH_search.json`` with QPS, recall@10 and evals/query per
+arm, the speedups, and a tiny interpret=True exercise of the Pallas
+kernel so the kernel path is covered even on the CPU oracle. Run with
+``--toy`` in CI.
 
     PYTHONPATH=src python benchmarks/bench_search.py [--n 100000] [--toy]
 """
@@ -36,7 +57,7 @@ from repro.core.bruteforce import knn_search_bruteforce  # noqa: E402
 from repro.core.nndescent import nn_descent  # noqa: E402
 from repro.core.search import (beam_search, beam_search_scan,  # noqa: E402
                                search_recall)
-from repro.data.vectors import clustered  # noqa: E402
+from repro.data.vectors import clustered, skewed_queries  # noqa: E402
 from repro.serve.knn_engine import SearchEngine  # noqa: E402
 
 
@@ -61,22 +82,76 @@ def bench_seed(g, data, queries, *, k, beam, reps):
                      "sec": round(t.s, 4)}
 
 
-def bench_fused(g, data, queries, *, k, beam, expand, reps, label, slots):
+def bench_engine(g, data, queries, *, k, beam, expand, reps, label, slots,
+                 compact=False, chunk_steps=8, visited_bits=0):
     nq = queries.shape[0]
     slots = min(slots, nq)
     eng = SearchEngine(graph=g, data=data, k=k, beam=beam, expand=expand,
-                       n_entries=N_ENTRIES, slots=slots)
+                       n_entries=N_ENTRIES, slots=slots, compact=compact,
+                       chunk_steps=chunk_steps, visited_bits=visited_bits)
     eng.search(queries)                          # compile + warm
     eng.reset_stats()
     with Timer() as t:
         for _ in range(reps):
             ids, _, ev = eng.search(queries)
     st = eng.stats()
-    return ids, ev, {"variant": label, "slots": slots,
-                     "qps": round(reps * nq / t.s, 2),
-                     "sec": round(t.s, 4),
-                     "engine_qps": round(st["qps"], 2),
-                     "mean_batch_s": round(st["mean_batch_s"], 4)}
+    row = {"variant": label, "slots": slots,
+           "qps": round(reps * nq / t.s, 2),
+           "sec": round(t.s, 4),
+           "engine_qps": round(st["qps"], 2),
+           "mean_batch_s": round(st["mean_batch_s"], 4)}
+    if compact:
+        row["chunk_steps"] = chunk_steps
+    if visited_bits:
+        row["visited_bits"] = visited_bits
+    return ids, ev, row
+
+
+def bench_stream(g, data, queries, *, k, beam, reps, label, slots, burst,
+                 compact=False, chunk_steps=8, visited_bits=0):
+    """Arrival-cadence serving: submit ``burst`` requests per wave, call
+    ``run_batch`` once per wave, drain at exhaustion. The identical
+    traffic drives the fixed-slot and compacted engines, so the QPS gap
+    is exactly the cost of padded partial batches + whole-batch
+    convergence barriers."""
+    import numpy as np
+
+    nq = queries.shape[0]
+    slots = min(slots, nq)
+    burst = max(1, min(burst, slots))
+    qh = np.asarray(queries)
+    eng = SearchEngine(graph=g, data=data, k=k, beam=beam, expand=1,
+                       n_entries=N_ENTRIES, slots=slots, compact=compact,
+                       chunk_steps=chunk_steps, visited_bits=visited_bits,
+                       record_stats=False)
+
+    def one_rep(r, sink=None):
+        for s in range(0, nq, burst):
+            for i in range(s, min(s + burst, nq)):
+                eng.submit((r, i), qh[i])
+            eng.run_batch()
+        eng.drain()
+        for i in range(nq):
+            res = eng.result((r, i))
+            if sink is not None:
+                sink[i] = res
+
+    one_rep("warm")                              # compile + warm the cadence
+    got = {}
+    with Timer() as t:
+        for r in range(reps):
+            one_rep(r, got if r == 0 else None)
+    ids = jnp.asarray(np.stack([got[i][0] for i in range(nq)]))
+    ev = jnp.asarray(np.stack([got[i][2] for i in range(nq)]))
+    row = {"variant": label, "slots": slots, "burst": burst,
+           "qps": round(reps * nq / t.s, 2), "sec": round(t.s, 4)}
+    if compact:
+        row["chunk_steps"] = chunk_steps
+    if visited_bits:
+        row["visited_bits"] = visited_bits
+    return ids, ev, row
+
+
 
 
 def kernel_smoke() -> dict:
@@ -121,6 +196,13 @@ def kernel_smoke() -> dict:
     return {"interpret_parity": True}
 
 
+#: every arm this bench knows how to run; an `--arms` entry outside this
+#: set is a hard error, never a silent skip
+ARM_NAMES = ("seed", "fused", "fused+E4", "streamed", "compacted",
+             "visited", "compacted+visited")
+DEFAULT_ARMS = "seed,fused,fused+E4,streamed,compacted,visited"
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=100_000)
@@ -134,12 +216,28 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--slots", type=int, default=128,
                     help="engine batch width (per-batch early exit)")
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="compaction chunk width (steps between harvests)")
+    ap.add_argument("--burst", type=int, default=0,
+                    help="arrival wave size for the streamed/compacted "
+                         "arms (0 = slots // 4)")
+    ap.add_argument("--visited-bits", type=int, default=8192,
+                    help="bloom plane width for the visited arms")
+    ap.add_argument("--hard-frac", type=float, default=0.125,
+                    help="straggler fraction of the skewed workload")
+    ap.add_argument("--arms", default=DEFAULT_ARMS,
+                    help=f"comma list from {ARM_NAMES}")
     ap.add_argument("--toy", action="store_true",
                     help="CI smoke: n=2000, nq=64, 2 reps")
     ap.add_argument("--out", default="BENCH_search.json")
     args = ap.parse_args(argv)
     if args.toy:
         args.n, args.nq, args.reps = 2000, 64, 2
+    arms = [a.strip() for a in args.arms.split(",") if a.strip()]
+    unknown = sorted(set(arms) - set(ARM_NAMES))
+    if unknown:
+        ap.error(f"unknown bench arm(s) {unknown}; known arms: "
+                 f"{list(ARM_NAMES)}")
 
     # clustered data: uniform-random vectors have no metric structure to
     # navigate, so every graph search (seed and fused alike) degenerates;
@@ -150,52 +248,89 @@ def main(argv=None):
     g, _ = nn_descent(jax.random.key(1), data, args.k, lam=args.lam,
                       max_iters=args.build_iters)
     build_s = time.time() - t0
-    queries = data[:args.nq] + 0.02 * jax.random.normal(
-        jax.random.key(9), (args.nq, args.d))
+    queries = skewed_queries(data, args.nq, args.d,
+                             hard_frac=args.hard_frac)
     gt_ids, _ = knn_search_bruteforce(data, queries, args.topk)
 
     results = {"n": args.n, "d": args.d, "k": args.k, "beam": args.beam,
                "nq": args.nq, "reps": args.reps,
+               "hard_frac": args.hard_frac,
                "build_s": round(build_s, 1),
                "backend": jax.default_backend(), "variants": []}
-    runs = [
-        lambda: bench_seed(g, data, queries, k=args.topk, beam=args.beam,
-                           reps=args.reps),
-        lambda: bench_fused(g, data, queries, k=args.topk, beam=args.beam,
-                            expand=1, reps=args.reps, label="fused",
-                            slots=args.slots),
-        lambda: bench_fused(g, data, queries, k=args.topk, beam=args.beam,
-                            expand=4, reps=args.reps, label="fused+E4",
-                            slots=args.slots),
-    ]
-    for run_fn in runs:
-        ids, ev, row = run_fn()
+    burst = args.burst or max(1, args.slots // 4)
+    common = dict(k=args.topk, beam=args.beam, reps=args.reps,
+                  slots=args.slots)
+    stream_common = dict(**common, burst=burst,
+                         chunk_steps=args.chunk_steps)
+    arm_runs = {
+        "seed": lambda: bench_seed(g, data, queries, k=args.topk,
+                                   beam=args.beam, reps=args.reps),
+        "fused": lambda: bench_engine(g, data, queries, expand=1,
+                                      label="fused", **common),
+        "fused+E4": lambda: bench_engine(g, data, queries, expand=4,
+                                         label="fused+E4", **common),
+        "streamed": lambda: bench_stream(g, data, queries,
+                                         label="streamed", **stream_common),
+        "compacted": lambda: bench_stream(
+            g, data, queries, label="compacted", compact=True,
+            **stream_common),
+        "visited": lambda: bench_engine(
+            g, data, queries, expand=1, label="visited",
+            visited_bits=args.visited_bits, **common),
+        "compacted+visited": lambda: bench_stream(
+            g, data, queries, label="compacted+visited", compact=True,
+            visited_bits=args.visited_bits, **stream_common),
+    }
+    for arm in arms:
+        ids, ev, row = arm_runs[arm]()
         row["recall@10"] = round(float(search_recall(ids, gt_ids,
                                                      args.topk)), 4)
         row["evals_per_query"] = round(float(ev.mean()), 1)
         results["variants"].append(row)
         emit({"bench": "search", "n": args.n, **row})
 
-    seed_row = results["variants"][0]
-    for row in results["variants"][1:]:
-        results[f"{row['variant']}_speedup"] = round(
-            row["qps"] / seed_row["qps"], 3)
-    # the acceptance number: best fused arm that gives up no recall
-    eligible = [r for r in results["variants"][1:]
-                if r["recall@10"] >= seed_row["recall@10"] - 0.005]
-    results["speedup_at_equal_recall"] = round(
-        max((r["qps"] for r in eligible), default=0.0) / seed_row["qps"], 3)
+    by = {r["variant"]: r for r in results["variants"]}
+    seed_row = by.get("seed")
+    if seed_row:
+        for row in results["variants"]:
+            if row is not seed_row:
+                results[f"{row['variant']}_speedup"] = round(
+                    row["qps"] / seed_row["qps"], 3)
+        # the acceptance number: best arm that gives up no recall
+        eligible = [r for r in results["variants"] if r is not seed_row
+                    and r["recall@10"] >= seed_row["recall@10"] - 0.005]
+        results["speedup_at_equal_recall"] = round(
+            max((r["qps"] for r in eligible), default=0.0)
+            / seed_row["qps"], 3)
+    if "streamed" in by and "compacted" in by:
+        # the straggler claim: compaction vs the fixed-slot engine under
+        # the identical arrival cadence (padded partial batches + whole-
+        # batch barriers are exactly what compaction removes)
+        results["compacted_vs_fixed_qps"] = round(
+            by["compacted"]["qps"] / by["streamed"]["qps"], 3)
+    if "fused" in by and "visited" in by:
+        # the cost-model claim: evals/query at (near-)equal recall@10
+        results["visited_eval_reduction"] = round(
+            1.0 - by["visited"]["evals_per_query"]
+            / by["fused"]["evals_per_query"], 3)
+        results["visited_recall_delta"] = round(
+            by["visited"]["recall@10"] - by["fused"]["recall@10"], 4)
     results["kernel"] = kernel_smoke()
-    emit({"bench": "search",
-          "speedup_at_equal_recall": results["speedup_at_equal_recall"],
-          "kernel_parity": results["kernel"]["interpret_parity"]})
+    summary = {"bench": "search",
+               "kernel_parity": results["kernel"]["interpret_parity"]}
+    for key in ("speedup_at_equal_recall", "compacted_vs_fixed_qps",
+                "visited_eval_reduction"):
+        if key in results:
+            summary[key] = results[key]
+    emit(summary)
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")
 
 
-def run(n: int = 2000, nq: int = 64, reps: int = 2):
+def run(n: int = 2000, nq: int = 64, reps: int = 2, arms: str = DEFAULT_ARMS):
     """Entry point for ``benchmarks.run`` (CPU-scale defaults)."""
-    main(["--n", str(n), "--nq", str(nq), "--reps", str(reps)])
+    main(["--n", str(n), "--nq", str(nq), "--reps", str(reps),
+          "--arms", arms])
 
 
 if __name__ == "__main__":

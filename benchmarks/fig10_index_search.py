@@ -7,6 +7,13 @@ is merged ≈ scratch within ~5%. Searches run through the serving
 ``SearchEngine`` (the fused early-exit ``beam_search`` underneath —
 bit-identical results and eval counts to the pre-fusion loop at expand=1),
 so each row also carries the engine's measured QPS.
+
+The query set is SKEWED (easy perturbed-data rows with off-manifold
+stragglers interleaved), and every (graph, beam) point runs three engine
+modes: ``fixed`` slot batches, ``compact`` (straggler compaction —
+identical recall/evals, better QPS under skew) and ``visited`` (bounded
+visited set — fewer evals/query at a bloom-false-positive-bounded recall
+cost).
 """
 
 import jax
@@ -28,10 +35,20 @@ def build_index(data, graph, alpha, max_degree):
     return diversify(graph, data, alpha=alpha, max_degree=max_degree)
 
 
+#: engine arms per (graph, beam) point — extend HERE, never by another
+#: hand-rolled search loop (ROADMAP: query-side features land on the engine)
+ENGINE_MODES = {
+    "fixed": {},
+    "compact": {"compact": True, "chunk_steps": 8},
+    "visited": {"visited_bits": 4096},
+}
+
+
 def run(n=2000, k=16, lam=8, alphas=(1.0, 1.2), n_subsets=(2, 4)):
+    from repro.data.vectors import skewed_queries
+
     data = clustered(jax.random.key(0), n, 16, n_clusters=8, scale=0.8)
-    queries = data[:64] + 0.02 * jax.random.normal(jax.random.key(9),
-                                                   (64, 16))
+    queries = skewed_queries(data, 64, 16)
     gt_ids, _ = knn_search_bruteforce(data, queries, 10)
 
     # scratch graph
@@ -57,17 +74,20 @@ def run(n=2000, k=16, lam=8, alphas=(1.0, 1.2), n_subsets=(2, 4)):
             for beam in (16, 32, 64):
                 for name, idx in (("scratch", idx_scratch),
                                   (f"merged-{method}-m{m}", idx_merged)):
-                    # no warm-up boilerplate: the engine runs its first
-                    # stats batch un-timed, so qps excludes the compile
-                    eng = SearchEngine(graph=idx, data=data, k=10, beam=beam,
-                                       slots=queries.shape[0])
-                    ids, _, evals = eng.search(queries)
-                    emit({"bench": "fig10", "flavor": flavor, "graph": name,
-                          "beam": beam,
-                          "recall@10":
-                              f"{float(search_recall(ids, gt_ids, 10)):.4f}",
-                          "avg_evals": f"{float(evals.mean()):.0f}",
-                          "qps": f"{eng.stats()['qps']:.0f}"})
+                    for mode, kw in ENGINE_MODES.items():
+                        # no warm-up boilerplate: the engine runs its
+                        # first stats batch un-timed, so qps excludes
+                        # the compile
+                        eng = SearchEngine(graph=idx, data=data, k=10,
+                                           beam=beam,
+                                           slots=queries.shape[0], **kw)
+                        ids, _, evals = eng.search(queries)
+                        emit({"bench": "fig10", "flavor": flavor,
+                              "graph": name, "beam": beam, "mode": mode,
+                              "recall@10":
+                                  f"{float(search_recall(ids, gt_ids, 10)):.4f}",
+                              "avg_evals": f"{float(evals.mean()):.0f}",
+                              "qps": f"{eng.stats()['qps']:.0f}"})
 
 
 if __name__ == "__main__":

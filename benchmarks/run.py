@@ -1,13 +1,16 @@
 """Run every benchmark (one per paper table/figure) and print CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only name,name]
 
 fig5/6  λ sweep              fig7   subgraph→merged quality
 fig8    merge vs baselines   fig9   m-subgraph sweep
 fig10   index-graph search   fig12  merge vs scratch cost
 tab3    distributed (Alg.3)  roofline  kernel models + dry-run aggregation
 localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
-search     fused beam_expand search vs seed scan loop (BENCH json)
+search     fused/compacted/visited engine arms vs seed scan loop (BENCH json)
+
+``--only`` selects a subset by name; an unknown name is a HARD error
+(exit 2) — a typo must never silently skip the benchmark it meant.
 """
 
 import sys
@@ -15,7 +18,14 @@ import time
 
 
 def main() -> None:
-    fast = "--fast" in sys.argv
+    argv = sys.argv[1:]
+    fast = "--fast" in argv
+    only = None
+    if "--only" in argv:
+        i = argv.index("--only")
+        if i + 1 >= len(argv):
+            raise SystemExit("--only needs a comma-separated name list")
+        only = [s.strip() for s in argv[i + 1].split(",") if s.strip()]
     from benchmarks import (bench_localjoin, bench_search, fig5_fig6_lambda,
                             fig7_subgraph_quality, fig8_merge_vs_baselines,
                             fig9_multiway, fig10_index_search,
@@ -37,6 +47,13 @@ def main() -> None:
             n=960 if fast else 1920, ms=(2, 4) if fast else (2, 4, 8))),
         ("roofline", roofline.run),
     ]
+    if only is not None:
+        known = [name for name, _ in jobs]
+        unknown = [o for o in only if o not in known]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {unknown}; known: {known}")
+        jobs = [(name, fn) for name, fn in jobs if name in only]
     t00 = time.time()
     for name, fn in jobs:
         t0 = time.time()

@@ -18,14 +18,30 @@ counts are identical to the fixed-budget scan — the exit only stops paying
 for steps nobody needs. ``beam_search_scan`` keeps the pre-fusion
 fixed-``lax.scan`` loop as the parity ground truth and benchmark baseline.
 
-Entries dropped from the beam may be revisited (no global visited set) —
-the standard fixed-beam approximation; the eval counter includes such
-revisits, so comparisons stay fair.
+By default, entries dropped from the beam may be revisited (no global
+visited set) — the standard fixed-beam approximation; the eval counter
+includes such revisits, so comparisons stay fair. ``visited_bits > 0``
+turns on the BOUNDED visited set: a fixed (q, n_bits) bloom bit plane
+threaded through ``kops.beam_expand`` that masks already-probed
+candidates before the distance evaluation (dropped-then-revisited
+entries and beam duplicates stop re-paying evals). That changes the cost
+model — see DESIGN.md §3.7 — so eval comparisons against the unvisited
+loops are made as evals-to-equal-recall; ``visited_bits=0`` (default)
+stays bit-identical to ``beam_search_scan``.
+
+The step loop is exposed in RESUMABLE form for the serving engine's slot
+compaction: ``beam_search_state`` builds the per-query
+:class:`SearchState`, ``beam_search_resume`` advances it by a bounded
+step chunk (per-slot step budgets — slots admitted mid-flight carry
+their own step clock), and ``beam_search`` is exactly state + one
+full-budget resume, so the monolithic and compacted paths run the same
+jitted step body.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +49,7 @@ import jax.numpy as jnp
 from repro.core import metrics as _metrics
 from repro.core.graph import INVALID_ID, KnnGraph
 from repro.kernels import ops as kops
+from repro.kernels import ref as _kref
 
 
 def _check_k_beam(k: int, beam: int):
@@ -64,26 +81,36 @@ def _init_beam(g: KnnGraph, data: jax.Array, queries: jax.Array,
     return ids0, d0, exp0
 
 
-@functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
-                                              "k", "n_entries", "expand"))
-def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
-                beam: int = 32, max_steps: int | None = None,
-                metric: str = "l2", n_entries: int = 8, expand: int = 1):
-    """Search each query; returns (ids (q,k), dists (q,k), evals (q,)).
+class SearchState(NamedTuple):
+    """Resumable per-query search state (the slot-compaction currency).
 
-    ``beam`` is the ef/L parameter of HNSW/Vamana (must be >= k).
-    ``expand`` expands the E best unexpanded frontier nodes per step — one
-    gather, one fused distance+merge pass for all E·kg candidates.
-    ``max_steps`` bounds the number of LOOP steps (default ⌈2·beam/E⌉, so
-    the total expansion budget matches the pre-fusion loop); the
-    while-loop exits early once every query has converged, with results
-    and eval counts identical to running the full budget.
+    ``steps`` is the PER-QUERY step clock — under slot compaction, slots
+    are admitted mid-flight and each carries its own budget. ``visited``
+    is the bloom bit plane, shape (q, visited_bits // 32); a zero-width
+    plane (q, 0) means the visited set is disabled (the shape is static
+    under jit, so the step body specializes away).
     """
-    _check_k_beam(k, beam)
-    if not 1 <= expand <= beam:
-        raise ValueError(f"expand must be in [1, beam], got {expand}")
-    max_steps = max_steps or -(-2 * beam // expand)
-    kg = g.k
+    ids: jax.Array        # (q, beam) int32, ascending by dist
+    dists: jax.Array      # (q, beam) float32
+    expanded: jax.Array   # (q, beam) bool
+    evals: jax.Array      # (q,) int32
+    steps: jax.Array      # (q,) int32
+    visited: jax.Array    # (q, n_words) uint32
+
+
+def default_max_steps(beam: int, expand: int = 1) -> int:
+    """⌈2·beam/E⌉ — the fused loop's default step budget (total expansion
+    budget matched to the pre-fusion ``2·beam`` single-expansion loop)."""
+    return -(-2 * beam // expand)
+
+
+def _converged(ids: jax.Array, expanded: jax.Array) -> jax.Array:
+    """(q,) — no valid unexpanded beam entry left (exact fixed point)."""
+    return ~jnp.any(~expanded & (ids != INVALID_ID), axis=1)
+
+
+def _state_impl(g: KnnGraph, data, queries, beam, metric, n_entries,
+                visited_bits):
     nq = queries.shape[0]
     ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries)
     # ``beam_expand`` requires rows ascending (its merge exploits the
@@ -93,14 +120,38 @@ def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
     order = jnp.argsort(d0, axis=1, stable=True)
     ids0 = jnp.take_along_axis(ids0, order, axis=1)
     d0 = jnp.take_along_axis(d0, order, axis=1)
+    if visited_bits:
+        n_words = _kref.bloom_check_bits(visited_bits)
+        word, bit = _kref.bloom_hash(ids0, visited_bits)
+        visited = _kref.bloom_set(jnp.zeros((nq, n_words), jnp.uint32),
+                                  word, bit, ids0 != INVALID_ID)
+    else:
+        visited = jnp.zeros((nq, 0), jnp.uint32)
+    return SearchState(ids0, d0, exp0, jnp.zeros((nq,), jnp.int32),
+                       jnp.zeros((nq,), jnp.int32), visited)
 
-    def cond(state):
-        ids, _, expanded, _, step = state
-        return (step < max_steps) & jnp.any(~expanded & (ids != INVALID_ID))
 
-    def body(state):
-        ids, dists, expanded, evals, step = state
-        cand = ~expanded & (ids != INVALID_ID)
+def _resume_impl(g: KnnGraph, data, queries, state, num_steps, max_steps,
+                 metric, expand):
+    kg = g.k
+    nq, beam = state.ids.shape
+    use_visited = state.visited.shape[1] > 0
+
+    def active(st):
+        return ~_converged(st.ids, st.expanded) & (st.steps < max_steps)
+
+    def cond(carry):
+        st, t = carry
+        return (t < num_steps) & jnp.any(active(st))
+
+    def body(carry):
+        st, t = carry
+        ids, dists, expanded = st.ids, st.dists, st.expanded
+        act = active(st)
+        # frozen slots (converged, step-capped, or empty) contribute no
+        # candidates: the fused step is an exact fixed point for them —
+        # no evals, no state change, no step-clock tick
+        cand = ~expanded & (ids != INVALID_ID) & act[:, None]
         masked = jnp.where(cand, dists, jnp.inf)
         # E closest unexpanded entries; top_k takes the earliest slot on
         # ties, matching the scan loop's argmax-over-mask pick.
@@ -116,14 +167,90 @@ def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
         vecs = data[jnp.maximum(nbrs, 0)]                           # (q, C, d)
         # expand == 1 → the candidate block is one graph row, whose ids
         # are duplicate-free, so the merge skips the (C, C) dup pass
-        ids, dists, expanded, ev = kops.beam_expand(
-            queries, vecs, nbrs, ids, dists, expanded, metric=metric,
-            distinct_cands=expand == 1)
-        return ids, dists, expanded, evals + ev, step + 1
+        if use_visited:
+            ids, dists, expanded, ev, visited = kops.beam_expand(
+                queries, vecs, nbrs, ids, dists, expanded, metric=metric,
+                distinct_cands=expand == 1, visited=st.visited)
+        else:
+            ids, dists, expanded, ev = kops.beam_expand(
+                queries, vecs, nbrs, ids, dists, expanded, metric=metric,
+                distinct_cands=expand == 1)
+            visited = st.visited
+        st = SearchState(ids, dists, expanded, st.evals + ev,
+                         st.steps + act.astype(jnp.int32), visited)
+        return st, t + 1
 
-    init = (ids0, d0, exp0, jnp.zeros((nq,), jnp.int32), jnp.int32(0))
-    ids, dists, _, evals, _ = jax.lax.while_loop(cond, body, init)
-    return ids[:, :k], dists[:, :k], evals
+    st, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return st
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
+                                              "visited_bits"))
+def beam_search_state(g: KnnGraph, data: jax.Array, queries: jax.Array, *,
+                      beam: int = 32, metric: str = "l2", n_entries: int = 8,
+                      visited_bits: int = 0) -> SearchState:
+    """Initial :class:`SearchState` for each query (sorted entry beam,
+    zero evals/steps, entry seeds inserted into the bloom plane when
+    ``visited_bits`` > 0)."""
+    return _state_impl(g, data, queries, beam, metric, n_entries,
+                       visited_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "max_steps",
+                                              "metric", "expand"))
+def beam_search_resume(g: KnnGraph, data: jax.Array, queries: jax.Array,
+                       state: SearchState, *, num_steps: int, max_steps: int,
+                       metric: str = "l2", expand: int = 1) -> SearchState:
+    """Advance every non-finished query by up to ``num_steps`` loop steps.
+
+    ``max_steps`` is the PER-QUERY budget against ``state.steps`` (slots
+    admitted at different times each get the full budget). Finished
+    queries (converged or step-capped) are exact fixed points; the chunk
+    while-loop exits early once none remain, so resuming an all-finished
+    batch costs no device steps. Chunked resumption is bit-identical to
+    one monolithic run — pinned by tests/test_beam_expand.py.
+    """
+    return _resume_impl(g, data, queries, state, num_steps, max_steps,
+                        metric, expand)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def beam_search_finished(state: SearchState, *, max_steps: int) -> jax.Array:
+    """(q,) bool — converged or out of per-query step budget (the slot
+    harvest predicate)."""
+    return _converged(state.ids, state.expanded) | (state.steps >= max_steps)
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
+                                              "k", "n_entries", "expand",
+                                              "visited_bits"))
+def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
+                beam: int = 32, max_steps: int | None = None,
+                metric: str = "l2", n_entries: int = 8, expand: int = 1,
+                visited_bits: int = 0):
+    """Search each query; returns (ids (q,k), dists (q,k), evals (q,)).
+
+    ``beam`` is the ef/L parameter of HNSW/Vamana (must be >= k).
+    ``expand`` expands the E best unexpanded frontier nodes per step — one
+    gather, one fused distance+merge pass for all E·kg candidates.
+    ``max_steps`` bounds the number of LOOP steps (default ⌈2·beam/E⌉, so
+    the total expansion budget matches the pre-fusion loop; an explicit
+    ``max_steps=0`` means zero steps — the sorted entry beam comes back
+    with zero evals); the while-loop exits early once every query has
+    converged, with results and eval counts identical to running the
+    full budget. ``visited_bits`` > 0 enables the bounded visited set
+    (bloom plane; fewer evals at a false-positive-bounded recall cost —
+    see the module docstring).
+    """
+    _check_k_beam(k, beam)
+    if not 1 <= expand <= beam:
+        raise ValueError(f"expand must be in [1, beam], got {expand}")
+    if max_steps is None:
+        max_steps = default_max_steps(beam, expand)
+    st = _state_impl(g, data, queries, beam, metric, n_entries, visited_bits)
+    st = _resume_impl(g, data, queries, st, max_steps, max_steps, metric,
+                      expand)
+    return st.ids[:, :k], st.dists[:, :k], st.evals
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
@@ -140,7 +267,8 @@ def beam_search_scan(g: KnnGraph, data: jax.Array, queries: jax.Array,
     ``benchmarks/bench_search.py``.
     """
     _check_k_beam(k, beam)
-    max_steps = max_steps or 2 * beam
+    if max_steps is None:       # `or` would turn an explicit 0 into 2·beam
+        max_steps = 2 * beam
     nq = queries.shape[0]
     ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries)
 

@@ -31,3 +31,29 @@ def sift_like(key: jax.Array, n: int, d: int = 32, lid: int = 12,
 
 def uniform(key: jax.Array, n: int, d: int) -> jax.Array:
     return jax.random.uniform(key, (n, d))
+
+
+def skewed_queries(data: jax.Array, nq: int, d: int,
+                   hard_frac: float = 0.125, hard_scale: float = 3.0,
+                   key: int = 9) -> jax.Array:
+    """The straggler workload for the serving engine: perturbed data
+    points (converge fast) with off-manifold queries (slow) interleaved,
+    so every fixed slot batch of the engine is held hostage by at least
+    one straggler. Shared by ``benchmarks/bench_search.py``, fig10 and
+    the compaction tests so the benchmarked and tested workloads cannot
+    silently diverge."""
+    n_hard = max(1, int(nq * hard_frac))
+    n_easy = nq - n_hard
+    easy = data[:n_easy] + 0.02 * jax.random.normal(jax.random.key(key),
+                                                    (n_easy, d))
+    hard = hard_scale * jax.random.normal(jax.random.key(key + 1),
+                                          (n_hard, d))
+    rows, e, h = [], 0, 0
+    ratio = max(1, n_easy // n_hard)
+    while e < n_easy or h < n_hard:
+        for _ in range(ratio):
+            if e < n_easy:
+                rows.append(easy[e]); e += 1
+        if h < n_hard:
+            rows.append(hard[h]); h += 1
+    return jnp.stack(rows)

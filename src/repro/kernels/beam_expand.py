@@ -39,12 +39,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.graph import INVALID_ID
+from repro.kernels.ref import bloom_hash
 from repro.kernels.topk_merge import rank_topc_multi
 
 
-def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref,
-            oid_ref, od_ref, oexp_ref, cnt_ref, *, beam, metric,
-            distinct_cands):
+def _bloom_kernel_probe(nid, vis, n_bits):
+    """In-VMEM bloom membership + update masks, matmul-friendly form.
+
+    ``vis`` is the (bq, n_words_padded) uint32 plane block; probes use the
+    REAL ``n_bits`` (lane padding adds words no probe can address). The
+    gather-free formulation: one-hot word/bit planes contracted against
+    the plane's unpacked bits — exact 0/1 float sums, so the booleans are
+    bit-identical to the oracle's ``bloom_test``/``bloom_set`` scatter.
+
+    Returns ``(seen (bq, C) bool, set_bits(mask) -> new plane)``.
+    """
+    bq, C = nid.shape
+    n_words = vis.shape[1]
+    word, bitp = bloom_hash(nid, n_bits)               # (bq, C, 2)
+    C2 = C * 2
+    wf = word.reshape(bq, C2)
+    bf = bitp.reshape(bq, C2)
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (bq, C2, n_words), 2)
+    ow = (wf[:, :, None] == iota_w).astype(jnp.float32)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (bq, C2, 32), 2)
+    ob = (bf[:, :, None] == iota_b).astype(jnp.float32)
+    shifts = jax.lax.broadcasted_iota(
+        jnp.int32, (bq, n_words, 32), 2).astype(jnp.uint32)
+    vbits = ((vis[:, :, None] >> shifts) & 1).astype(jnp.float32)
+    # candidate's probed word, bit-unpacked: (bq, C2, 32)
+    sel = jax.lax.dot_general(
+        ow, vbits, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    hit = jnp.sum(sel * ob, axis=-1) > 0.5             # (bq, C2)
+    seen = jnp.all(hit.reshape(bq, C, 2), axis=-1)
+
+    def set_bits(mask):
+        m = jnp.broadcast_to(mask[:, :, None],
+                             (bq, C, 2)).reshape(bq, C2)
+        hits = jax.lax.dot_general(
+            ow * m.astype(jnp.float32)[:, :, None], ob,
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)        # (bq, n_words, 32)
+        upd = jnp.sum(jnp.where(hits > 0.5, jnp.uint32(1) << shifts,
+                                jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+        return vis | upd
+
+    return seen, set_bits
+
+
+def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref, *refs,
+            beam, metric, distinct_cands, n_bits):
+    if n_bits:
+        (vis_ref, oid_ref, od_ref, oexp_ref, cnt_ref, ovis_ref) = refs
+    else:
+        (oid_ref, od_ref, oexp_ref, cnt_ref) = refs
     q = q_ref[...]                                     # (bq, d)
     nv = nv_ref[...]                                   # (bq, C, d)
     nid = nid_ref[...]                                 # (bq, C)
@@ -69,7 +118,15 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref,
         nn = jnp.sum(nv * nv, axis=-1)                 # (bq, C)
         nd = jnp.maximum(nn + qn[:, None] - 2.0 * cross, 0.0)
     valid = nid != INVALID_ID
-    cnt_ref[...] = jnp.sum(valid, axis=-1, keepdims=True,
+    if n_bits:
+        # bounded visited set: already-probed candidates are masked
+        # BEFORE the cross term is used (not evaluated, not counted)
+        seen, set_bits = _bloom_kernel_probe(nid, vis_ref[...], n_bits)
+        evald = valid & ~seen
+        ovis_ref[...] = set_bits(evald)
+    else:
+        evald = valid
+    cnt_ref[...] = jnp.sum(evald, axis=-1, keepdims=True,
                            dtype=jnp.int32)            # (bq, 1)
     # -- duplicate suppression (same contract as topk_merge): a candidate
     # already in the beam keeps the beam slot (and its flag); among
@@ -77,14 +134,14 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref,
     dup_beam = jnp.any(nid[:, :, None] == bid[:, None, :], axis=-1)
     if distinct_cands:
         # one graph row: duplicate-free by the row invariant
-        bad = dup_beam | ~valid
+        bad = dup_beam | ~evald
     else:
         ia = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
         ib = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
         earlier = ia > ib
         dup_cand = jnp.any(
             (nid[:, :, None] == nid[:, None, :]) & earlier[None], axis=-1)
-        bad = dup_beam | dup_cand | ~valid
+        bad = dup_beam | dup_cand | ~evald
     cd = jnp.where(bad, jnp.inf, nd)
     cid = jnp.where(bad, INVALID_ID, nid)
     keys = jnp.concatenate([bd, cd], axis=-1)          # (bq, beam + C)
@@ -98,7 +155,8 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref,
 
 
 def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
-                      expanded, *, metric: str, distinct_cands: bool = False,
+                      expanded, visited=None, *, metric: str,
+                      distinct_cands: bool = False,
                       interpret: bool = False):
     """(q, d) × gathered (q, C, d) candidates → merged (q, beam) state."""
     nq, beam = beam_ids.shape
@@ -115,6 +173,15 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     # (W, beam) one-hot (dominant) + beam state and outputs, 4 B words.
     per_q = ((C2 + 1) * d2 + C2 * (beam + C2) + W * W + 2 * W * beam
              + 6 * beam + 2 * C2)
+    n_bits, n_words, wpad = 0, 0, 0
+    if visited is not None:
+        n_words = visited.shape[1]
+        n_bits = n_words * 32                  # probes use the REAL width
+        wpad = (-n_words) % 128                # lane padding, unaddressed
+        visited = jnp.pad(visited, ((0, 0), (0, wpad)))
+        # one-hot word plane + unpacked plane bits + probe workspace
+        per_q += (2 * C2 * (n_words + wpad) + 2 * 32 * (n_words + wpad)
+                  + 4 * 32 * C2)
     bq = max(1, min(nq, (8 << 20) // max(4 * per_q, 1)))
     qpad = (-nq) % bq
     queries = jnp.pad(queries, ((0, qpad), (0, 0)))
@@ -128,33 +195,48 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     exp32 = jnp.pad(expanded.astype(jnp.int32), ((0, qpad), (0, 0)))
     nq2 = nq + qpad
     kern = functools.partial(_kernel, beam=beam, metric=metric,
-                             distinct_cands=distinct_cands)
-    oid, od, oexp, cnt = pl.pallas_call(
+                             distinct_cands=distinct_cands, n_bits=n_bits)
+    wtot = n_words + wpad
+    in_specs = [
+        pl.BlockSpec((bq, d2), lambda i: (i, 0)),
+        pl.BlockSpec((bq, C2, d2), lambda i: (i, 0, 0)),
+        pl.BlockSpec((bq, C2), lambda i: (i, 0)),
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        pl.BlockSpec((bq, beam), lambda i: (i, 0)),
+        pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
+        jax.ShapeDtypeStruct((nq2, beam), jnp.float32),
+        jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
+        jax.ShapeDtypeStruct((nq2, 1), jnp.int32),
+    ]
+    operands = [queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, exp32]
+    if visited is not None:
+        visited = jnp.pad(visited, ((0, qpad), (0, 0)))
+        in_specs.append(pl.BlockSpec((bq, wtot), lambda i: (i, 0)))
+        out_specs.append(pl.BlockSpec((bq, wtot), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nq2, wtot), jnp.uint32))
+        operands.append(visited)
+    outs = pl.pallas_call(
         kern,
         grid=(nq2 // bq,),
-        in_specs=[
-            pl.BlockSpec((bq, d2), lambda i: (i, 0)),
-            pl.BlockSpec((bq, C2, d2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bq, C2), lambda i: (i, 0)),
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-            pl.BlockSpec((bq, beam), lambda i: (i, 0)),
-            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
-            jax.ShapeDtypeStruct((nq2, beam), jnp.float32),
-            jax.ShapeDtypeStruct((nq2, beam), jnp.int32),
-            jax.ShapeDtypeStruct((nq2, 1), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, exp32)
-    return (oid[:nq], od[:nq], oexp[:nq].astype(bool), cnt[:nq, 0])
+    )(*operands)
+    oid, od, oexp, cnt = outs[:4]
+    res = (oid[:nq], od[:nq], oexp[:nq].astype(bool), cnt[:nq, 0])
+    if visited is not None:
+        res = res + (outs[4][:nq, :n_words],)
+    return res
 
 
 _beam_expand_jit = jax.jit(_beam_expand_impl,
@@ -163,19 +245,25 @@ _beam_expand_jit = jax.jit(_beam_expand_impl,
 
 def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                        expanded, *, metric: str = "l2",
-                       distinct_cands: bool = False, interpret: bool = False):
+                       distinct_cands: bool = False, visited=None,
+                       interpret: bool = False):
     """Fused beam-expansion step; see the module docstring.
 
     ``distinct_cands`` asserts the candidate block has duplicate-free ids
     (one graph row — expand=1), skipping the (C, C) duplicate pass.
-    interpret=True runs the kernel body eagerly (CPU validation
-    path) — NOT under jit: compiling the interpreter loop is
+    ``visited`` threads an optional (q, n_words) uint32 bloom plane
+    through the kernel (already-probed candidates masked before the MXU
+    cross term; a fifth output returns the updated plane — same contract
+    as the oracle). interpret=True runs the kernel body eagerly (CPU
+    validation path) — NOT under jit: compiling the interpreter loop is
     pathologically slow (see pairdist).
     """
     if interpret:
         return _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids,
-                                 beam_dists, expanded, metric=metric,
-                                 distinct_cands=distinct_cands, interpret=True)
+                                 beam_dists, expanded, visited,
+                                 metric=metric,
+                                 distinct_cands=distinct_cands,
+                                 interpret=True)
     return _beam_expand_jit(queries, nbr_vecs, nbr_ids, beam_ids,
-                            beam_dists, expanded, metric=metric,
+                            beam_dists, expanded, visited, metric=metric,
                             distinct_cands=distinct_cands)

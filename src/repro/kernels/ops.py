@@ -58,7 +58,8 @@ def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
 
 
 def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
-                *, metric: str = "l2", distinct_cands: bool = False):
+                *, metric: str = "l2", distinct_cands: bool = False,
+                visited=None):
     """Fused beam-expansion step for graph NN search.
 
     Distances for the gathered candidate block, duplicate masking against
@@ -66,18 +67,23 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
     transfer — all in one VMEM-resident pass on TPU. ``distinct_cands``
     asserts the candidate block has duplicate-free ids (one graph row —
     the ``expand=1`` case), skipping the (C, C) duplicate pass.
-    Returns ``(new_ids, new_dists, new_expanded, n_evals)``; the jnp
-    oracle is the parity ground truth and the non-TPU path (bit-identical
-    to the pre-fusion search loop).
+    ``visited`` threads the bounded visited set (a (q, n_words) uint32
+    bloom plane): already-probed candidates are masked before the cross
+    term and excluded from ``n_evals``, and a fifth return value carries
+    the updated plane. Returns ``(new_ids, new_dists, new_expanded,
+    n_evals[, new_visited])``; the jnp oracle is the parity ground truth
+    and the non-TPU path (bit-identical to the pre-fusion search loop
+    when ``visited`` is None).
     """
     if use_pallas() and queries.ndim == 2:
         from repro.kernels import beam_expand as _k
         return _k.beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids,
                                      beam_dists, expanded, metric=metric,
-                                     distinct_cands=distinct_cands)
+                                     distinct_cands=distinct_cands,
+                                     visited=visited)
     return _ref.beam_expand(queries, nbr_vecs, nbr_ids, beam_ids,
                             beam_dists, expanded, metric=metric,
-                            distinct_cands=distinct_cands)
+                            distinct_cands=distinct_cands, visited=visited)
 
 
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):

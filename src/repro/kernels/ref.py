@@ -87,9 +87,81 @@ def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
     return fwd_i, fwd_d, rev_i, rev_d, n_evals
 
 
+# ---- bounded visited set (bloom-filter bit plane) --------------------------
+#
+# Fixed (q, n_words) uint32 state, n_bits = 32·n_words a power of two. Two
+# hash probes per id derived from one murmur3-style finalizer (the avalanche
+# makes the low index bits depend on every id bit — two bare Knuth multiplies
+# would give both probes the SAME collision structure on the low bits).
+# Shared by the jnp oracle and the Pallas kernel so membership decisions are
+# bit-identical across backends.
+
+BLOOM_HASHES = 2
+
+
+def bloom_check_bits(n_bits: int) -> int:
+    """Validate a bloom-plane size; returns the word count (n_bits / 32)."""
+    if n_bits < 64 or (n_bits & (n_bits - 1)) != 0:
+        raise ValueError(
+            f"visited_bits must be a power of two >= 64, got {n_bits}")
+    return n_bits // 32
+
+
+def bloom_hash(ids: jax.Array, n_bits: int):
+    """int32 ids (…,) → (word (…, 2) int32, bit (…, 2) int32 in [0, 32)).
+
+    Two probe positions into a ``n_bits``-wide plane (n_bits a power of
+    two). Hashing is pure uint32 arithmetic — identical inside a Pallas
+    kernel and in the oracle.
+    """
+    u = ids.astype(jnp.uint32)
+    x = u ^ (u >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    m = jnp.uint32(n_bits - 1)
+    # second probe from a 16-bit rotation — a plain right shift would cap
+    # its range at 2^(32-shift), confining it to a prefix of wide planes
+    x2 = (x >> jnp.uint32(16)) | (x << jnp.uint32(16))
+    h = jnp.stack([x & m, x2 & m], axis=-1)
+    return ((h >> jnp.uint32(5)).astype(jnp.int32),
+            (h & jnp.uint32(31)).astype(jnp.int32))
+
+
+def bloom_test(plane: jax.Array, word: jax.Array, bit: jax.Array):
+    """(q, n_words) plane × (q, C, 2) probes → (q, C) bool (all bits set)."""
+    q, C, H = word.shape
+    vals = jnp.take_along_axis(plane, word.reshape(q, C * H),
+                               axis=1).reshape(q, C, H)
+    hit = (vals >> bit.astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.all(hit == 1, axis=-1)
+
+
+def bloom_set(plane: jax.Array, word: jax.Array, bit: jax.Array,
+              mask: jax.Array):
+    """Set both probe bits of every entry where ``mask`` (q, C); new plane.
+
+    Oracle form: unpack to a (q, n_bits) bit plane, scatter, repack —
+    masked-off entries are routed to an out-of-bounds index and dropped.
+    """
+    q, n_words = plane.shape
+    C, H = word.shape[1], word.shape[2]
+    flat = (word * 32 + bit).reshape(q, C * H)
+    keep = jnp.broadcast_to(mask[..., None], word.shape).reshape(q, C * H)
+    flat = jnp.where(keep, flat, n_words * 32)          # OOB → dropped
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((plane[:, :, None] >> shifts) & 1).astype(bool)
+    bits = bits.reshape(q, n_words * 32)
+    bits = bits.at[jnp.arange(q)[:, None], flat].set(True, mode="drop")
+    bits = bits.reshape(q, n_words, 32)
+    return jnp.sum(jnp.where(bits, jnp.uint32(1) << shifts, jnp.uint32(0)),
+                   axis=-1, dtype=jnp.uint32)
+
+
 def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                 expanded, *, metric: str = "l2",
-                distinct_cands: bool = False):
+                distinct_cands: bool = False, visited=None):
     """One fused beam-expansion step — oracle for the ``beam_expand`` kernel.
 
     queries: (q, d); nbr_vecs/nbr_ids: (q, C, d)/(q, C) the gathered
@@ -137,6 +209,16 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     survivors come back unexpanded. ``n_evals`` counts every valid
     candidate (q,) int32 — including beam duplicates, exactly like the
     unfused loop, so recall-vs-evals comparisons stay honest.
+
+    ``visited`` (optional) is a (q, n_words) uint32 bloom bit plane (the
+    bounded visited set). Candidates whose probe bits are already all set
+    are masked BEFORE the distance evaluation: they are excluded from the
+    merge, excluded from ``n_evals`` (the cost model change — see
+    DESIGN.md §3.7), and the plane is updated with the bits of every
+    candidate that WAS evaluated this step. Since every beam entry was
+    once evaluated (entry seeds are inserted at state init), beam
+    duplicates stop being re-paid. Returns a fifth element, the updated
+    plane. ``visited=None`` is today's exact behavior (4-tuple).
     """
     q = queries[:, None, :]
     if metric == "ip":
@@ -152,14 +234,20 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     nq, beam = beam_ids.shape
     C = nbr_ids.shape[1]
     valid = nbr_ids != -1
+    if visited is not None:
+        word, bitp = bloom_hash(nbr_ids, visited.shape[1] * 32)
+        evald = valid & ~bloom_test(visited, word, bitp)
+        new_visited = bloom_set(visited, word, bitp, evald)
+    else:
+        evald = valid
     dup_beam = jnp.any(nbr_ids[:, :, None] == beam_ids[:, None, :], axis=-1)
     earlier = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]
     if distinct_cands:
-        ok = valid & ~dup_beam
+        ok = evald & ~dup_beam
     else:
         dup_cand = jnp.any((nbr_ids[:, :, None] == nbr_ids[:, None, :])
                            & earlier[None], axis=-1)
-        ok = valid & ~dup_beam & ~dup_cand
+        ok = evald & ~dup_beam & ~dup_cand
     cd = jnp.where(ok, nd, jnp.inf)
     cid = jnp.where(ok, nbr_ids, -1)
     # two-run stable merge by compare-counts (see docstring)
@@ -185,7 +273,10 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
         is_cand, jnp.take_along_axis(cd, cand_src, axis=1),
         jnp.take_along_axis(beam_dists, beam_src, axis=1))
     new_e = ~is_cand & jnp.take_along_axis(expanded, beam_src, axis=1)
-    return new_ids, new_d, new_e, jnp.sum(valid, axis=-1, dtype=jnp.int32)
+    n_evals = jnp.sum(evald, axis=-1, dtype=jnp.int32)
+    if visited is not None:
+        return new_ids, new_d, new_e, n_evals, new_visited
+    return new_ids, new_d, new_e, n_evals
 
 
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):

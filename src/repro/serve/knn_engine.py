@@ -9,6 +9,21 @@ replicating the first pending query, so padded slots converge together
 with real ones instead of dragging the while-loop to the step cap; padded
 results (and their eval counts) are dropped before anything is reported.
 
+``compact=True`` switches the batch step to STRAGGLER COMPACTION (the
+decode-slot-backfill analogue, DESIGN.md §3.6): instead of holding every
+slot hostage to the slowest query in its batch, the engine keeps one
+persistent resumable ``SearchState`` per slot, advances all slots by a
+bounded ``chunk_steps`` chunk (one jitted ``beam_search_resume`` reused
+across refills), harvests the slots that finished (converged or out of
+their per-slot step budget) and backfills them from the queue mid-flight.
+Per-slot step and eval accounting rides the state, so per-query results
+AND eval counts are bit-identical to the fixed-slot path — compaction
+only reshuffles which wall-clock step a query's work runs in.
+
+``visited_bits > 0`` threads the bounded visited set (bloom plane)
+through the search — fewer distance evals per query at a false-positive-
+bounded recall cost (DESIGN.md §3.7); works in both batch modes.
+
 Per-batch latency and aggregate QPS/eval statistics are recorded as they
 accumulate; eval totals are summed on host in int64 (the same
 overflow-safe treatment as ``localjoin.eval_count`` — a running int32
@@ -22,6 +37,7 @@ Single-host CPU-testable; the search itself dispatches to the Pallas
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Any, Iterable
@@ -30,8 +46,72 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import KnnGraph
-from repro.core.search import beam_search
+from repro.core.graph import INVALID_ID, KnnGraph
+from repro.core.search import (SearchState, beam_search, beam_search_finished,
+                               beam_search_resume, beam_search_state,
+                               default_max_steps)
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
+                                              "visited_bits"))
+def _admit(g, data, queries, state: SearchState, fresh, clear, *, beam,
+           metric, n_entries, visited_bits) -> SearchState:
+    """Slot admission: fresh slots get a new entry-beam state built from
+    ``queries``; cleared slots become empty fixed points (all-INVALID
+    beam ⇒ converged ⇒ the resume chunk never spends a step or an eval
+    on them); everything else keeps its in-flight state."""
+    init = beam_search_state(g, data, queries, beam=beam, metric=metric,
+                             n_entries=n_entries, visited_bits=visited_bits)
+    empty = SearchState(
+        ids=jnp.full_like(state.ids, INVALID_ID),
+        dists=jnp.full_like(state.dists, jnp.inf),
+        expanded=jnp.zeros_like(state.expanded),
+        evals=jnp.zeros_like(state.evals),
+        steps=jnp.zeros_like(state.steps),
+        visited=jnp.zeros_like(state.visited))
+
+    def sel(mask, a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return SearchState(*(sel(fresh, f, sel(clear, e, s))
+                         for f, e, s in zip(init, empty, state)))
+
+
+def _empty_state(slots: int, beam: int, visited_bits: int) -> SearchState:
+    """An all-empty-fixed-point slot batch (the compaction start state)."""
+    return SearchState(
+        ids=jnp.full((slots, beam), INVALID_ID, jnp.int32),
+        dists=jnp.full((slots, beam), jnp.inf, jnp.float32),
+        expanded=jnp.zeros((slots, beam), bool),
+        evals=jnp.zeros((slots,), jnp.int32),
+        steps=jnp.zeros((slots,), jnp.int32),
+        visited=jnp.zeros((slots, visited_bits // 32 if visited_bits else 0),
+                          jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
+                                              "visited_bits", "chunk_steps",
+                                              "max_steps", "expand"))
+def _round_step(g, data, queries, state, fresh, clear, *, beam, metric,
+                n_entries, visited_bits, chunk_steps, max_steps, expand):
+    """One fused compaction round — admit, chunked resume, harvest
+    predicate — as a SINGLE dispatch (the per-round host overhead is what
+    compaction trades against, so the round must not cost three). The
+    admit pass (entry-beam init for the whole batch + state select) only
+    runs when a slot actually changed hands — in the straggler-drain
+    tail, every round skips straight to the resume chunk."""
+    def do_admit(st):
+        return _admit(g, data, queries, st, fresh, clear, beam=beam,
+                      metric=metric, n_entries=n_entries,
+                      visited_bits=visited_bits)
+
+    st = jax.lax.cond(jnp.any(fresh) | jnp.any(clear), do_admit,
+                      lambda st: st, state)
+    st = beam_search_resume(g, data, queries, st, num_steps=chunk_steps,
+                            max_steps=max_steps, metric=metric,
+                            expand=expand)
+    return st, beam_search_finished(st, max_steps=max_steps)
 
 
 @dataclasses.dataclass
@@ -57,6 +137,15 @@ class SearchEngine:
     max_steps: int | None = None
     n_entries: int = 8
     slots: int = 256
+    #: straggler compaction: resumable per-slot states advanced in
+    #: ``chunk_steps`` chunks, finished slots harvested and backfilled
+    #: mid-flight instead of holding the batch to its slowest query
+    compact: bool = False
+    chunk_steps: int = 8
+    #: bounded visited set (bloom plane width in bits, power of two;
+    #: 0 = off). Cuts evals/query; see DESIGN.md §3.7 for the
+    #: false-positive → recall tradeoff.
+    visited_bits: int = 0
     #: False skips the per-batch host sync + eval readback that feed the
     #: latency/QPS accumulators — for throwaway single-shot wrappers
     #: (KnnIndex.search) where the stats die with the engine and the sync
@@ -68,10 +157,29 @@ class SearchEngine:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
         if self.k > self.beam:
             raise ValueError(f"k={self.k} > beam={self.beam}")
+        if self.chunk_steps < 1:
+            raise ValueError(f"chunk_steps must be >= 1, got "
+                             f"{self.chunk_steps}")
+        if self.visited_bits:
+            # fail at construction, not mid-batch with requests in flight
+            from repro.kernels.ref import bloom_check_bits
+            bloom_check_bits(self.visited_bits)
         self._pending: deque = deque()          # (request id, query row)
         self._done: dict[Any, tuple] = {}
         self._in_flight: set = set()            # queued or served-unclaimed
         self._warmed = False                    # first timed batch pending
+        self._token_seq = 0                     # internal request-id source
+        # per-query step budget: the compacted path needs it resolved (a
+        # slot admitted mid-flight carries its own step clock against it)
+        self._max_steps = (self.max_steps if self.max_steps is not None
+                           else default_max_steps(self.beam, self.expand))
+        # compaction state: one persistent SearchState row per slot
+        self._slot_rids: list = [None] * self.slots
+        self._slot_dirty = np.zeros(self.slots, bool)   # harvested leftovers
+        self._qbuf = np.zeros((self.slots, int(self.data.shape[1])),
+                              np.float32)
+        self._qdev: jax.Array | None = None     # device mirror of _qbuf
+        self._state: SearchState | None = None
         self.reset_stats()
 
     def reset_stats(self) -> None:
@@ -92,8 +200,9 @@ class SearchEngine:
     def _search(self, qbatch: jax.Array):
         return beam_search(
             self.graph, self.data, qbatch, self.k, beam=self.beam,
-            max_steps=self.max_steps, metric=self.metric,
-            n_entries=self.n_entries, expand=self.expand)
+            max_steps=self._max_steps, metric=self.metric,
+            n_entries=self.n_entries, expand=self.expand,
+            visited_bits=self.visited_bits)
 
     def _run(self, qbatch: jax.Array, fill: int):
         """One fixed-shape jitted search over a full slot batch.
@@ -130,9 +239,17 @@ class SearchEngine:
     # ---- request lifecycle (streaming path) ----------------------------
 
     def submit(self, request_id, query) -> None:
-        """Queue one query row (d,) under an arbitrary hashable id.
+        """Queue one query vector (d,) — or (1, d) — under an arbitrary
+        hashable id.
 
-        Ids must be unique among in-flight requests (queued or served but
+        A single-row 2-D vector is promoted to its (d,) row; any other
+        rank raises (a bare (nq, d) block here would silently become one
+        garbage request — use :meth:`search` / one submit per row). The
+        WIDTH is deliberately not checked here: a wrong-d row surfaces at
+        batch time, where the requeue (``run_batch``) and release
+        (``search_stream``) contracts make it recoverable — both pinned
+        by tests/test_knn_engine.py. Ids
+        must be unique among in-flight requests (queued or served but
         not yet claimed via :meth:`result`) — a duplicate would silently
         overwrite the earlier response, so it raises instead. Served
         results are retained until claimed; callers that abandon requests
@@ -140,22 +257,149 @@ class SearchEngine:
         """
         if request_id in self._in_flight:
             raise ValueError(f"request id {request_id!r} already in flight")
+        vec = np.asarray(query)
+        if vec.ndim == 2 and vec.shape[0] == 1:
+            vec = vec[0]
+        if vec.ndim != 1:
+            raise ValueError(
+                f"submit expects one query vector of shape (d,) or (1, d), "
+                f"got shape {vec.shape}")
         self._in_flight.add(request_id)
-        self._pending.append((request_id, np.asarray(query)))
+        self._pending.append((request_id, vec))
+
+    # ---- straggler compaction (compact=True) ---------------------------
+
+    def _occupied(self) -> bool:
+        return any(r is not None for r in self._slot_rids)
+
+    def _round_step(self, qdev, st, fresh, clear):
+        return _round_step(
+            self.graph, self.data, qdev, st, fresh, clear, beam=self.beam,
+            metric=self.metric, n_entries=self.n_entries,
+            visited_bits=self.visited_bits, chunk_steps=self.chunk_steps,
+            max_steps=self._max_steps, expand=self.expand)
+
+    def _compact_round(self) -> list:
+        """One compaction round: backfill free slots from the queue, run
+        one bounded step chunk over the persistent slot states, harvest
+        every finished slot. Returns the harvested request ids.
+
+        Frozen slots (empty, or finished-but-unharvested) are exact fixed
+        points of the chunk, so a round over a mostly-drained batch costs
+        almost nothing; per-slot step clocks make every query's budget
+        identical to the fixed-slot path, which is why per-query results
+        and eval counts are bit-identical with compaction on or off.
+        """
+        fresh = np.zeros(self.slots, bool)
+        clear = self._slot_dirty.copy()
+        admitted: list[tuple] = []              # (slot, rid, vec) this round
+        try:
+            for s in range(self.slots):
+                if self._slot_rids[s] is None and self._pending:
+                    rid, vec = self._pending.popleft()
+                    try:
+                        if vec.shape != self._qbuf[s].shape:
+                            # explicit check: numpy assignment would
+                            # happily BROADCAST a (1,) row across (d,)
+                            raise ValueError(
+                                f"query row for {rid!r} has shape "
+                                f"{vec.shape}, expected "
+                                f"({self._qbuf.shape[1]},)")
+                        self._qbuf[s] = vec
+                    except Exception:
+                        # the failing row restores itself; the outer
+                        # handler restores everything admitted before it
+                        self._pending.appendleft((rid, vec))
+                        raise
+                    self._slot_rids[s] = rid
+                    fresh[s] = True
+                    clear[s] = False
+                    admitted.append((s, rid, vec))
+            if fresh.any() or self._qdev is None:
+                self._qdev = jnp.asarray(self._qbuf)
+            qdev = self._qdev
+            if self._state is None:
+                # everything starts as the empty fixed point; the first
+                # admit's fresh mask populates the real slots (no separate
+                # init dispatch whose result would be overwritten anyway)
+                self._state = _empty_state(self.slots, self.beam,
+                                           self.visited_bits)
+            fresh_d, clear_d = jnp.asarray(fresh), jnp.asarray(clear)
+            if self.record_stats and not self._warmed:
+                # populate the jit cache un-timed (one fused round
+                # dispatch)
+                warm, wfin = self._round_step(qdev, self._state, fresh_d,
+                                              clear_d)
+                np.asarray(wfin)
+                self._warmed = True
+            t0 = time.perf_counter()
+            st, fin_d = self._round_step(qdev, self._state, fresh_d,
+                                         clear_d)
+            fin = np.asarray(fin_d)
+        except Exception:
+            # roll back the WHOLE round's admissions (front, original
+            # order), like run_batch: their device state was never
+            # committed (self._state is only reassigned on success), so
+            # leaving them in slots would hand back garbage harvests —
+            # the requeue keeps them retryable
+            for s, arid, avec in reversed(admitted):
+                self._slot_rids[s] = None
+                self._pending.appendleft((arid, avec))
+            raise
+        if self.record_stats:
+            self._batch_s.append(time.perf_counter() - t0)
+        self._state = st
+        # dirty flags are consumed only once the round COMMITTED: on a
+        # dispatch failure the device state was never cleared, and a flag
+        # zeroed early would leave a _release-evicted live slot stepping
+        # (unharvested, unclearable) until a fresh admission lands on it
+        self._slot_dirty[:] = False
+        rows = [s for s in range(self.slots)
+                if self._slot_rids[s] is not None and fin[s]]
+        harvested = []
+        if rows:
+            # one host round-trip for the whole harvest, not three
+            ids_h, d_h, ev_h = (np.asarray(a) for a in jax.device_get(
+                (st.ids[:, :self.k], st.dists[:, :self.k], st.evals)))
+            for s in rows:
+                rid = self._slot_rids[s]
+                self._done[rid] = (ids_h[s], d_h[s], ev_h[s])
+                self._slot_rids[s] = None
+                self._slot_dirty[s] = True
+                harvested.append(rid)
+                if self.record_stats:
+                    self._n_queries += 1
+                    self._total_evals += int(ev_h[s])
+        return harvested
 
     def run_batch(self) -> list:
-        """Serve up to ``slots`` pending queries; returns their ids.
+        """Serve pending queries; returns the ids served by THIS call.
 
-        One fixed-shape jitted search per call — the continuous-batching
-        step. No-op on an empty queue.
+        Fixed-slot mode: pops up to ``slots`` requests and runs one
+        jitted search to completion over them. Compacted mode
+        (``compact=True``): runs one compaction round — backfill, one
+        bounded step chunk, harvest — which may legitimately return []
+        while stragglers are still in flight; keep calling (or
+        :meth:`drain`) to finish them. No-op on an empty engine.
         """
+        if self.compact:
+            if not self._pending and not self._occupied():
+                return []
+            return self._compact_round()
         if not self._pending:
             return []
         items = [self._pending.popleft()
                  for _ in range(min(self.slots, len(self._pending)))]
         fill = len(items)
         try:
-            q = self._pad(jnp.asarray(np.stack([v for _, v in items])))
+            q = jnp.asarray(np.stack([v for _, v in items]))
+            if q.shape[1] != self.data.shape[1]:
+                # np.stack accepts a uniformly-wrong width (e.g. all (1,)
+                # rows) that would broadcast to garbage downstream
+                raise ValueError(
+                    f"query rows have dimension {q.shape[1]}, expected "
+                    f"{self.data.shape[1]}")
+            q = self._pad(q)
             ids, dists, evals, ev_h = self._run(q, fill)
             # one readback of the real rows per batch (evals already came
             # back with the stats); per-request rows are host views
@@ -176,8 +420,11 @@ class SearchEngine:
         return served
 
     def drain(self) -> None:
-        """Run batches until the queue is empty."""
-        while self._pending:
+        """Run batches until the queue is empty (compacted mode: until
+        every in-flight slot has been harvested as well — a permanently
+        slow query is guaranteed to finish because its per-slot step
+        budget is finite)."""
+        while self._pending or (self.compact and self._occupied()):
             self.run_batch()
 
     def result(self, request_id):
@@ -186,21 +433,47 @@ class SearchEngine:
         self._in_flight.discard(request_id)
         return out
 
+    def _release(self, rids: set) -> None:
+        """Forget a set of unserved requests entirely: drop them from the
+        queue, evict them from compaction slots, free their ids."""
+        self._pending = deque(i for i in self._pending if i[0] not in rids)
+        for s in range(self.slots):
+            if self._slot_rids[s] in rids:
+                self._slot_rids[s] = None
+                self._slot_dirty[s] = True
+        self._in_flight -= rids
+
     # ---- convenience front ends ----------------------------------------
 
     def search(self, queries):
         """Batch front end: (nq, d) → (ids (nq, k), dists, evals (nq,)).
 
-        Slices the query block into slot batches (tail padded, padding
-        dropped before results are reassembled in order) — same contract
-        as calling ``beam_search`` directly, no per-row Python overhead.
+        Strictly 2-D input: a 1-D (d,) vector raises (``queries.shape[0]``
+        would otherwise treat the d components as d queries and return
+        garbage shapes) — promote a single vector with ``queries[None]``
+        or use :meth:`submit`. Fixed-slot mode slices the block into slot
+        batches (tail padded, padding dropped before results are
+        reassembled in order); compacted mode routes the rows through the
+        compaction loop. Both are bit-identical to calling ``beam_search``
+        directly on the block.
         """
         queries = jnp.asarray(queries)
+        if queries.ndim != 2:
+            raise ValueError(
+                f"search expects a 2-D (nq, d) query block, got shape "
+                f"{queries.shape}; promote a single vector with "
+                f"queries[None, :] or submit() it")
+        if queries.shape[1] != self.data.shape[1]:
+            raise ValueError(
+                f"query dimension {queries.shape[1]} != data dimension "
+                f"{self.data.shape[1]}")
         nq = queries.shape[0]
         if nq == 0:
             return (jnp.zeros((0, self.k), jnp.int32),
                     jnp.zeros((0, self.k), jnp.float32),
                     jnp.zeros((0,), jnp.int32))
+        if self.compact:
+            return self._search_compacted(queries)
         out = []
         for s in range(0, nq, self.slots):
             qb = queries[s:s + self.slots]
@@ -211,20 +484,56 @@ class SearchEngine:
             return out[0]
         return tuple(jnp.concatenate([o[i] for o in out]) for i in range(3))
 
+    def _search_compacted(self, queries):
+        """Batch front end over the compaction loop: every row becomes an
+        internal request, the queue drains through chunked rounds, and
+        results come back in row order. On failure the internal ids are
+        released so the engine stays usable."""
+        host_q = np.asarray(queries)
+        self._token_seq += 1
+        tokens = [("__search__", self._token_seq, i)
+                  for i in range(len(host_q))]
+        try:
+            for tok, row in zip(tokens, host_q):
+                self.submit(tok, row)
+            self.drain()
+        except Exception:
+            toks = set(tokens)
+            self._release(toks)
+            for t in toks:
+                if t in self._done:
+                    self.result(t)      # discard already-served rows
+            raise
+        rows = [self.result(t) for t in tokens]
+        return (jnp.asarray(np.stack([r[0] for r in rows])),
+                jnp.asarray(np.stack([r[1] for r in rows])),
+                jnp.asarray(np.stack([r[2] for r in rows])))
+
     def search_stream(self, requests: Iterable[tuple]):
         """Streaming front end: yields (request_id, ids, dists) in arrival
-        order, running a slot batch whenever one fills (or at exhaustion)."""
+        order, running a slot batch whenever one fills (or at exhaustion).
+
+        If a batch fails mid-stream (e.g. one ragged query row), every
+        still-unserved request of this stream is RELEASED — dropped from
+        the queue and its id freed — before the error propagates, so the
+        caller can fix and resubmit without ids wedged in flight forever.
+        Results already computed stay claimable via :meth:`result`.
+        """
         waiting: deque = deque()
-        for rid, vec in requests:
-            self.submit(rid, vec)
-            waiting.append(rid)
-            if len(self._pending) >= self.slots:
-                self.run_batch()
-                while waiting and waiting[0] in self._done:
-                    rid0 = waiting.popleft()
-                    ids, dists, _ = self.result(rid0)
-                    yield rid0, ids, dists
-        self.drain()
+        try:
+            for rid, vec in requests:
+                self.submit(rid, vec)
+                waiting.append(rid)
+                if len(self._pending) >= self.slots:
+                    self.run_batch()
+                    while waiting and waiting[0] in self._done:
+                        rid0 = waiting.popleft()
+                        ids, dists, _ = self.result(rid0)
+                        yield rid0, ids, dists
+            self.drain()
+        except Exception:
+            self._release({rid for rid in waiting if rid not in self._done})
+            raise
         while waiting:
             rid0 = waiting.popleft()
             ids, dists, _ = self.result(rid0)

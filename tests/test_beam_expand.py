@@ -25,7 +25,10 @@ from numpy.testing import assert_allclose, assert_array_equal
 
 from repro.core.bruteforce import knn_bruteforce, knn_search_bruteforce
 from repro.core.graph import INVALID_ID
-from repro.core.search import beam_search, beam_search_scan, search_recall
+from repro.core.search import (beam_search, beam_search_finished,
+                               beam_search_resume, beam_search_scan,
+                               beam_search_state, default_max_steps,
+                               search_recall)
 from repro.data.vectors import clustered
 from repro.kernels import ref
 from repro.kernels.beam_expand import beam_expand_pallas
@@ -128,6 +131,138 @@ def test_beam_expand_dup_candidates_keep_beam_slot():
     assert oexp[0].tolist() == [True, False]
     assert_allclose(np.asarray(od[0]), [0.25, 4.0])
     assert int(ev[0]) == 2
+
+
+# ---- 1b. bounded visited set (bloom plane) --------------------------------
+
+def _seeded_plane(bid, n_bits):
+    """A plane holding exactly the beam ids — what search init produces."""
+    vis = jnp.zeros((bid.shape[0], n_bits // 32), jnp.uint32)
+    w, b = ref.bloom_hash(bid, n_bits)
+    return ref.bloom_set(vis, w, b, bid != INVALID_ID)
+
+
+@pytest.mark.parametrize("nq,C,d,beam", [(5, 8, 10, 6), (7, 64, 128, 32)])
+@pytest.mark.parametrize("n_bits", [1024, 8192])
+def test_beam_expand_visited_kernel_parity(nq, C, d, beam, n_bits):
+    # the visited plane must be bit-identical between kernel and oracle:
+    # same membership decisions, same eval counts, same updated plane
+    rng = np.random.default_rng(nq * 10 + C)
+    args = _random_state(rng, nq, C, d, beam)
+    vis = _seeded_plane(args[3], n_bits)
+    want = ref.beam_expand(*args, visited=vis)
+    got = beam_expand_pallas(*args, visited=vis, interpret=True)
+    assert len(got) == len(want) == 5
+    _assert_expand_equal(got[:4], want[:4])
+    assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+def test_beam_expand_visited_masks_before_eval():
+    # evaluating the same candidate block twice: the second pass must be
+    # fully masked by the plane returned from the first — zero evals, and
+    # beam duplicates (already inserted at seed time) are never counted
+    rng = np.random.default_rng(7)
+    nq, C, d, beam, n_bits = 4, 12, 16, 8, 2048
+    qs, nv, nid, bid, bd, bexp = _random_state(rng, nq, C, d, beam)
+    vis = _seeded_plane(bid, n_bits)
+    ids1, d1, e1, ev1, vis1 = ref.beam_expand(qs, nv, nid, bid, bd, bexp,
+                                              visited=vis)
+    ev0 = ref.beam_expand(qs, nv, nid, bid, bd, bexp)[3]
+    assert (np.asarray(ev1) <= np.asarray(ev0)).all()
+    _, _, _, ev2, vis2 = ref.beam_expand(qs, nv, nid, ids1, d1, e1,
+                                         visited=vis1)
+    assert_array_equal(np.asarray(ev2), 0)
+    assert_array_equal(np.asarray(vis2), np.asarray(vis1))
+
+
+def test_search_visited_fewer_evals_equal_recall(search_setup):
+    # the cost-model re-pin: eval comparisons vs the unvisited loop are
+    # made as evals-to-EQUAL-RECALL (the bloom masks revisits and beam
+    # duplicates pre-eval, so raw eval parity is no longer the contract)
+    data, g, q, gt_ids = search_setup
+    ids0, _, ev0 = beam_search(g, data, q, 10, beam=32)
+    idsv, _, evv = beam_search(g, data, q, 10, beam=32, visited_bits=4096)
+    r0 = float(search_recall(ids0, gt_ids, 10))
+    rv = float(search_recall(idsv, gt_ids, 10))
+    assert float(evv.mean()) < 0.8 * float(ev0.mean()), \
+        (float(evv.mean()), float(ev0.mean()))
+    assert rv >= r0 - 0.02, (r0, rv)
+
+
+def test_bloom_second_probe_covers_wide_planes():
+    # the second probe must address the FULL plane at every legal width —
+    # a bare right-shift caps it at 2^(32-shift) and silently confines it
+    # to a prefix of planes wider than that (raising the FP rate exactly
+    # where the plane was sized up to lower it)
+    n_bits = 1 << 18
+    ids = jnp.arange(0, 1 << 16, 7, dtype=jnp.int32)
+    word, bit = ref.bloom_hash(ids, n_bits)
+    pos2 = np.asarray(word)[:, 1] * 32 + np.asarray(bit)[:, 1]
+    assert pos2.max() >= n_bits // 2, pos2.max()
+
+
+def test_search_visited_bits_validated(search_setup):
+    data, g, q, _ = search_setup
+    with pytest.raises(ValueError, match="power of two"):
+        beam_search(g, data, q, 10, beam=32, visited_bits=1000)
+
+
+# ---- 1c. resumable stepped search -----------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 5])
+@pytest.mark.parametrize("visited_bits", [0, 4096])
+def test_chunked_resume_bit_identical_to_monolithic(search_setup, chunk,
+                                                    visited_bits):
+    # slot compaction's foundation: advancing the state in bounded chunks
+    # (the jitted chunk the engine reuses across refills) must reproduce
+    # the monolithic while-loop bit-for-bit — ids, dists, evals AND the
+    # per-query step clock
+    data, g, q, _ = search_setup
+    ms = default_max_steps(32)
+    ids_a, d_a, ev_a = beam_search(g, data, q, 10, beam=32,
+                                   visited_bits=visited_bits)
+    st = beam_search_state(g, data, q, beam=32, visited_bits=visited_bits)
+    rounds = 0
+    while not bool(beam_search_finished(st, max_steps=ms).all()):
+        st = beam_search_resume(g, data, q, st, num_steps=chunk,
+                                max_steps=ms)
+        rounds += 1
+        assert rounds <= ms + 1
+    assert_array_equal(np.asarray(st.ids[:, :10]), np.asarray(ids_a))
+    assert_array_equal(np.asarray(st.evals), np.asarray(ev_a))
+    assert int(st.steps.max()) <= ms
+
+
+def test_resume_on_finished_state_is_identity(search_setup):
+    data, g, q, _ = search_setup
+    ms = default_max_steps(32)
+    st = beam_search_state(g, data, q, beam=32)
+    st = beam_search_resume(g, data, q, st, num_steps=ms, max_steps=ms)
+    st2 = beam_search_resume(g, data, q, st, num_steps=ms, max_steps=ms)
+    for a, b in zip(st, st2):
+        aa, bb = np.asarray(a), np.asarray(b)
+        if aa.dtype == np.float32:
+            aa, bb = np.where(np.isinf(aa), 0, aa), np.where(np.isinf(bb),
+                                                             0, bb)
+        assert_array_equal(aa, bb)
+
+
+def test_max_steps_zero_returns_sorted_entry_beam(search_setup):
+    # the falsy-default regression: `max_steps or DEFAULT` silently ran
+    # the full budget for an explicit max_steps=0
+    data, g, q, _ = search_setup
+    ids, dists, ev = beam_search(g, data, q, 10, beam=32, max_steps=0)
+    assert int(np.asarray(ev).sum()) == 0
+    d = np.asarray(dists)
+    assert (np.sort(d, axis=1) == d).all()           # sorted entry beam
+    st = beam_search_state(g, data, q, beam=32)
+    assert_array_equal(np.asarray(ids), np.asarray(st.ids[:, :10]))
+    # the scan loop keeps its seed-verbatim unsorted entry beam, but the
+    # zero-eval / zero-step contract is the same
+    ids_s, _, ev_s = beam_search_scan(g, data, q, 10, beam=32, max_steps=0)
+    assert int(np.asarray(ev_s).sum()) == 0
+    assert set(np.asarray(ids_s).ravel().tolist()) <= \
+        set(np.asarray(st.ids[:, :10]).ravel().tolist()) | {int(INVALID_ID)}
 
 
 # ---- 2. fused search == the pre-fusion scan loop --------------------------

@@ -138,6 +138,269 @@ def test_engine_record_stats_off_skips_accumulators(setup):
     assert eng.stats()["queries"] == 0 and eng.stats()["batches"] == 0
 
 
+# ---- satellite bugfixes ---------------------------------------------------
+
+def test_submit_promotes_single_vector_ranks(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4)
+    eng.submit("flat", q[0])                    # (d,)
+    eng.submit("row", np.asarray(q[1])[None, :])  # (1, d) → promoted
+    with pytest.raises(ValueError, match="shape"):
+        eng.submit("block", np.asarray(q[:3]))  # (3, d) is ambiguous
+    eng.drain()
+    want_ids, _, _ = beam_search(g, data, q[:2], 5, beam=16)
+    assert_array_equal(eng.result("flat")[0], np.asarray(want_ids[0]))
+    assert_array_equal(eng.result("row")[0], np.asarray(want_ids[1]))
+
+
+def test_search_rejects_1d_query(setup):
+    # queries.shape[0] on a (d,) vector used to treat the d components as
+    # d separate queries and return garbage shapes
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4)
+    with pytest.raises(ValueError, match="2-D"):
+        eng.search(q[0])
+    with pytest.raises(ValueError, match="dimension"):
+        eng.search(np.zeros((3, data.shape[1] + 2)))
+    from repro.retrieval.index import KnnIndex
+    with pytest.raises(ValueError, match="2-D"):
+        KnnIndex(graph=g, data=data).search(q[0], k=5, beam=16)
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_stream_failure_releases_unserved_ids(setup, compact):
+    # a ragged row mid-stream used to kill the generator with every
+    # still-waiting id wedged in _in_flight forever; they must come back
+    # resubmittable while already-served results stay claimable
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    reqs = [(f"s{i}", np.asarray(q[i])) for i in range(6)]
+    reqs.insert(5, ("ragged", np.zeros(q.shape[1] + 3)))
+    served = []
+    with pytest.raises(Exception):
+        for rid, ids, _ in eng.search_stream(iter(reqs)):
+            served.append(rid)
+    want_ids, _, _ = beam_search(g, data, q[:6], 5, beam=16)
+    # every unserved id was released: resubmitting must not raise
+    redo = [rid for rid, _ in reqs
+            if rid != "ragged" and rid not in served
+            and rid not in eng._done]
+    for rid in redo:
+        eng.submit(rid, q[int(rid[1:])])
+    eng.drain()
+    for rid, _ in reqs:
+        if rid == "ragged" or rid in served:
+            continue
+        assert_array_equal(eng.result(rid)[0],
+                           np.asarray(want_ids[int(rid[1:])]))
+
+
+# ---- straggler compaction -------------------------------------------------
+
+def _skewed_queries(data, n_easy, n_hard, key=7):
+    """The BENCHMARKED straggler workload (shared generator — the tested
+    and benchmarked interleaves cannot silently diverge)."""
+    from repro.data.vectors import skewed_queries
+    nq = n_easy + n_hard
+    return skewed_queries(data, nq, data.shape[1],
+                          hard_frac=n_hard / nq, hard_scale=4.0, key=key)
+
+
+def test_compaction_bit_identical_and_stats_invariant(setup):
+    # compaction only reshuffles which wall-clock chunk a query's steps
+    # run in: per-query results, eval counts and the aggregate
+    # queries/total_evals stats must be identical with it on or off
+    data, g, _ = setup
+    q = _skewed_queries(data, 20, 5)
+    base = SearchEngine(graph=g, data=data, k=5, beam=16, slots=8)
+    comp = SearchEngine(graph=g, data=data, k=5, beam=16, slots=8,
+                        compact=True, chunk_steps=3)
+    ids_a, d_a, ev_a = base.search(q)
+    ids_b, d_b, ev_b = comp.search(q)
+    assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    assert_array_equal(np.asarray(jnp.where(jnp.isinf(d_a), 0, d_a)),
+                       np.asarray(jnp.where(jnp.isinf(d_b), 0, d_b)))
+    assert_array_equal(np.asarray(ev_a), np.asarray(ev_b))
+    sa, sb = base.stats(), comp.stats()
+    assert sa["queries"] == sb["queries"] == q.shape[0]
+    assert sa["total_evals"] == sb["total_evals"]
+
+
+def test_compaction_harvest_order_follows_step_counts(setup):
+    # slots >= nq and chunk_steps=c ⇒ a query finishing in s steps is
+    # harvested by run_batch round ceil(s / c), independent of the other
+    # slots — the converged-slot harvest contract
+    from repro.core.search import (beam_search_finished, beam_search_resume,
+                                   beam_search_state, default_max_steps)
+    data, g, _ = setup
+    q = _skewed_queries(data, 6, 2)
+    ms = default_max_steps(16)
+    st = beam_search_state(g, data, q, beam=16)
+    st = beam_search_resume(g, data, q, st, num_steps=ms, max_steps=ms)
+    steps = np.asarray(st.steps)
+    chunk = 4
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=q.shape[0],
+                       compact=True, chunk_steps=chunk)
+    for i in range(q.shape[0]):
+        eng.submit(i, q[i])
+    rounds = {}
+    r = 0
+    while eng._pending or eng._occupied():
+        r += 1
+        for rid in eng.run_batch():
+            rounds[rid] = r
+    assert len(rounds) == q.shape[0]
+    for i in range(q.shape[0]):
+        assert rounds[i] == -(-int(steps[i]) // chunk), (i, rounds, steps)
+
+
+def test_compaction_backfill_skewed_stream(setup):
+    # more requests than slots with stragglers in-flight: freed slots
+    # must be backfilled mid-flight and every request served correctly
+    data, g, _ = setup
+    q = _skewed_queries(data, 24, 6)
+    want_ids, _, want_ev = beam_search(g, data, q, 5, beam=16)
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=True, chunk_steps=2)
+    got = {}
+    for rid, ids, _ in eng.search_stream(
+            (i, q[i]) for i in range(q.shape[0])):
+        got[rid] = ids
+    assert len(got) == q.shape[0]
+    for i in range(q.shape[0]):
+        assert_array_equal(got[i], np.asarray(want_ids[i]))
+    assert eng.stats()["total_evals"] == int(np.asarray(want_ev)
+                                             .sum(dtype=np.int64))
+
+
+def test_compaction_drain_terminates_with_permanent_straggler(setup):
+    # a query that never converges within its budget must be harvested
+    # at the per-slot step cap, not spin drain() forever
+    data, g, _ = setup
+    hard = 50.0 * jax.random.normal(jax.random.key(3), (1, data.shape[1]))
+    easy = data[:5] + 0.02 * jax.random.normal(jax.random.key(4),
+                                               (5, data.shape[1]))
+    q = jnp.concatenate([hard, easy])
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=3,
+                       compact=True, chunk_steps=2, max_steps=5)
+    for i in range(q.shape[0]):
+        eng.submit(i, q[i])
+    eng.drain()                                  # must terminate
+    want_ids, _, _ = beam_search(g, data, q, 5, beam=16, max_steps=5)
+    for i in range(q.shape[0]):
+        assert_array_equal(eng.result(i)[0], np.asarray(want_ids[i]))
+
+
+def test_compaction_ragged_admission_rolls_back_whole_round(setup):
+    # a ragged row failing MID-admission must roll back every request
+    # admitted earlier in the same round (like run_batch's extendleft):
+    # a slot assigned before the failure has no initialized device state,
+    # and leaving it stranded would hand back a garbage harvest later
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=True, chunk_steps=2)
+    eng.submit("good", q[0])
+    eng.submit("bad", np.zeros(q.shape[1] + 1))
+    with pytest.raises(Exception):
+        eng.run_batch()
+    assert len(eng._pending) == 2              # both back in the queue
+    assert not eng._occupied()                 # no slot left stranded
+    eng._release({"bad"})
+    eng.drain()
+    want_ids, _, _ = beam_search(g, data, q[:1], 5, beam=16)
+    assert_array_equal(eng.result("good")[0], np.asarray(want_ids[0]))
+
+
+def test_compaction_round_failure_after_admission_requeues(setup,
+                                                           monkeypatch):
+    # a failure in the round DISPATCH (after admission) must also roll
+    # the admitted requests back — their device state was never
+    # committed, so leaving them in slots would wedge the engine
+    import repro.serve.knn_engine as mod
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=True, chunk_steps=2)
+    eng.submit("a", q[0])
+    real = mod._round_step
+
+    def boom(*a, **kw):
+        raise RuntimeError("transient device failure")
+    monkeypatch.setattr(mod, "_round_step", boom)
+    with pytest.raises(RuntimeError):
+        eng.run_batch()
+    assert len(eng._pending) == 1 and not eng._occupied()
+    monkeypatch.setattr(mod, "_round_step", real)
+    eng.drain()                                # retry succeeds
+    want_ids, _, _ = beam_search(g, data, q[:1], 5, beam=16)
+    assert_array_equal(eng.result("a")[0], np.asarray(want_ids[0]))
+
+
+def test_release_clear_flag_survives_round_failure(setup, monkeypatch):
+    # the clear flag of a _release-evicted live slot is consumed only
+    # when a round COMMITS: if the dispatch fails first, the flag must
+    # survive so the eviction is still applied by the next good round
+    # (an early zero would leave the evicted state stepping forever)
+    import repro.serve.knn_engine as mod
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=2,
+                       compact=True, chunk_steps=1)
+    eng.submit("a", q[0])
+    eng.run_batch()                            # one chunk: 'a' still live
+    assert eng._occupied()
+    eng._release({"a"})
+    assert eng._slot_dirty.any()
+    real = mod._round_step
+
+    def boom(*a, **kw):
+        raise RuntimeError("transient device failure")
+    monkeypatch.setattr(mod, "_round_step", boom)
+    eng.submit("b", q[1])
+    with pytest.raises(RuntimeError):
+        eng.run_batch()
+    assert eng._slot_dirty.any()               # clear request not lost
+    monkeypatch.setattr(mod, "_round_step", real)
+    eng.drain()
+    want_ids, _, _ = beam_search(g, data, q[1:2], 5, beam=16)
+    assert_array_equal(eng.result("b")[0], np.asarray(want_ids[0]))
+    assert not eng._occupied()     # (the slot 'b' left stays dirty until
+    # the next round consumes it — harvest marks, commit clears)
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_broadcastable_wrong_width_row_raises_at_batch_time(setup, compact):
+    # a (1,) row broadcasts silently through numpy assignment / the
+    # distance kernels; both modes must raise instead of serving garbage
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    eng.submit("w", np.array([0.5], np.float32))
+    with pytest.raises(ValueError):
+        eng.run_batch()
+    assert len(eng._pending) == 1              # requeued, retryable
+
+
+def test_engine_validates_visited_bits_at_construction(setup):
+    data, g, _ = setup
+    with pytest.raises(ValueError, match="power of two"):
+        SearchEngine(graph=g, data=data, k=5, beam=16, visited_bits=1000)
+
+
+def test_compaction_with_visited_set(setup):
+    # the two tentpole halves compose: compacted serving over the bloom
+    # plane still matches the direct visited search bit-for-bit
+    data, g, _ = setup
+    q = _skewed_queries(data, 12, 3)
+    want = beam_search(g, data, q, 5, beam=16, visited_bits=2048)
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=True, chunk_steps=3, visited_bits=2048)
+    ids, dists, ev = eng.search(q)
+    assert_array_equal(np.asarray(ids), np.asarray(want[0]))
+    assert_array_equal(np.asarray(ev), np.asarray(want[2]))
+    assert eng.stats()["total_evals"] < int(
+        np.asarray(beam_search(g, data, q, 5, beam=16)[2]).sum())
+
+
 def test_index_and_result_route_through_engine(small_data):
     from repro.api import BuildConfig, GraphBuilder
     data = small_data[:300, :12]
