@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import pathlib
 import sys
 
@@ -28,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent))
-from common import Timer, dataset, emit  # noqa: E402
+from common import Timer, dataset, emit, write_json  # noqa: E402
 
 from repro.core.graph import random_graph  # noqa: E402
 from repro.core import insertion as ins  # noqa: E402
@@ -166,8 +165,7 @@ def main(argv=None):
     emit({"bench": "localjoin", "fused_speedup": results["fused_speedup"],
           "candidate_bytes_ratio": results["candidate_bytes_ratio"],
           "kernel_parity": results["kernel"]["interpret_parity"]})
-    pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
-    print(f"wrote {args.out}")
+    write_json(args.out, results)
 
 
 def run(n: int = 2000, rounds: int = 2):

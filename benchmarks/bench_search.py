@@ -42,7 +42,6 @@ kernel so the kernel path is covered even on the CPU oracle. Run with
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import sys
 import time
@@ -51,7 +50,7 @@ import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent))
-from common import Timer, emit  # noqa: E402
+from common import Timer, emit, write_json  # noqa: E402
 
 from repro.core.bruteforce import knn_search_bruteforce  # noqa: E402
 from repro.core.nndescent import nn_descent  # noqa: E402
@@ -323,8 +322,7 @@ def main(argv=None):
         if key in results:
             summary[key] = results[key]
     emit(summary)
-    pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
-    print(f"wrote {args.out}")
+    write_json(args.out, results)
 
 
 def run(n: int = 2000, nq: int = 64, reps: int = 2, arms: str = DEFAULT_ARMS):

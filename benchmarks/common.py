@@ -9,6 +9,9 @@ rows that EXPERIMENTS.md quotes directly.
 
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 import time
 
 import jax
@@ -35,3 +38,24 @@ class Timer:
 
 def emit(row: dict):
     print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+
+def write_json(path, obj) -> None:
+    """Atomically publish a ``BENCH_*.json``: tmp file + ``os.replace``.
+
+    Same discipline as the spool manifest — an interrupted benchmark must
+    never leave a truncated JSON behind (CI uploads these as artifacts and
+    EXPERIMENTS.md quotes them).
+    """
+    path = os.fspath(path)
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    print(f"wrote {path}")

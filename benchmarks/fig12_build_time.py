@@ -1,7 +1,11 @@
 """Paper Fig. 12/17: cost of merging pre-built index graphs vs building
 from scratch. Cost in distance evaluations + wall seconds; the paper's
-point: merge ≪ scratch once subgraphs exist.
+point: merge ≪ scratch once subgraphs exist. The out-of-core rows report
+both overlap arms of the spool data plane (PR 5): same merge, serial vs
+prefetch/write-behind, with the measured compute-vs-I/O split.
 """
+
+import tempfile
 
 import jax
 
@@ -37,6 +41,20 @@ def run(n=2000, k=16, lam=8):
               "scratch_sec": f"{t_scratch.s:.1f}",
               "merge/scratch":
                   f"{st['total_evals']/st_scratch['total_evals']:.2f}"})
+    # out-of-core data plane: serial vs overlapped spool, same merge
+    from repro.api import BuildConfig, GraphBuilder
+    for overlap in (False, True):
+        with tempfile.TemporaryDirectory() as td:
+            cfg = BuildConfig(strategy="outofcore", n_subsets=4, k=k,
+                              lam=lam, subgraph_iters=10, inner_iters=4,
+                              spool_dir=td, overlap=overlap)
+            res = GraphBuilder(cfg).build(data)
+            emit({"bench": "fig12/outofcore", "m": 4,
+                  "overlap": overlap,
+                  "merge_sec": f"{res.timings['merge_s']:.2f}",
+                  "merge_io_sec": f"{res.timings['merge_io_s']:.2f}",
+                  "merge_compute_sec":
+                      f"{res.timings['merge_compute_s']:.2f}"})
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ fig10   index-graph search   fig12  merge vs scratch cost
 tab3    distributed (Alg.3)  roofline  kernel models + dry-run aggregation
 localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
 search     fused/compacted/visited engine arms vs seed scan loop (BENCH json)
+merge      overlapped vs serial spool data plane + fused merge_graphs (BENCH json)
 
 ``--only`` selects a subset by name; an unknown name is a HARD error
 (exit 2) — a typo must never silently skip the benchmark it meant.
@@ -26,14 +27,16 @@ def main() -> None:
         if i + 1 >= len(argv):
             raise SystemExit("--only needs a comma-separated name list")
         only = [s.strip() for s in argv[i + 1].split(",") if s.strip()]
-    from benchmarks import (bench_localjoin, bench_search, fig5_fig6_lambda,
-                            fig7_subgraph_quality, fig8_merge_vs_baselines,
-                            fig9_multiway, fig10_index_search,
-                            fig12_build_time, roofline, tab3_distributed)
+    from benchmarks import (bench_localjoin, bench_merge, bench_search,
+                            fig5_fig6_lambda, fig7_subgraph_quality,
+                            fig8_merge_vs_baselines, fig9_multiway,
+                            fig10_index_search, fig12_build_time, roofline,
+                            tab3_distributed)
     jobs = [
         ("localjoin", lambda: bench_localjoin.run(n=1200 if fast else 2000)),
         ("search", lambda: bench_search.run(n=1200 if fast else 2000,
                                             nq=32 if fast else 64)),
+        ("merge", lambda: bench_merge.run(n=1800 if fast else 3000)),
         ("fig5/6", lambda: fig5_fig6_lambda.run(
             n=1200 if fast else 2000, lams=(2, 8) if fast else (2, 4, 8, 12))),
         ("fig7", lambda: fig7_subgraph_quality.run(n=1200 if fast else 2000)),

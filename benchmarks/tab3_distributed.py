@@ -5,6 +5,11 @@ device count at init), reporting recall, wall time and the phase breakdown
 (subgraph build vs merge vs exchange) that Fig. 14 plots. The collective
 (exchange) fraction is measured structurally via the dry-run HLO
 collective bytes rather than wall time (CPU ppermute time is meaningless).
+Both overlap arms are reported: ``overlap=True`` (double-buffered forward
+collectives — PR 5's data plane) and the strictly serial schedule, with a
+bit-identity check between them (host-CPU wall times are near-equal; the
+double-buffering pays off where collectives have real latency, i.e. on a
+multi-node TPU mesh).
 """
 
 import json
@@ -19,6 +24,7 @@ import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(m)d"
 sys.path.insert(0, %(src)r)
 import jax
+import jax.numpy as jnp
 from repro.api import BuildConfig, GraphBuilder
 from repro.core.distributed import build_distributed
 from repro.launch.hlo_stats import analyze
@@ -26,10 +32,19 @@ from repro.launch.hlo_stats import analyze
 m, n, d, k, lam = %(m)d, %(n)d, 20, 14, 7
 from repro.data.vectors import sift_like
 data = sift_like(jax.random.key(0), n, d)
-cfg = BuildConfig(strategy="distributed", k=k, lam=lam, n_subsets=m,
-                  subgraph_iters=15, inner_iters=5, seed=5)
-res = GraphBuilder(cfg).build(data)
-r = res.recall(at=10)
+out = {"m": m}
+graphs = {}
+for arm, overlap in (("overlap", True), ("serial", False)):
+    cfg = BuildConfig(strategy="distributed", k=k, lam=lam, n_subsets=m,
+                      subgraph_iters=15, inner_iters=5, seed=5,
+                      overlap=overlap)
+    res = GraphBuilder(cfg).build(data)
+    graphs[arm] = res.graph
+    out[arm] = {"recall": res.recall(at=10),
+                "t_subgraphs": res.timings["subgraphs_s"],
+                "t_merge": res.timings["merge_s"]}
+assert bool(jnp.all(graphs["overlap"].ids == graphs["serial"].ids)), \
+    "overlap arm diverged from serial schedule"
 # structural exchange volume from the lowered HLO (mesh + subgraph arrays
 # come back in the result's extras precisely for this kind of dry-run)
 lowered = build_distributed.lower(
@@ -37,11 +52,9 @@ lowered = build_distributed.lower(
     res.extras["subgraph_dists"], jax.random.key(5),
     k=k, lam=lam, inner_iters=5)
 st = analyze(lowered.compile().as_text())
-print("RESULT", json.dumps({
-    "m": m, "recall": r, "t_subgraphs": res.timings["subgraphs_s"],
-    "t_merge": res.timings["merge_s"],
-    "exchange_bytes": st["collective_bytes"],
-    "permutes": st["collectives"]["collective-permute"]["count"]}))
+out["exchange_bytes"] = st["collective_bytes"]
+out["permutes"] = st["collectives"]["collective-permute"]["count"]
+print("RESULT", json.dumps(out))
 """
 
 
@@ -61,9 +74,10 @@ def run(n=1920, ms=(2, 4, 8)):
             continue
         r = json.loads(line[0][7:])
         emit({"bench": "tab3/fig13", "m": m,
-              "recall@10": f"{r['recall']:.4f}",
-              "t_subgraphs_s": f"{r['t_subgraphs']:.1f}",
-              "t_merge_s": f"{r['t_merge']:.1f}",
+              "recall@10": f"{r['overlap']['recall']:.4f}",
+              "t_subgraphs_s": f"{r['overlap']['t_subgraphs']:.1f}",
+              "t_merge_overlap_s": f"{r['overlap']['t_merge']:.1f}",
+              "t_merge_serial_s": f"{r['serial']['t_merge']:.1f}",
               "exchange_MB": f"{r['exchange_bytes']/1e6:.1f}",
               "ppermutes": r["permutes"]})
 

@@ -113,8 +113,7 @@ class GraphBuilder:
         cfg = self.config
         subs, t_sub = self._subgraphs(root, data, sizes)
         if len(sizes) == 1:          # degenerate m=1: nothing to merge
-            return subs[0], _empty_stats(), {"subgraphs_s": t_sub,
-                                             "merge_s": 0.0}, {}
+            return subs[0], _empty_stats(), _timings(t_sub, 0.0), {}
         g0 = concat_subgraphs(subs)
         wrapped = None
         if trace_fn is not None:
@@ -127,23 +126,20 @@ class GraphBuilder:
                                   fused=cfg.fused_localjoin,
                                   trace_fn=wrapped)
         graph = merge_full(g_cross, g0)
-        return graph, stats, {"subgraphs_s": t_sub,
-                              "merge_s": time.time() - t0}, {}
+        return graph, stats, _timings(t_sub, time.time() - t0), {}
 
     def _build_hierarchy(self, root, data, sizes, trace_fn):
         cfg = self.config
         subs, t_sub = self._subgraphs(root, data, sizes)
         if len(sizes) == 1:
-            return subs[0], _empty_stats(), {"subgraphs_s": t_sub,
-                                             "merge_s": 0.0}, {}
+            return subs[0], _empty_stats(), _timings(t_sub, 0.0), {}
         t0 = time.time()
         graph, stats = two_way_hierarchy(jax.random.fold_in(root, 2), data,
                                          sizes, subs, lam=cfg.lam, k=cfg.k,
                                          max_iters=cfg.max_iters,
                                          delta=cfg.delta, metric=cfg.metric,
                                          fused=cfg.fused_localjoin)
-        return graph, stats, {"subgraphs_s": t_sub,
-                              "merge_s": time.time() - t0}, {}
+        return graph, stats, _timings(t_sub, time.time() - t0), {}
 
     def _build_distributed(self, root, data, sizes, trace_fn):
         from repro.core.distributed import build_distributed
@@ -166,16 +162,23 @@ class GraphBuilder:
                                        lam=cfg.lam,
                                        inner_iters=cfg.inner_iters,
                                        metric=cfg.metric,
-                                       fused=cfg.fused_localjoin)
+                                       fused=cfg.fused_localjoin,
+                                       overlap=cfg.overlap)
         ids.block_until_ready()
         graph = KnnGraph(ids=ids, dists=dists,
                          flags=jnp.zeros_like(ids, dtype=bool))
         stats: dict[str, Any] = {"nodes": m, "rounds": (m - 1 + 1) // 2,
-                                 "inner_iters": cfg.inner_iters}
+                                 "inner_iters": cfg.inner_iters,
+                                 "overlap": cfg.overlap}
         extras = {"mesh": mesh, "subgraph_ids": g_ids,
                   "subgraph_dists": g_dists}
-        return graph, stats, {"subgraphs_s": t_sub,
-                              "merge_s": time.time() - t0}, extras
+        merge_s = time.time() - t0
+        # the collectives are fused into one device program, so the host
+        # cannot split their wall time out; structural exchange volume
+        # comes from the HLO dry run (benchmarks/tab3_distributed.py)
+        return graph, stats, {"subgraphs_s": t_sub, "merge_s": merge_s,
+                              "merge_compute_s": merge_s,
+                              "merge_io_s": 0.0}, extras
 
     def _build_outofcore(self, root, data, sizes, trace_fn):
         import numpy as np
@@ -193,12 +196,21 @@ class GraphBuilder:
                                   nnd_iters=cfg.subgraph_iters,
                                   metric=cfg.metric,
                                   fused=cfg.fused_localjoin,
+                                  overlap=cfg.overlap,
+                                  prefetch_depth=cfg.prefetch_depth,
                                   phase_times=phase_times)
         m = len(sizes)
-        stats = {"subsets": m, "pairs": len(spool.manifest()["pairs_done"])}
+        stats = {"subsets": m, "pairs": len(spool.manifest()["pairs_done"]),
+                 "overlap": cfg.overlap}
         extras = {"spool": spool}
         return graph, stats, phase_times, extras
 
 
 def _empty_stats() -> dict:
     return {"updates": [], "evals": [], "iters": 0, "total_evals": 0}
+
+
+def _timings(subgraphs_s: float, merge_s: float) -> dict:
+    """Uniform phase-timing schema; single-device merges are all compute."""
+    return {"subgraphs_s": subgraphs_s, "merge_s": merge_s,
+            "merge_compute_s": merge_s, "merge_io_s": 0.0}

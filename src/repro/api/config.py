@@ -45,6 +45,17 @@ class BuildConfig:
                       falls back to the legacy triple-stream path — same
                       graph quality, strictly more candidate memory traffic
                       (kept for parity tests and benchmarking).
+      overlap:        run the scale-out merge data plane overlapped
+                      (default): the distributed build double-buffers the
+                      Alg. 3 forward collectives, the out-of-core build
+                      prefetches the next pair's spool blocks and runs the
+                      ``full{a}`` puts write-behind. ``False`` is the
+                      strictly serial data plane — bit-identical result
+                      (pinned), kept as the benchmark baseline. Ignored by
+                      the single-device strategies.
+      prefetch_depth: how many pairs of spool buffers the out-of-core
+                      prefetcher may hold in flight (≥ 1; ignored unless
+                      strategy="outofcore" and overlap is on).
     """
 
     strategy: str = "twoway"
@@ -62,6 +73,8 @@ class BuildConfig:
     alpha: float = 1.1
     max_degree: int | None = None
     fused_localjoin: bool = True
+    overlap: bool = True
+    prefetch_depth: int = 2
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -70,7 +83,8 @@ class BuildConfig:
         if self.metric not in METRICS:
             raise ValueError(f"unknown metric {self.metric!r}; "
                              f"expected one of {METRICS}")
-        for name in ("k", "lam", "max_iters", "subgraph_iters", "inner_iters"):
+        for name in ("k", "lam", "max_iters", "subgraph_iters", "inner_iters",
+                     "prefetch_depth"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
         if self.delta < 0:

@@ -29,7 +29,15 @@ class BuildResult:
                strategies add ``"iters"`` / ``"total_evals"`` /
                per-round ``"updates"`` / ``"evals"``.
       timings: wall seconds per phase: ``"subgraphs_s"``, ``"merge_s"``,
-               ``"total_s"``.
+               ``"total_s"``, plus the merge-stage split
+               ``"merge_compute_s"`` / ``"merge_io_s"`` (host blocked on
+               spool I/O, transfers or collectives vs the rest). The
+               out-of-core strategy measures the split directly; the
+               single-device strategies report all-compute, and the
+               distributed strategy's collectives are fused into the
+               device program (comm reported as 0 — structural exchange
+               volume comes from the HLO dry-run, see
+               ``benchmarks/tab3_distributed.py``).
       extras:  strategy-specific artifacts (e.g. the distributed build's
                mesh and concatenated subgraph arrays, for HLO dry-runs).
     """

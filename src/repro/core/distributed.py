@@ -25,6 +25,21 @@ so we keep both for uniformity, exactly like the paper's ⌈(m−1)/2⌉ bound.
 Inner Two-way Merge runs a FIXED iteration budget (no host reads inside
 ``shard_map``); the budget plays the paper's convergence role and is a
 config knob (paper's merges converge in ≲10 rounds).
+
+Overlap (``overlap=True``, the default): the forward exchange of round r+1
+ships (S_j, data_j) — both ROUND-INVARIANT on the sender — so its ppermute
+can be issued before round r's pair merge consumes its operands. The loop
+double-buffers: round r+1's collectives enter the program before round r's
+``pair_two_way_fixed``, giving XLA's latency-hiding scheduler a full merge
+(inner_iters local-join rounds) to hide the collective behind. Only the
+backward half-shipment (G_j^i, a merge *result*) stays on the critical
+path. The pairing schedule is unchanged — values are bit-identical to the
+serial ordering and to ``reference_pairwise`` (pinned by
+tests/test_distributed.py). ``overlap=False`` anchors each round's
+collectives AFTER the previous round's merge with an
+``optimization_barrier`` — the strictly serial baseline the overlap arm of
+``benchmarks/tab3_distributed.py`` is measured against. Round-time model
+and buffer lifetimes: DESIGN.md §4.1.
 """
 
 from __future__ import annotations
@@ -75,12 +90,12 @@ def pair_two_way_fixed(key: jax.Array, seg: jax.Array, n_left: int,
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "axis", "k", "lam", "inner_iters", "metric",
-                     "start_round", "fused"))
+                     "start_round", "fused", "overlap"))
 def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
                       g_dists: jax.Array, key: jax.Array, *, axis: str = "nodes",
                       k: int, lam: int, inner_iters: int = 8,
                       metric: str = "l2", start_round: int = 1,
-                      fused: bool = True):
+                      fused: bool = True, overlap: bool = True):
     """Alg. 3 across the ``axis`` dimension of ``mesh``.
 
     data   : (n, d)  row-sharded over ``axis``  — node i holds subset C_i
@@ -89,6 +104,12 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
     Returns (ids, dists): the full k-NN graph rows (global neighbor ids),
     sharded like the inputs. ``start_round`` > 1 resumes a checkpointed
     build (the schedule is stateless given the round index).
+
+    ``overlap`` double-buffers the forward exchange (see module docstring):
+    round r+1's (S_j, data_j) ppermutes are issued before round r's pair
+    merge consumes its buffers; the values (and the pairing schedule) are
+    identical either way, so both modes are bit-identical to each other and
+    to :func:`reference_pairwise`.
     """
     m = mesh.shape[axis]
     n_loc = data.shape[0] // m
@@ -105,11 +126,32 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
                        dists=gi_dists,
                        flags=jnp.zeros_like(gi_ids, dtype=bool))
         n_rounds = (m - 1 + 1) // 2                          # ⌈(m−1)/2⌉
-        for r in range(start_round, n_rounds + 1):
+
+        def exchange(r, anchor=None):
+            """Forward collective of round ``r``: ship (S_i, C_i) to N_t.
+
+            ``anchor`` (serial mode) ties the operands to the previous
+            round's merge result so the scheduler cannot hoist the
+            collective — values pass through the barrier unchanged.
+            """
             fwd = [(s, (s + r) % m) for s in range(m)]       # S_i → N_t
+            src_s, src_d = s_i, data_i
+            if anchor is not None:
+                src_s, src_d, _ = jax.lax.optimization_barrier(
+                    (src_s, src_d, anchor))
+            return (jax.lax.ppermute(src_s, axis, fwd),
+                    jax.lax.ppermute(src_d, axis, fwd))
+
+        if overlap and start_round <= n_rounds:
+            nxt = exchange(start_round)                      # prime buffer 0
+        for r in range(start_round, n_rounds + 1):
             bwd = [(s, (s - r) % m) for s in range(m)]       # G_j^i → N_j
-            s_j = jax.lax.ppermute(s_i, axis, fwd)
-            data_j = jax.lax.ppermute(data_i, axis, fwd)
+            if overlap:
+                s_j, data_j = nxt
+                if r < n_rounds:                             # double-buffer:
+                    nxt = exchange(r + 1)                    # issue r+1 now
+            else:
+                s_j, data_j = exchange(r, anchor=g_i.ids)
             j = (i - r) % m
             seg = jnp.concatenate([data_i, data_j], axis=0)
             s_pair = jnp.concatenate(

@@ -4,6 +4,15 @@
 (joining the cross-subset graph G with the concatenated subgraphs G0) and the
 per-round ``G_i ← MergeSort(G_i, G_i^j)`` updates of Alg. 3. ``concat_subgraphs``
 is Ω — it re-bases per-subset local neighbor ids into the global id space.
+
+``merge_graphs`` routes through the ``topk_merge`` primitive (Pallas
+rank-sort kernel on TPU, jnp oracle elsewhere) plus one membership pass for
+the flags — the same shape as ``insertion.merge_rows``. The seed's full
+``(n, a.k + b.k)`` ``sort_rows_dedupe`` sweep is kept verbatim as
+:func:`merge_graphs_sortdedupe`, the parity ground truth and the baseline
+arm of ``benchmarks/bench_merge.py``. Alg. 3 runs this merge twice per node
+per round and the out-of-core path twice per pair, so it sits on the merge
+data plane's critical path.
 """
 
 from __future__ import annotations
@@ -12,8 +21,10 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import INVALID_ID, KnnGraph, sort_rows_dedupe
+from repro.kernels import ops as kops
 
 
 def merge_graphs(a: KnnGraph, b: KnnGraph, k: int | None = None) -> KnnGraph:
@@ -21,6 +32,50 @@ def merge_graphs(a: KnnGraph, b: KnnGraph, k: int | None = None) -> KnnGraph:
 
     Duplicate ids collapse to one entry; ``a``'s slot (and flag) wins so merge
     order never flips flags. Rows come back sorted ascending.
+
+    One ``topk_merge`` (``a``'s rows absorb ``b``'s rows as the candidate
+    block — duplicate suppression keeps the earliest slot, i.e. ``a``) plus
+    one membership pass recovering flags from whichever side each survivor
+    came from replaces the seed's full-width ``sort_rows_dedupe`` re-sort
+    (:func:`merge_graphs_sortdedupe`). Output ids/flags are identical;
+    equal-distance entries with *different* ids may come back in a
+    different relative order (the fused path breaks such ties by
+    concatenation slot where the legacy path grouped by id first) — both
+    satisfy the sorted-row invariant, and distances on real-valued data
+    make cross-id ties measure-zero. Graph-level parity is pinned by
+    ``tests/test_sampling_mergesort.py``.
+    """
+    assert a.n == b.n, f"vertex sets differ: {a.n} vs {b.n}"
+    k = k or max(a.k, b.k)
+    a_ids, a_dists, a_flags = a.ids, a.dists, a.flags
+    if a.k < k:                        # widen the row side to the output k
+        pad = ((0, 0), (0, k - a.k))
+        a_ids = jnp.pad(a_ids, pad, constant_values=INVALID_ID)
+        a_dists = jnp.pad(a_dists, pad, constant_values=jnp.inf)
+        a_flags = jnp.pad(a_flags, pad)
+    ids_f, dists_f = kops.topk_merge(a_ids, a_dists, b.ids, b.dists)
+    ids_f, dists_f = ids_f[:, :k], dists_f[:, :k]
+    # flags by membership: a survivor present in a IS a's slot (duplicate
+    # suppression keeps the row side), so it carries a's flag; otherwise it
+    # came from b and carries b's flag. Invalid slots match neither side.
+    in_a = (ids_f[:, :, None] == a_ids[:, None, :]) & (
+        a_ids[:, None, :] != INVALID_ID)
+    was_a = jnp.any(in_a, axis=2)
+    flag_a = jnp.any(in_a & a_flags[:, None, :], axis=2)
+    in_b = (ids_f[:, :, None] == b.ids[:, None, :]) & (
+        b.ids[:, None, :] != INVALID_ID)
+    flag_b = jnp.any(in_b & b.flags[:, None, :], axis=2)
+    return KnnGraph(ids=ids_f, dists=dists_f,
+                    flags=jnp.where(was_a, flag_a, flag_b))
+
+
+def merge_graphs_sortdedupe(a: KnnGraph, b: KnnGraph,
+                            k: int | None = None) -> KnnGraph:
+    """The seed's full ``sort_rows_dedupe`` merge (parity ground truth).
+
+    Same contract as :func:`merge_graphs`; kept as the legacy baseline for
+    the equivalence test and the ``bench_merge`` per-round arm — not used
+    by the build pipeline.
     """
     assert a.n == b.n, f"vertex sets differ: {a.n} vs {b.n}"
     k = k or max(a.k, b.k)
@@ -70,6 +125,5 @@ def make_sof(sizes: Sequence[int]) -> jax.Array:
 
 def subset_starts(sizes: Sequence[int]) -> jax.Array:
     """Exclusive-prefix-sum start offsets, one per subset."""
-    import numpy as np
     return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)[:-1]]),
                        dtype=jnp.int32)

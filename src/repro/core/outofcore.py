@@ -4,20 +4,34 @@
 whose size fits into the memory capacity … other subgraphs and their vectors
 are kept in the external storage; two subgraphs are swapped in per round."
 
-Realized as a spool directory of npy blocks + an atomically-updated JSON
+Realized as a spool directory of npz blocks + an atomically-updated JSON
 manifest. Only two subsets are ever resident. Every completed unit of work
 (one subgraph build / one pair merge) is durable before the next starts, so
 a killed build resumes exactly where it stopped — this is the framework's
 fault-tolerance story for graph construction, at any scale: the distributed
 build checkpoints the same manifest at round granularity.
+
+Overlapped data plane (``overlap=True``, the default): the pair order is
+known upfront, so a prefetch thread double-buffers the NEXT pair's npz
+blocks + host→device transfers while the device merges the current pair,
+and the ``full{a}`` puts become write-behind on a dedicated writer thread.
+The manifest entry for a pair is queued BEHIND its two puts on the same
+FIFO writer, so it only advances after both writes land — a crash leaves
+the manifest at-or-behind the spool and the re-merged pairs are idempotent
+(``merge_graphs`` duplicate suppression), keeping resume bit-identical
+(pinned by tests/test_outofcore.py). Round-time model: DESIGN.md §4.1.
 """
 
 from __future__ import annotations
 
+import copy
 import json
 import os
+import queue
 import tempfile
-from typing import Sequence
+import threading
+import time
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,24 +45,72 @@ from repro.core.sampling import support_graph
 
 
 class Spool:
-    """External-storage subset spool: npy blocks + atomic JSON manifest."""
+    """External-storage subset spool: npz blocks + atomic JSON manifest.
 
-    def __init__(self, root: str):
+    ``compress`` stores blocks zlib-compressed (``np.savez_compressed``) —
+    the footprint knob for datasets whose spool would not fit raw; the
+    codec cost lands on whichever thread does the I/O, so the overlapped
+    build hides it. ``fsync`` flushes file contents to stable storage
+    before the atomic rename — the durable mode (an os.replace alone is
+    atomic w.r.t. readers but not power-loss-durable).
+
+    ``bandwidth_mbps`` models the external-storage medium: every put/get
+    is paced so the transfer takes at least ``bytes / bandwidth`` wall
+    seconds (the remainder is slept — latency without CPU, like a NAS or
+    spinning disk behind a fast page cache). Benchmarks use it to measure
+    the overlap win on the media the out-of-core path actually targets; a
+    dev-container spool directory sits in RAM-speed page cache, which no
+    billion-scale external store does. ``None`` (default) disables pacing.
+    """
+
+    def __init__(self, root: str, *, compress: bool = False,
+                 fsync: bool = False, bandwidth_mbps: float | None = None):
         self.root = root
+        self.compress = compress
+        self.fsync = fsync
+        self.bandwidth_mbps = bandwidth_mbps
         os.makedirs(root, exist_ok=True)
 
     def _p(self, name: str) -> str:
         return os.path.join(self.root, name)
 
+    def _pace(self, nbytes: int, t_start: float) -> None:
+        if self.bandwidth_mbps:
+            floor = nbytes / (self.bandwidth_mbps * 1e6)
+            remain = floor - (time.time() - t_start)
+            if remain > 0:
+                time.sleep(remain)
+
+    def _fsync_dir(self) -> None:
+        """Make a just-published rename itself durable (and ordered w.r.t.
+        later renames): fsync the directory entry, not just file contents."""
+        fd = os.open(self.root, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
     def put(self, name: str, **arrays) -> None:
+        t0 = time.time()
+        hosted = {k: np.asarray(v) for k, v in arrays.items()}
         tmp = self._p(name + ".tmp.npz")
+        save = np.savez_compressed if self.compress else np.savez
         with open(tmp, "wb") as f:
-            np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+            save(f, **hosted)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
         os.replace(tmp, self._p(name + ".npz"))     # atomic publish
+        if self.fsync:
+            self._fsync_dir()
+        self._pace(sum(a.nbytes for a in hosted.values()), t0)
 
     def get(self, name: str) -> dict:
+        t0 = time.time()
         with np.load(self._p(name + ".npz")) as z:
-            return {k: z[k] for k in z.files}
+            out = {k: z[k] for k in z.files}
+        self._pace(sum(a.nbytes for a in out.values()), t0)
+        return out
 
     def has(self, name: str) -> bool:
         return os.path.exists(self._p(name + ".npz"))
@@ -64,23 +126,192 @@ class Spool:
         fd, tmp = tempfile.mkstemp(dir=self.root)
         with os.fdopen(fd, "w") as f:
             json.dump(man, f)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
         os.replace(tmp, self._p("manifest.json"))
+        if self.fsync:
+            self._fsync_dir()   # manifest rename durable AFTER block renames
+
+
+class _WriteBehind:
+    """Ordered write-behind lane: one worker, FIFO, fail-stop.
+
+    Tasks run in submission order, so a pair's manifest update queued after
+    its two ``full{a}`` puts cannot land before them (the crash-resume
+    ordering invariant). The first task failure latches: later tasks are
+    skipped and :meth:`flush`/:meth:`wait` re-raise, so a failed put can
+    never be papered over by a successful manifest write behind it.
+    """
+
+    def __init__(self):
+        self._q: queue.Queue = queue.Queue()
+        self._err: BaseException | None = None
+        self._inflight: dict[str, threading.Event] = {}
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, done = item
+            if self._err is None:
+                try:
+                    fn()
+                except BaseException as e:      # noqa: BLE001 — latched
+                    self._err = e
+            done.set()
+
+    def submit(self, fn: Callable[[], None], name: str | None = None):
+        done = threading.Event()
+        if name is not None:
+            self._inflight[name] = done
+        self._q.put((fn, done))
+        return done
+
+    def wait(self, name: str) -> float:
+        """Block until the last write of ``name`` lands; returns wait secs."""
+        if self._err is not None:       # fail-stop: surface a latched
+            raise self._err             # failure on the first wait
+        done = self._inflight.get(name)
+        if done is None:
+            return 0.0
+        t0 = time.time()
+        done.wait()
+        if self._err is not None:
+            raise self._err
+        return time.time() - t0
+
+    def flush(self) -> float:
+        """Drain the queue; re-raise any latched failure. Returns wait secs."""
+        t0 = time.time()
+        barrier = self.submit(lambda: None)
+        barrier.wait()
+        if self._err is not None:
+            raise self._err
+        return time.time() - t0
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+
+
+class _Prefetcher:
+    """Bounded look-ahead loader: ≤ ``depth`` loaded bundles on one thread.
+
+    ``jobs`` are thunks returning a loaded bundle (npz reads + host→device
+    transfers — jax dispatch is thread-safe); results come back in order.
+    The producer takes a permit BEFORE running a job and the consumer
+    returns it on take, so loaded-but-unconsumed bundles (queued or just
+    materialized) never exceed ``depth`` — the residency bound
+    ``prefetch_depth`` promises. ``close()`` cancels outstanding jobs: the
+    producer re-checks the stop flag after every permit, so at most the
+    one in-flight load finishes before the thread exits.
+    """
+
+    def __init__(self, jobs: Sequence[Callable[[], object]], depth: int):
+        self._jobs = list(jobs)
+        self._permits = threading.Semaphore(max(1, depth))
+        self._results: queue.Queue = queue.Queue()
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        for job in self._jobs:
+            self._permits.acquire()             # bounds resident look-ahead
+            if self._stop:
+                return
+            try:
+                self._results.put((job(), None))
+            except BaseException as e:          # noqa: BLE001 — forwarded
+                self._results.put((None, e))
+                return
+
+    def next(self):
+        """(bundle, seconds blocked waiting for it)."""
+        t0 = time.time()
+        bundle, err = self._results.get()
+        self._permits.release()
+        if err is not None:
+            raise err
+        return bundle, time.time() - t0
+
+    def close(self):
+        self._stop = True
+        self._permits.release()     # unblock a producer parked on a permit
+        while self._thread.is_alive():
+            try:                    # drain so a put never wedges the join
+                self._results.get_nowait()
+                self._permits.release()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+
+
+def _load_full(spool: Spool, a: int, start_a: int) -> KnnGraph:
+    """Current durable full-graph rows of subset ``a`` (global ids)."""
+    if spool.has(f"full{a}"):
+        blk = spool.get(f"full{a}")
+        return KnnGraph(ids=jnp.asarray(blk["ids"]),
+                        dists=jnp.asarray(blk["dists"]),
+                        flags=jnp.zeros_like(jnp.asarray(blk["ids"]), bool))
+    ga = spool.get(f"g{a}")
+    return KnnGraph(
+        ids=jnp.where(jnp.asarray(ga["ids"]) == INVALID_ID, INVALID_ID,
+                      jnp.asarray(ga["ids"]) + int(start_a)),
+        dists=jnp.asarray(ga["dists"]),
+        flags=jnp.zeros_like(jnp.asarray(ga["ids"]), bool))
+
+
+def pair_schedule(m: int) -> list[tuple[int, int]]:
+    """Alg. 3's node-major pair order with duplicates removed.
+
+    Every unordered pair once, in the order the round loop visits them —
+    the out-of-core schedule AND the prefetcher's look-ahead order.
+    """
+    pairs = [(i, (i - r) % m) for r in range(1, m // 2 + 1) for i in range(m)]
+    seen, uniq = set(), []
+    for i, j in pairs:
+        if i == j:
+            continue
+        key_ij = (min(i, j), max(i, j))
+        if key_ij in seen:
+            continue
+        seen.add(key_ij)
+        uniq.append((i, j))
+    return uniq
 
 
 def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                       sizes: Sequence[int], *, k: int, lam: int,
                       inner_iters: int = 8, nnd_iters: int = 20,
                       metric: str = "l2", fused: bool = True,
+                      overlap: bool = True, prefetch_depth: int = 2,
+                      spool_vectors: bool = False,
                       phase_times: dict | None = None) -> KnnGraph:
     """Full out-of-core build: subset NN-Descent + all-pairs Two-way Merge.
 
     ``data`` may be a numpy memmap — it is sliced per subset and only two
-    subsets are device-resident at a time. Restartable via the manifest.
+    subsets are device-resident at a time (plus ``prefetch_depth`` pairs of
+    look-ahead buffers when overlapped). Restartable via the manifest.
+    ``overlap`` runs the spool reads / host→device transfers of the next
+    pair and the ``full{a}`` write-backs on background threads while the
+    device merges the current pair; ``overlap=False`` is the strictly
+    serial data plane (bit-identical result — pinned by tests).
+    ``spool_vectors`` is the paper's full external-storage layout ("other
+    subgraphs AND THEIR VECTORS are kept in the external storage"): stage 1
+    writes each subset's vector block ``v{i}`` next to its subgraph, and
+    stage 2 reads pair vectors from the spool instead of slicing ``data`` —
+    the mode for datasets whose vectors are not addressable as one array
+    during the merge stage.
     ``phase_times``, when passed, receives wall seconds per stage
-    (``"subgraphs_s"`` / ``"merge_s"``; near-zero for resumed stages).
+    (``"subgraphs_s"`` / ``"merge_s"``; near-zero for resumed stages) plus
+    the merge-stage split ``"merge_io_s"`` (host blocked on spool I/O or
+    transfers) and ``"merge_compute_s"`` (the remainder).
     """
-    import time
-
     m = len(sizes)
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(int)
     man = spool.manifest()
@@ -88,81 +319,118 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
 
     # ---- stage 1: per-subset subgraphs, one at a time ------------------
     for i in range(m):
-        if i in man["subgraphs_done"] and spool.has(f"g{i}"):
+        if (i in man["subgraphs_done"] and spool.has(f"g{i}")
+                and (not spool_vectors or spool.has(f"v{i}"))):
             continue
         sub = jnp.asarray(data[starts[i]:starts[i] + sizes[i]])
         g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
                           max_iters=nnd_iters, metric=metric, fused=fused)
         s_ids = support_graph(g, lam)
         spool.put(f"g{i}", ids=g.ids, dists=g.dists, s=s_ids)
+        if spool_vectors:
+            spool.put(f"v{i}", v=sub)
         man["subgraphs_done"] = sorted(set(man["subgraphs_done"]) | {i})
         spool.write_manifest(man)
 
     if phase_times is not None:
         phase_times["subgraphs_s"] = time.time() - t0
     t0 = time.time()
+    io_s = 0.0
 
     # ---- stage 2: pairwise merges, two subsets resident ----------------
     # Follows Alg. 3's pair order (node-major); each pair durable on finish.
-    pairs = [(i, (i - r) % m) for r in range(1, m // 2 + 1) for i in range(m)]
-    pairs = [(i, j) for i, j in pairs if i != j]
-    seen, uniq = set(), []
-    for i, j in pairs:
-        key_ij = (min(i, j), max(i, j))
-        if key_ij in seen:
-            continue
-        seen.add(key_ij)
-        uniq.append((i, j))
-    for i, j in uniq:
-        tag = f"{i}-{j}"
-        if tag in man["pairs_done"]:
-            continue
+    todo = [(i, j) for i, j in pair_schedule(m)
+            if f"{i}-{j}" not in man["pairs_done"]]
+
+    def load_pair(i: int, j: int):
+        """Spool reads + h2d for one pair: the prefetchable inputs."""
         bi, bj = spool.get(f"g{i}"), spool.get(f"g{j}")
         ni, nj = int(sizes[i]), int(sizes[j])
-        seg = jnp.concatenate(
-            [jnp.asarray(data[starts[i]:starts[i] + ni]),
-             jnp.asarray(data[starts[j]:starts[j] + nj])])
+        if spool_vectors:
+            va, vb = spool.get(f"v{i}")["v"], spool.get(f"v{j}")["v"]
+        else:
+            va = data[starts[i]:starts[i] + ni]
+            vb = data[starts[j]:starts[j] + nj]
+        # one host concat + one transfer (not two transfers + device concat)
+        seg = jnp.asarray(np.concatenate([va, vb]))
         s_pair = jnp.concatenate(
             [jnp.asarray(bi["s"]),
              jnp.where(jnp.asarray(bj["s"]) == INVALID_ID, INVALID_ID,
                        jnp.asarray(bj["s"]) + ni)])
-        kk = jax.random.fold_in(jax.random.fold_in(key, 101 + i), j)
-        g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
-                                     iters=inner_iters, metric=metric,
-                                     fused=fused)
-        # merge halves into the durable per-subset FULL graphs
-        for (a, sl, base_other, na) in ((i, slice(0, ni), starts[j], ni),
-                                        (j, slice(ni, None), starts[i], nj)):
-            blk = spool.get(f"full{a}") if spool.has(f"full{a}") else None
-            if blk is None:
-                ga = spool.get(f"g{a}")
-                full = KnnGraph(
-                    ids=jnp.where(jnp.asarray(ga["ids"]) == INVALID_ID,
-                                  INVALID_ID,
-                                  jnp.asarray(ga["ids"]) + int(starts[a])),
-                    dists=jnp.asarray(ga["dists"]),
-                    flags=jnp.zeros_like(jnp.asarray(ga["ids"]), bool))
+        return seg, s_pair, ni, nj
+
+    writer = _WriteBehind() if overlap else None
+    prefetch = _Prefetcher(
+        [lambda i=i, j=j: load_pair(i, j) for i, j in todo],
+        prefetch_depth) if overlap else None
+    try:
+        for i, j in todo:
+            tag = f"{i}-{j}"
+            if overlap:
+                (seg, s_pair, ni, nj), waited = prefetch.next()
+                io_s += waited
             else:
-                full = KnnGraph(ids=jnp.asarray(blk["ids"]),
-                                dists=jnp.asarray(blk["dists"]),
-                                flags=jnp.zeros_like(
-                                    jnp.asarray(blk["ids"]), bool))
-            ids_half = g_cross.ids[sl]
-            off = -ni + int(base_other) if a == i else int(base_other)
-            half = KnnGraph(
-                ids=jnp.where(ids_half == INVALID_ID, INVALID_ID,
-                              ids_half + off),
-                dists=g_cross.dists[sl],
-                flags=jnp.zeros_like(ids_half, bool))
-            full = merge_graphs(full, half)
-            spool.put(f"full{a}", ids=full.ids, dists=full.dists)
-        man["pairs_done"].append(tag)
-        spool.write_manifest(man)
+                t_io = time.time()
+                seg, s_pair, ni, nj = load_pair(i, j)
+                io_s += time.time() - t_io
+            kk = jax.random.fold_in(jax.random.fold_in(key, 101 + i), j)
+            g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
+                                         iters=inner_iters, metric=metric,
+                                         fused=fused)
+            # merge halves into the durable per-subset FULL graphs
+            for (a, sl, base_other, na) in ((i, slice(0, ni), starts[j], ni),
+                                            (j, slice(ni, None), starts[i],
+                                             nj)):
+                t_io = time.time()
+                if overlap:
+                    # read-your-writes: an in-flight full{a} put from an
+                    # earlier pair must land before this read
+                    writer.wait(f"full{a}")
+                full = _load_full(spool, a, int(starts[a]))
+                io_s += time.time() - t_io
+                ids_half = g_cross.ids[sl]
+                off = -ni + int(base_other) if a == i else int(base_other)
+                half = KnnGraph(
+                    ids=jnp.where(ids_half == INVALID_ID, INVALID_ID,
+                                  ids_half + off),
+                    dists=g_cross.dists[sl],
+                    flags=jnp.zeros_like(ids_half, bool))
+                full = merge_graphs(full, half)
+                if overlap:
+                    writer.submit(
+                        lambda a=a, ids=full.ids, dists=full.dists:
+                        spool.put(f"full{a}", ids=ids, dists=dists),
+                        name=f"full{a}")
+                else:
+                    full.ids.block_until_ready()   # charge compute as compute
+                    t_io = time.time()
+                    spool.put(f"full{a}", ids=full.ids, dists=full.dists)
+                    io_s += time.time() - t_io
+            man["pairs_done"].append(tag)
+            if overlap:
+                # queued BEHIND this pair's two puts on the same FIFO lane:
+                # the manifest can only advance after both writes landed
+                writer.submit(
+                    lambda snap=copy.deepcopy(man): spool.write_manifest(snap))
+            else:
+                t_io = time.time()
+                spool.write_manifest(man)
+                io_s += time.time() - t_io
+        if overlap:
+            io_s += writer.flush()
+    finally:
+        if overlap:
+            writer.close()
+            prefetch.close()
 
     if phase_times is not None:
-        phase_times["merge_s"] = time.time() - t0
-    ids = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["ids"])
-                           for i in range(m)])
-    dists = jnp.concatenate([jnp.asarray(spool.get(f"full{i}")["dists"])
-                             for i in range(m)])
+        merge_s = time.time() - t0
+        phase_times["merge_s"] = merge_s
+        phase_times["merge_io_s"] = io_s
+        phase_times["merge_compute_s"] = max(0.0, merge_s - io_s)
+    # _load_full falls back to the re-based subgraph when a subset was
+    # never pair-merged (the degenerate m=1 build has no pairs at all)
+    fulls = [_load_full(spool, i, int(starts[i])) for i in range(m)]
+    ids = jnp.concatenate([f.ids for f in fulls])
+    dists = jnp.concatenate([f.dists for f in fulls])
     return KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))

@@ -148,8 +148,11 @@ def topk_merge_pallas(row_ids, row_dists, cand_ids, cand_dists, *,
     the *closest* copy only when the block is ascending. Callers with
     duplicate candidate ids (merge_rows via cap_scatter) pass sorted
     blocks; callers with distinct candidates (beam_search) may pass
-    unsorted ones. Any reimplementation as a true sorted-merge network
-    must keep an unsorted-candidate path or update those callers.
+    unsorted ones; ``mergesort.merge_graphs`` passes a whole graph's rows
+    as the candidate block (c == k width, ascending by row invariant) —
+    the graph⊕graph MergeSort of Alg. 3 rides the same W = k + c rank
+    sort. Any reimplementation as a true sorted-merge network must keep
+    an unsorted-candidate path or update those callers.
 
     interpret=True bypasses jit (eager interpreter; see pairdist)."""
     if interpret:

@@ -1,0 +1,40 @@
+"""Benchmark scaffolding: BENCH_*.json writes must be atomic.
+
+Same discipline as the spool manifest — an interrupted benchmark must
+never leave a truncated JSON (CI uploads these files as artifacts).
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from common import write_json  # noqa: E402
+
+
+def test_write_json_roundtrip(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    write_json(p, {"a": 1, "nested": {"b": [1, 2]}})
+    assert json.loads(p.read_text()) == {"a": 1, "nested": {"b": [1, 2]}}
+    # overwrite is atomic too (replace, not truncate-then-write)
+    write_json(p, {"a": 2})
+    assert json.loads(p.read_text()) == {"a": 2}
+
+
+def test_write_json_failure_leaves_no_partial_file(tmp_path):
+    p = tmp_path / "BENCH_y.json"
+    with pytest.raises(TypeError):
+        write_json(p, {"bad": object()})      # not JSON-serializable
+    assert not p.exists(), "failed write must not publish the target"
+    assert list(tmp_path.iterdir()) == [], "no tmp litter on failure"
+
+
+def test_write_json_failure_preserves_previous_contents(tmp_path):
+    p = tmp_path / "BENCH_z.json"
+    write_json(p, {"good": True})
+    with pytest.raises(TypeError):
+        write_json(p, {"bad": object()})
+    assert json.loads(p.read_text()) == {"good": True}

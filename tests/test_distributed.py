@@ -2,9 +2,11 @@
 
 Property: the shard_map ppermute implementation produces EXACTLY (id-level)
 the graph of the schedule-free single-device reference (every unordered
-pair merged once, merge-sorted), and recall parity holds. Runs in a
-subprocess because the main test process must keep the default single
-device.
+pair merged once, merge-sorted), recall parity holds, and the
+double-buffered collective schedule (``overlap=True``, the default) is
+bit-identical to the strictly serial one — the pairing schedule is the
+same; only instruction order differs. Runs in a subprocess because the
+main test process must keep the default single device.
 """
 
 import os
@@ -32,13 +34,22 @@ data = sift_like(jax.random.key(0), n, d)
 sizes = (n_loc,) * m
 subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam, max_iters=12)
 mesh = make_nodes_mesh(m)
+g_ids = jnp.concatenate([s.ids for s in subs])
+g_dists = jnp.concatenate([s.dists for s in subs])
 ids, dists = build_distributed(
-    mesh, data, jnp.concatenate([s.ids for s in subs]),
-    jnp.concatenate([s.dists for s in subs]), jax.random.key(5),
-    k=k, lam=lam, inner_iters=5)
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    k=k, lam=lam, inner_iters=5)                     # overlap=True default
 ref = reference_pairwise(jax.random.key(5), data, sizes, subs, k=k, lam=lam,
                          inner_iters=5)
 assert bool(jnp.all(ref.ids == ids)), "schedule mismatch vs reference"
+# overlapped (double-buffered collectives) vs strictly serial: bit-identical
+ids_ser, dists_ser = build_distributed(
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    k=k, lam=lam, inner_iters=5, overlap=False)
+assert bool(jnp.all(ids == ids_ser)), "overlap changed the schedule"
+assert bool(jnp.all(jnp.where(jnp.isinf(dists), 0, dists)
+                    == jnp.where(jnp.isinf(dists_ser), 0, dists_ser))), \
+    "overlap changed distances"
 gt = knn_bruteforce(data, k)
 g = KnnGraph(ids=ids, dists=dists, flags=jnp.zeros_like(ids, bool))
 r = float(recall(g, gt.ids, 10))

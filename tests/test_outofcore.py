@@ -8,6 +8,98 @@ from repro.core.graph import recall
 from repro.core.outofcore import Spool, build_out_of_core
 
 
+def assert_bit_identical(a, b):
+    assert bool(jnp.all(a.ids == b.ids)), "neighbor ids differ"
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(jnp.isinf(a.dists), 0.0, a.dists)),
+        np.asarray(jnp.where(jnp.isinf(b.dists), 0.0, b.dists)))
+
+
+BUILD_KW = dict(k=10, lam=6, inner_iters=4, nnd_iters=8)
+
+
+class CrashSpool(Spool):
+    """Raises a simulated kill AFTER the ``crash_after``-th ``full*`` put —
+    landing exactly in the window between a pair's two puts when
+    ``crash_after`` is odd."""
+
+    def __init__(self, root, crash_after: int):
+        super().__init__(root)
+        self.crash_after = crash_after
+        self.full_puts = 0
+
+    def put(self, name, **arrays):
+        super().put(name, **arrays)
+        if name.startswith("full"):
+            self.full_puts += 1
+            if self.full_puts == self.crash_after:
+                raise KeyboardInterrupt("simulated kill between puts")
+
+
+def test_crash_between_puts_resumes_bit_identical(tmp_path, small_data):
+    """Kill in the window between a pair's two ``full{a}`` puts and its
+    manifest update: the resumed build re-merges that pair onto the
+    already-updated half — merge idempotence makes the result bit-identical
+    to the uninterrupted build (this pins the crash-window semantics)."""
+    m, n_loc = 3, 120
+    data = np.asarray(small_data[:m * n_loc])
+    sizes = (n_loc,) * m
+    key = jax.random.key(3)
+    ref = build_out_of_core(key, Spool(str(tmp_path / "ref")), data, sizes,
+                            overlap=False, **BUILD_KW)
+    # 3 subsets → 3 pairs → 6 full puts; crash after put 3 = mid-pair 2
+    crashy = CrashSpool(str(tmp_path / "crash"), crash_after=3)
+    with pytest.raises(KeyboardInterrupt):
+        build_out_of_core(key, crashy, data, sizes, overlap=False, **BUILD_KW)
+    man = crashy.manifest()
+    assert len(man["pairs_done"]) == 1      # pair 2's manifest never advanced
+    resumed = build_out_of_core(key, Spool(str(tmp_path / "crash")), data,
+                                sizes, overlap=False, **BUILD_KW)
+    assert_bit_identical(resumed, ref)
+
+
+def test_overlap_bit_identical_to_serial(tmp_path, small_data):
+    """Overlapped data plane (prefetch + write-behind) on a 3-subset spool
+    is bit-identical to the strictly serial path."""
+    m, n_loc = 3, 120
+    data = np.asarray(small_data[:m * n_loc])
+    sizes = (n_loc,) * m
+    key = jax.random.key(4)
+    pt = {}
+    serial = build_out_of_core(key, Spool(str(tmp_path / "ser")), data, sizes,
+                               overlap=False, phase_times=pt, **BUILD_KW)
+    for kk in ("merge_s", "merge_io_s", "merge_compute_s"):
+        assert pt[kk] >= 0.0
+    for depth, compress in ((1, False), (2, True)):
+        sp = Spool(str(tmp_path / f"ovl{depth}"), compress=compress)
+        overlapped = build_out_of_core(key, sp, data, sizes, overlap=True,
+                                       prefetch_depth=depth, **BUILD_KW)
+        assert_bit_identical(overlapped, serial)
+
+
+def test_single_subset_degenerates_to_subgraph(tmp_path, small_data):
+    """m=1 has no pairs: the build must return the (re-based) subgraph
+    instead of crashing on a never-written full0 block."""
+    data = np.asarray(small_data[:200])
+    g = build_out_of_core(jax.random.key(6), Spool(str(tmp_path / "one")),
+                          data, (200,), **BUILD_KW)
+    assert g.ids.shape == (200, BUILD_KW["k"])
+    gt = knn_bruteforce(jnp.asarray(data), 10)
+    assert float(recall(g, gt.ids, 10)) > 0.8
+
+
+def test_write_behind_failure_is_not_swallowed(tmp_path, small_data):
+    """A failing write-behind put must fail the build (not advance the
+    manifest past it): the writer lane is fail-stop."""
+    m, n_loc = 2, 100
+    data = np.asarray(small_data[:m * n_loc])
+    crashy = CrashSpool(str(tmp_path / "wb"), crash_after=1)
+    with pytest.raises(KeyboardInterrupt):
+        build_out_of_core(jax.random.key(5), crashy, data, (n_loc,) * m,
+                          overlap=True, **BUILD_KW)
+    assert crashy.manifest()["pairs_done"] == []
+
+
 @pytest.mark.slow
 def test_out_of_core_build_and_resume(tmp_path, small_data):
     m, n_loc = 4, 150

@@ -2,9 +2,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import INVALID_ID, KnnGraph, empty_graph
+from repro.core.graph import (INVALID_ID, KnnGraph, check_invariants,
+                              empty_graph, random_graph)
 from repro.core.mergesort import (concat_subgraphs, make_sof, merge_graphs,
-                                  subset_starts)
+                                  merge_graphs_sortdedupe, subset_starts)
 from repro.core.sampling import (reverse_cap, sample_flagged,
                                  sample_random_other, sample_unflagged,
                                  support_graph)
@@ -57,6 +58,52 @@ def test_sample_random_other_stays_cross():
     s = np.asarray(s)
     assert np.all(s[:5] >= 5) and np.all(s[:5] < 12)
     assert np.all(s[5:] < 5)
+
+
+def test_merge_graphs_matches_sortdedupe(small_data):
+    """Fused merge (topk_merge + flag membership pass) vs the seed's full
+    sort_rows_dedupe sweep: identical ids, dists and flags — including the
+    prefer-a-on-duplicate flag semantics and k-widening/narrowing."""
+    key = jax.random.key(7)
+    data = small_data[:500]
+    for seed in range(4):
+        a = random_graph(jax.random.fold_in(key, seed), 500, 8, data)
+        b = random_graph(jax.random.fold_in(key, 50 + seed), 500, 8, data)
+        a = a._replace(flags=jax.random.bernoulli(
+            jax.random.fold_in(key, 100 + seed), 0.5, a.ids.shape) & a.valid)
+        b = b._replace(flags=jax.random.bernoulli(
+            jax.random.fold_in(key, 150 + seed), 0.5, b.ids.shape) & b.valid)
+        for k in (None, 6, 8, 12):
+            fused = merge_graphs(a, b, k=k)
+            legacy = merge_graphs_sortdedupe(a, b, k=k)
+            assert bool(jnp.all(fused.ids == legacy.ids)), (seed, k)
+            np.testing.assert_array_equal(
+                np.asarray(jnp.where(jnp.isinf(fused.dists), 0, fused.dists)),
+                np.asarray(jnp.where(jnp.isinf(legacy.dists), 0,
+                                     legacy.dists)))
+            assert bool(jnp.all(fused.flags == legacy.flags)), (seed, k)
+            check_invariants(fused)
+    # empty-row and duplicate-heavy edges
+    e = empty_graph(500, 8)
+    a = random_graph(key, 500, 8, data)
+    for x, y in ((e, a), (a, e), (a, a)):
+        fused, legacy = merge_graphs(x, y), merge_graphs_sortdedupe(x, y)
+        assert bool(jnp.all(fused.ids == legacy.ids))
+        assert bool(jnp.all(fused.flags == legacy.flags))
+
+
+def test_merge_graphs_prefers_a_flags_on_duplicates():
+    """Shared id with conflicting flags: a's slot and flag must win."""
+    ids = jnp.asarray([[1, 2, 3]], jnp.int32)
+    d = jnp.asarray([[.1, .2, .3]], jnp.float32)
+    a = KnnGraph(ids=ids, dists=d,
+                 flags=jnp.asarray([[True, False, True]]))
+    b = KnnGraph(ids=ids, dists=d,
+                 flags=jnp.asarray([[False, True, True]]))
+    for fn in (merge_graphs, merge_graphs_sortdedupe):
+        out = fn(a, b)
+        assert bool(jnp.all(out.ids == ids))
+        assert np.asarray(out.flags).tolist() == [[True, False, True]]
 
 
 def test_concat_and_merge(small_data):
