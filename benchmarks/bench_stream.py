@@ -1,0 +1,188 @@
+"""Streaming live-index bench: sustained upsert/delete/query mix.
+
+The workload the static benchmarks cannot express: a serving engine
+attached to a mutable :class:`repro.stream.LiveIndex`, driven by WAVES of
+mutations (a batch of upserts + a batch of deletes) with timed query
+blocks between them. Reported per wave:
+
+  * query QPS through the engine (generation adoption, validity-plane
+    masking and delta-merged graphs included in the timed path)
+  * recall@10 against brute force over the CURRENT live set — the truth
+    moves with the mutations, so this is recall-vs-live-truth, tracked
+    ACROSS compactions (the delta→base fold must not dent it)
+
+plus the end-state claims:
+
+  * ``final_recall_delta_vs_scratch`` — after the last wave (and a final
+    fold), live-index recall minus a from-scratch ``GraphBuilder`` build
+    over the same vectors, searched with identical parameters (the PR's
+    acceptance number; pinned ≤ 0.01 by tests/test_stream.py)
+  * upsert/delete throughput (vectors/s through the mutation path)
+  * compaction count + total fold seconds (the off-query-path cost)
+
+Emits ``name=value`` CSV rows plus ``BENCH_stream.json``. Run with
+``--toy`` in CI.
+
+    PYTHONPATH=src python benchmarks/bench_stream.py [--n 20000] [--toy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from common import Timer, emit, write_json  # noqa: E402
+
+from repro.api import BuildConfig, GraphBuilder  # noqa: E402
+from repro.core.bruteforce import knn_search_bruteforce  # noqa: E402
+from repro.core.search import beam_search  # noqa: E402
+from repro.data.vectors import clustered  # noqa: E402
+
+#: identical seeding for every compared arm (cf. bench_search)
+N_ENTRIES = 32
+
+
+def _recall_ext(ext_ids: np.ndarray, gt_ext: np.ndarray, k: int) -> float:
+    hit = (ext_ids[:, :, None] == gt_ext[:, None, :]) & (
+        ext_ids[:, :, None] >= 0)
+    return float(np.mean(np.sum(np.any(hit, axis=1), axis=1) / k))
+
+
+def _live_truth(snap, queries, k):
+    """Brute-force gt over the snapshot's live set, in EXTERNAL ids."""
+    slots = np.flatnonzero(snap.ext_ids >= 0)
+    live_data = np.asarray(snap.data)[slots]
+    gt_local, _ = knn_search_bruteforce(jnp.asarray(live_data), queries, k)
+    return live_data, snap.ext_ids[slots][np.asarray(gt_local)]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000,
+                    help="base corpus size (built before the waves)")
+    ap.add_argument("--d", type=int, default=24)
+    ap.add_argument("--k", type=int, default=16, help="graph degree")
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=64)
+    ap.add_argument("--nq", type=int, default=256)
+    ap.add_argument("--waves", type=int, default=6)
+    ap.add_argument("--wave-up", type=int, default=0,
+                    help="upserts per wave (0 = n // 40)")
+    ap.add_argument("--wave-del", type=int, default=0,
+                    help="deletes per wave (0 = n // 120)")
+    ap.add_argument("--delta-cap", type=int, default=0,
+                    help="delta plane capacity (0 = 2 × wave-up)")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="timed query blocks per wave")
+    ap.add_argument("--slots", type=int, default=128)
+    ap.add_argument("--toy", action="store_true",
+                    help="CI smoke: n=1500, nq=48, 3 waves, 1 rep")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args(argv)
+    if args.toy:
+        args.n, args.nq, args.waves, args.reps = 1500, 48, 3, 1
+    wave_up = args.wave_up or max(8, args.n // 40)
+    wave_del = args.wave_del or max(4, args.n // 120)
+    delta_cap = args.delta_cap or 2 * wave_up
+
+    data = clustered(jax.random.key(0), args.n, args.d,
+                     n_clusters=max(8, args.n // 2500), scale=0.8)
+    queries = clustered(jax.random.key(2), args.nq, args.d,
+                        n_clusters=max(8, args.n // 2500), scale=0.8)
+    fresh = np.asarray(clustered(jax.random.key(3), args.waves * wave_up,
+                                 args.d, n_clusters=max(8, args.n // 2500),
+                                 scale=0.8))
+    cfg = BuildConfig(strategy="streaming", k=args.k,
+                      n_subsets=2, delta_cap=delta_cap)
+    t0 = time.time()
+    res = GraphBuilder(cfg).build(data)
+    build_s = time.time() - t0
+    live = res.to_live()
+    eng = live.engine(k=args.topk, beam=args.beam, n_entries=N_ENTRIES,
+                      slots=min(args.slots, args.nq), record_stats=False)
+    eng.search(queries)                          # compile + warm
+
+    rng = np.random.default_rng(7)
+    results = {"n": args.n, "d": args.d, "k": args.k, "beam": args.beam,
+               "nq": args.nq, "waves": args.waves, "wave_up": wave_up,
+               "wave_del": wave_del, "delta_cap": delta_cap,
+               "build_s": round(build_s, 1),
+               "backend": jax.default_backend(), "wave_rows": []}
+    nxt = args.n
+    mut_s = 0.0
+    comp_s_before = 0.0
+    for wave in range(args.waves):
+        ids_new = np.arange(nxt, nxt + wave_up)
+        nxt += wave_up
+        comps0 = live.compactions
+        with Timer() as tm:
+            eng.upsert(ids_new, fresh[wave * wave_up:(wave + 1) * wave_up])
+            dead = rng.choice(sorted(live._slot_of.keys()), wave_del,
+                              replace=False)
+            eng.delete(dead)
+        mut_s += tm.s
+        with Timer() as tq:
+            for _ in range(args.reps):
+                ids, _, _ = eng.search(queries)
+        ext = eng.to_external(np.asarray(ids))
+        _, gt_ext = _live_truth(live.snapshot(), queries, args.topk)
+        row = {"wave": wave, "n_live": live.n_live,
+               "generation": live.generation,
+               "compactions": live.compactions,
+               "compacted_this_wave": live.compactions > comps0,
+               "qps": round(args.reps * args.nq / tq.s, 2),
+               "recall@10": round(_recall_ext(ext, gt_ext, args.topk), 4),
+               "mutation_s": round(tm.s, 4)}
+        results["wave_rows"].append(row)
+        emit({"bench": "stream", **row})
+
+    # end state: final fold, then live vs from-scratch on identical search
+    with Timer() as tc:
+        live.compact()
+    snap = live.snapshot()
+    live_data, gt_ext = _live_truth(snap, queries, args.topk)
+    ids_l, _ = live.search(queries, k=args.topk, beam=args.beam,
+                           n_entries=N_ENTRIES)
+    rec_live = _recall_ext(np.asarray(ids_l), gt_ext, args.topk)
+    scratch = GraphBuilder(cfg).build(jnp.asarray(live_data)).to_index()
+    s_i, _, _ = beam_search(scratch.graph, scratch.data, queries, args.topk,
+                            beam=args.beam, n_entries=N_ENTRIES)
+    slots_live = np.flatnonzero(snap.ext_ids >= 0)
+    rec_scratch = _recall_ext(snap.ext_ids[slots_live][np.asarray(s_i)],
+                              gt_ext, args.topk)
+    n_mut = args.waves * (wave_up + wave_del)
+    results.update({
+        "compactions": live.compactions,
+        "final_fold_s": round(tc.s, 3),
+        "mutations_per_s": round(n_mut / mut_s, 2) if mut_s else 0.0,
+        "final_recall_live": round(rec_live, 4),
+        "final_recall_scratch": round(rec_scratch, 4),
+        "final_recall_delta_vs_scratch": round(rec_live - rec_scratch, 4),
+        "mean_qps": round(float(np.mean(
+            [r["qps"] for r in results["wave_rows"]])), 2),
+        "min_wave_recall": round(min(
+            r["recall@10"] for r in results["wave_rows"]), 4),
+    })
+    emit({"bench": "stream", "compactions": results["compactions"],
+          "mean_qps": results["mean_qps"],
+          "min_wave_recall": results["min_wave_recall"],
+          "final_recall_delta_vs_scratch":
+              results["final_recall_delta_vs_scratch"]})
+    write_json(args.out, results)
+
+
+def run(n: int = 1500, nq: int = 48, waves: int = 3):
+    """Entry point for ``benchmarks.run`` (CPU-scale defaults)."""
+    main(["--n", str(n), "--nq", str(nq), "--waves", str(waves),
+          "--reps", "1"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Run every benchmark (one per paper table/figure) and print CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--only name,name]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only name,name] [--list]
 
 fig5/6  λ sweep              fig7   subgraph→merged quality
 fig8    merge vs baselines   fig9   m-subgraph sweep
@@ -9,9 +9,12 @@ tab3    distributed (Alg.3)  roofline  kernel models + dry-run aggregation
 localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
 search     fused/compacted/visited engine arms vs seed scan loop (BENCH json)
 merge      overlapped vs serial spool data plane + fused merge_graphs (BENCH json)
+stream     sustained upsert/delete/query mix over the live index (BENCH json)
 
 ``--only`` selects a subset by name; an unknown name is a HARD error
 (exit 2) — a typo must never silently skip the benchmark it meant.
+``--list`` prints the registered benchmark names (one per line) and
+exits — the names ``--only`` accepts.
 """
 
 import sys
@@ -28,15 +31,17 @@ def main() -> None:
             raise SystemExit("--only needs a comma-separated name list")
         only = [s.strip() for s in argv[i + 1].split(",") if s.strip()]
     from benchmarks import (bench_localjoin, bench_merge, bench_search,
-                            fig5_fig6_lambda, fig7_subgraph_quality,
-                            fig8_merge_vs_baselines, fig9_multiway,
-                            fig10_index_search, fig12_build_time, roofline,
-                            tab3_distributed)
+                            bench_stream, fig5_fig6_lambda,
+                            fig7_subgraph_quality, fig8_merge_vs_baselines,
+                            fig9_multiway, fig10_index_search,
+                            fig12_build_time, roofline, tab3_distributed)
     jobs = [
         ("localjoin", lambda: bench_localjoin.run(n=1200 if fast else 2000)),
         ("search", lambda: bench_search.run(n=1200 if fast else 2000,
                                             nq=32 if fast else 64)),
         ("merge", lambda: bench_merge.run(n=1800 if fast else 3000)),
+        ("stream", lambda: bench_stream.run(n=1200 if fast else 1500,
+                                            nq=32 if fast else 48)),
         ("fig5/6", lambda: fig5_fig6_lambda.run(
             n=1200 if fast else 2000, lams=(2, 8) if fast else (2, 4, 8, 12))),
         ("fig7", lambda: fig7_subgraph_quality.run(n=1200 if fast else 2000)),
@@ -50,6 +55,10 @@ def main() -> None:
             n=960 if fast else 1920, ms=(2, 4) if fast else (2, 4, 8))),
         ("roofline", roofline.run),
     ]
+    if "--list" in argv:
+        for name, _ in jobs:
+            print(name)
+        return
     if only is not None:
         known = [name for name, _ in jobs]
         unknown = [o for o in only if o not in known]

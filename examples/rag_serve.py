@@ -6,7 +6,10 @@
 2. the k-NN index over those embeddings is built BY GRAPH MERGE — the
    paper's technique as the framework's retrieval feature,
 3. batched queries run through the serve engine: embed → beam-search the
-   index → return neighbors (the RAG retrieval path).
+   index → return neighbors (the RAG retrieval path),
+4. the index goes LIVE: a stale document is deleted, its revised text is
+   re-embedded and upserted under the same doc id, and the answer to the
+   same query updates — the streaming upsert/delete path end to end.
 """
 
 import time
@@ -49,3 +52,33 @@ print(f"served {qvecs.shape[0]} queries in {time.time()-t0:.2f}s  "
       f"recall@5={float(search_recall(ids, gt_ids, 5)):.3f}  "
       f"avg dist-evals/query={float(evals.mean()):.0f}")
 print("top-3 neighbors of query 0:", np.asarray(ids[0][:3]))
+
+# 4. live mutations: the corpus changes underneath the serving path.
+# Wrap the same index in a LiveIndex (doc id == corpus row id) and pick a
+# "stale" doc: the best match of query 0.
+live = index.live(delta_cap=64)
+q0 = qvecs[:1]
+stale = int(live.search(np.asarray(q0), k=1)[0][0, 0])
+print(f"\nquery 0 currently answers doc {stale}; marking it stale")
+
+# delete: the doc vanishes from results immediately (tombstone mask)
+live.delete([stale])
+after_del = live.search(np.asarray(q0), k=5)[0][0]
+assert stale not in after_del
+print(f"after delete: doc {stale} gone, top-3 now {after_del[:3]}")
+
+# revise the doc's tokens, re-embed, upsert under the SAME doc id —
+# search-then-link places the new embedding in the graph
+revised = corpus[stale // 32][stale % 32].copy()
+revised[:8] = queries_tok[0][0][:8]             # splice in the query topic
+new_vec = embed_corpus(model, params, [revised[None]])
+live.upsert([stale], np.asarray(new_vec))
+after_up, up_d = live.search(np.asarray(q0), k=5)
+print(f"after re-embed + upsert: top-3 {after_up[0][:3]} "
+      f"(doc {stale} {'back, revised' if stale in after_up[0] else 'ranked out'})")
+
+# the serving engine sees the same generations between batches
+eng = live.engine(k=5, beam=32, slots=16, record_stats=False)
+eng.search(qvecs)
+print(f"engine @ generation {eng.generation}: "
+      f"{live.n_live} live docs, {live.compactions} compactions")

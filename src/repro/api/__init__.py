@@ -5,9 +5,11 @@
   result = GraphBuilder(BuildConfig(strategy="twoway", k=16)).build(data)
   index  = result.to_index()      # diversified, search-ready KnnIndex
 
-Strategies: twoway | multiway | hierarchy | distributed | outofcore —
-see :mod:`repro.api.builder`. New backends land here as a sixth strategy,
-not as another hand-wired pipeline.
+Strategies: twoway | multiway | hierarchy | distributed | outofcore |
+streaming — see :mod:`repro.api.builder`. New backends land here as
+another strategy, not as another hand-wired pipeline. The streaming
+strategy's result goes live via ``result.to_live()`` (a mutable
+:class:`repro.stream.LiveIndex` with upsert / delete / compaction).
 """
 
 from repro.api.builder import GraphBuilder

@@ -11,6 +11,11 @@ and get the same :class:`BuildResult` back:
   ``hierarchy``   bottom-up pairwise Two-way Merge tree (Fig. 3(a))
   ``distributed`` Alg. 3 over a jax mesh (``ppermute`` exchange)
   ``outofcore``   Alg. 3 on one node, two subsets resident (Spool)
+  ``streaming``   flat merge (two-/multi-way by m) whose result is meant
+                  to go live: ``BuildResult.to_live()`` wraps it in the
+                  mutable ``repro.stream.LiveIndex`` (upsert / delete /
+                  compaction) with the config's ``delta_cap`` /
+                  ``compact_threshold``
   ==============  =====================================================
 
 ``repro.core.*`` stays the low-level kernel layer with unchanged
@@ -74,7 +79,8 @@ class GraphBuilder:
         root = key if key is not None else jax.random.key(cfg.seed)
         n = data.shape[0]
         sizes = cfg.partition_sizes(n)
-        if trace_fn is not None and cfg.strategy not in ("twoway", "multiway"):
+        if trace_fn is not None and cfg.strategy not in ("twoway", "multiway",
+                                                         "streaming"):
             raise ValueError(
                 f"trace_fn requires a host-side round loop; "
                 f"{cfg.strategy!r} does not have one")
@@ -108,6 +114,17 @@ class GraphBuilder:
 
     def _build_multiway(self, root, data, sizes, trace_fn):
         return self._build_flat(root, data, sizes, trace_fn, multi_way_merge)
+
+    def _build_streaming(self, root, data, sizes, trace_fn):
+        """The streaming strategy's BATCH phase: a plain flat merge build
+        (two-way for m ≤ 2, multi-way otherwise — same key folding, so
+        the graph is bit-identical to the equivalent static strategy).
+        The streaming part lives on the RESULT: ``to_live()`` diversifies
+        and wraps it in a ``LiveIndex`` sized by ``delta_cap`` /
+        ``compact_threshold``. Per the Build-API rule, this lands as a
+        strategy behind the facade, not a hand-wired pipeline."""
+        merge_fn = two_way_merge if len(sizes) <= 2 else multi_way_merge
+        return self._build_flat(root, data, sizes, trace_fn, merge_fn)
 
     def _build_flat(self, root, data, sizes, trace_fn, merge_fn):
         cfg = self.config

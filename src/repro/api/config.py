@@ -14,7 +14,8 @@ import dataclasses
 from repro.core.metrics import METRICS
 
 #: merge backends selectable via ``BuildConfig.strategy``
-STRATEGIES = ("twoway", "multiway", "hierarchy", "distributed", "outofcore")
+STRATEGIES = ("twoway", "multiway", "hierarchy", "distributed", "outofcore",
+              "streaming")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,12 @@ class BuildConfig:
       prefetch_depth: how many pairs of spool buffers the out-of-core
                       prefetcher may hold in flight (≥ 1; ignored unless
                       strategy="outofcore" and overlap is on).
+      delta_cap:      streaming: capacity of the live index's delta plane
+                      (how many upserted vectors fit before a compaction
+                      is forced; ``BuildResult.to_live``).
+      compact_threshold: streaming: fold the delta into the base once
+                      ``delta slots used + dead slots`` reaches this
+                      (default: ``delta_cap``, i.e. compact when full).
     """
 
     strategy: str = "twoway"
@@ -75,6 +82,8 @@ class BuildConfig:
     fused_localjoin: bool = True
     overlap: bool = True
     prefetch_depth: int = 2
+    delta_cap: int = 1024
+    compact_threshold: int | None = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -103,6 +112,11 @@ class BuildConfig:
                 f"{self.n_subsets}; use multiway or hierarchy for m > 2")
         if self.strategy == "outofcore" and not self.spool_dir:
             raise ValueError("outofcore requires spool_dir (external storage)")
+        if self.delta_cap < 0:
+            raise ValueError(f"delta_cap must be >= 0, got {self.delta_cap}")
+        if self.compact_threshold is not None and self.compact_threshold < 1:
+            raise ValueError(f"compact_threshold must be >= 1, got "
+                             f"{self.compact_threshold}")
 
     def partition_sizes(self, n: int) -> tuple[int, ...]:
         """Per-subset sizes for an ``n``-vector dataset.

@@ -75,6 +75,28 @@ class BuildResult:
                         data=jnp.asarray(self.data),
                         metric=self.config.metric)
 
+    def to_live(self, delta_cap: int | None = None,
+                compact_threshold: int | None = None,
+                alpha: float | None = None,
+                max_degree: int | None = None, **live_kw):
+        """``to_index()`` + the streaming wrapper: a mutable
+        :class:`repro.stream.LiveIndex` (upsert / delete / compaction /
+        generation snapshots) over the diversified graph. ``delta_cap``
+        and ``compact_threshold`` default to the build config's fields;
+        ``live_kw`` forwards to ``LiveIndex`` (k, ids, refine_iters, …).
+        """
+        from repro.stream.live import LiveIndex
+        cfg = self.config
+        return LiveIndex(
+            self.to_index(alpha, max_degree),
+            delta_cap=(delta_cap if delta_cap is not None
+                       else cfg.delta_cap),
+            compact_threshold=(compact_threshold
+                               if compact_threshold is not None
+                               else cfg.compact_threshold),
+            alpha=alpha if alpha is not None else cfg.alpha,
+            lam=cfg.lam, **live_kw)
+
     def to_engine(self, alpha: float | None = None,
                   max_degree: int | None = None, **engine_kw):
         """``to_index()`` + serving engine: build → serve in one call.

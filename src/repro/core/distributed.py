@@ -90,11 +90,14 @@ def pair_two_way_fixed(key: jax.Array, seg: jax.Array, n_left: int,
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "axis", "k", "lam", "inner_iters", "metric",
-                     "start_round", "fused", "overlap"))
+                     "start_round", "stop_round", "fused", "overlap"))
 def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
                       g_dists: jax.Array, key: jax.Array, *, axis: str = "nodes",
                       k: int, lam: int, inner_iters: int = 8,
                       metric: str = "l2", start_round: int = 1,
+                      stop_round: int | None = None,
+                      resume_ids: jax.Array | None = None,
+                      resume_dists: jax.Array | None = None,
                       fused: bool = True, overlap: bool = True):
     """Alg. 3 across the ``axis`` dimension of ``mesh``.
 
@@ -102,8 +105,19 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
     g_ids  : (n, k)  per-subset subgraphs, ids LOCAL to each subset
     g_dists: (n, k)
     Returns (ids, dists): the full k-NN graph rows (global neighbor ids),
-    sharded like the inputs. ``start_round`` > 1 resumes a checkpointed
-    build (the schedule is stateless given the round index).
+    sharded like the inputs.
+
+    Segmented execution (the round-level checkpoint hooks): the exchange
+    schedule is STATELESS given the round index — pairings are (i±r)%m,
+    the per-pair rng key is ``fold_in(fold_in(key, r), i)``, and S_i /
+    C_i are round-invariant — so the only state a round carries forward
+    is G_i itself. ``start_round``/``stop_round`` bound the rounds this
+    call executes and ``resume_ids``/``resume_dists`` seed G_i with rows
+    checkpointed after ``start_round - 1``; running rounds [1..a] then
+    [a+1..R] with the handoff through a checkpoint is bit-identical to
+    one [1..R] call (pinned by tests/test_distributed.py).
+    :func:`build_distributed_checkpointed` wires this to a durable
+    :class:`~repro.core.outofcore.Spool` manifest.
 
     ``overlap`` double-buffers the forward exchange (see module docstring):
     round r+1's (S_j, data_j) ppermutes are issued before round r's pair
@@ -113,19 +127,33 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
     """
     m = mesh.shape[axis]
     n_loc = data.shape[0] // m
+    if resume_ids is None:
+        # dummy operands keep shard_map's arity static; the resume flag is
+        # static, so the untaken branch compiles away
+        resume_ids = jnp.zeros((0, k), jnp.int32)
+        resume_dists = jnp.zeros((0, k), jnp.float32)
+        resuming = False
+    else:
+        resuming = True
 
-    def node_fn(data_i, gi_ids, gi_dists):
+    def node_fn(data_i, gi_ids, gi_dists, res_ids, res_dists):
         i = jax.lax.axis_index(axis)
         my_base = i * n_loc
         g_local = KnnGraph(ids=gi_ids, dists=gi_dists,
                            flags=jnp.zeros_like(gi_ids, dtype=bool))
         s_i = support_graph(g_local, lam)                    # (n_loc, 2λ) local
         # G_i in global ids from here on
-        g_i = KnnGraph(ids=jnp.where(gi_ids == INVALID_ID, INVALID_ID,
-                                     gi_ids + my_base),
-                       dists=gi_dists,
-                       flags=jnp.zeros_like(gi_ids, dtype=bool))
+        if resuming:
+            g_i = KnnGraph(ids=res_ids, dists=res_dists,
+                           flags=jnp.zeros_like(res_ids, dtype=bool))
+        else:
+            g_i = KnnGraph(ids=jnp.where(gi_ids == INVALID_ID, INVALID_ID,
+                                         gi_ids + my_base),
+                           dists=gi_dists,
+                           flags=jnp.zeros_like(gi_ids, dtype=bool))
         n_rounds = (m - 1 + 1) // 2                          # ⌈(m−1)/2⌉
+        if stop_round is not None:
+            n_rounds = min(n_rounds, stop_round)
 
         def exchange(r, anchor=None):
             """Forward collective of round ``r``: ship (S_i, C_i) to N_t.
@@ -180,10 +208,70 @@ def build_distributed(mesh, data: jax.Array, g_ids: jax.Array,
         return g_i.ids, g_i.dists
 
     spec = P(axis, None)
+    res_spec = spec if resuming else P(None, None)
     fn = shard_map(node_fn, mesh=mesh,
-                   in_specs=(P(axis, None), spec, spec),
+                   in_specs=(P(axis, None), spec, spec, res_spec, res_spec),
                    out_specs=(spec, spec))
-    return fn(data, g_ids, g_dists)
+    return fn(data, g_ids, g_dists, resume_ids, resume_dists)
+
+
+def build_distributed_checkpointed(mesh, data, g_ids, g_dists, key, *,
+                                   spool, axis: str = "nodes", k: int,
+                                   lam: int, inner_iters: int = 8,
+                                   metric: str = "l2", fused: bool = True,
+                                   overlap: bool = True, tag: str = "dist"):
+    """Round-level checkpointed Alg. 3: one :func:`build_distributed`
+    segment per exchange round, each round's G rows made durable before
+    the next round starts.
+
+    Same manifest discipline as the out-of-core build: the round's
+    ``{tag}_round{r}`` spool block is PUT before the manifest's
+    ``rounds_done`` entry is appended, so a crash leaves the manifest
+    at-or-behind the spool; on restart, completed rounds are skipped and
+    the first unfinished round re-runs from the last durable G — the
+    schedule is stateless given the round index (see
+    :func:`build_distributed`), so a killed-and-resumed build returns
+    bit-identical rows to an uninterrupted one (pinned by
+    tests/test_distributed.py).
+
+    ``spool`` is a :class:`repro.core.outofcore.Spool` (or anything with
+    its ``put``/``get``/``has``/``manifest``/``write_manifest`` surface).
+    Returns (ids, dists) like :func:`build_distributed`.
+    """
+    m = mesh.shape[axis]
+    n_rounds = (m - 1 + 1) // 2
+    if n_rounds == 0:                   # m = 1: no exchange, nothing durable
+        return build_distributed(mesh, data, g_ids, g_dists, key, axis=axis,
+                                 k=k, lam=lam, inner_iters=inner_iters,
+                                 metric=metric, fused=fused, overlap=overlap)
+    man = spool.manifest()
+    rounds_done = man.setdefault("rounds_done", [])
+    # the last DURABLE round: manifest entries are appended in order and
+    # only after the block landed, so the greatest contiguous prefix is
+    # trustworthy even if later blocks exist without manifest entries
+    last = 0
+    while last + 1 in rounds_done and spool.has(f"{tag}_round{last + 1}"):
+        last += 1
+    if last:
+        blk = spool.get(f"{tag}_round{last}")
+        ids = jnp.asarray(blk["ids"])
+        dists = jnp.asarray(blk["dists"])
+    else:
+        ids = dists = None
+    if last >= n_rounds and ids is not None:
+        return ids, dists
+    for r in range(last + 1, n_rounds + 1):
+        ids, dists = build_distributed(
+            mesh, data, g_ids, g_dists, key, axis=axis, k=k, lam=lam,
+            inner_iters=inner_iters, metric=metric, start_round=r,
+            stop_round=r, resume_ids=ids, resume_dists=dists, fused=fused,
+            overlap=overlap)
+        ids.block_until_ready()
+        spool.put(f"{tag}_round{r}", ids=ids, dists=dists)
+        if r not in rounds_done:
+            rounds_done.append(r)
+        spool.write_manifest(man)
+    return ids, dists
 
 
 def reference_pairwise(key: jax.Array, data, sizes: Sequence[int],

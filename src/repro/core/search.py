@@ -62,13 +62,24 @@ def _check_k_beam(k: int, beam: int):
 
 
 def _init_beam(g: KnnGraph, data: jax.Array, queries: jax.Array,
-               beam: int, metric: str, n_entries: int):
+               beam: int, metric: str, n_entries: int, tombstones=None,
+               seed_span=None):
     """Strided entry points — the flat-graph stand-in for HNSW's upper
     levels / Vamana's medoid (a bare k-NN graph on clustered data is
     disconnected across clusters, so single-entry greedy search cannot
     navigate between them; identical seeding for every compared graph
-    keeps the QPS-recall comparison fair)."""
-    n = data.shape[0]
+    keeps the QPS-recall comparison fair).
+
+    With a ``tombstones`` validity plane, dead entry seeds are masked to
+    (INVALID, +inf) here — the strided entries of a streaming index land
+    on deleted / never-allocated capacity slots, and a dead seed must not
+    pollute the beam (nor be recorded in the bloom plane). ``seed_span``
+    (static) strides the entries over ``[0, seed_span)`` instead of the
+    full array: a streaming index's arrays are padded to capacity, and
+    seeding over the dead tail would both waste seeds and shift the
+    stride away from the equivalent static index's — with the same span
+    the two seed identically."""
+    n = data.shape[0] if seed_span is None else min(seed_span, data.shape[0])
     nq = queries.shape[0]
     n_entries = min(n_entries, beam, n)
     entries = jnp.linspace(0, n - 1, n_entries).astype(jnp.int32)
@@ -77,6 +88,10 @@ def _init_beam(g: KnnGraph, data: jax.Array, queries: jax.Array,
         (nq, beam))
     d0 = jnp.full((nq, beam), jnp.inf).at[:, :n_entries].set(
         _metrics.dist_point(metric, queries[:, None, :], data[entries][None]))
+    if tombstones is not None:
+        dead = _kref.tomb_test(tombstones, ids0)
+        ids0 = jnp.where(dead, INVALID_ID, ids0)
+        d0 = jnp.where(dead, jnp.inf, d0)
     exp0 = jnp.zeros((nq, beam), bool)
     return ids0, d0, exp0
 
@@ -110,9 +125,10 @@ def _converged(ids: jax.Array, expanded: jax.Array) -> jax.Array:
 
 
 def _state_impl(g: KnnGraph, data, queries, beam, metric, n_entries,
-                visited_bits):
+                visited_bits, tombstones=None, seed_span=None):
     nq = queries.shape[0]
-    ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries)
+    ids0, d0, exp0 = _init_beam(g, data, queries, beam, metric, n_entries,
+                                tombstones, seed_span)
     # ``beam_expand`` requires rows ascending (its merge exploits the
     # invariant); entry seeds arrive in stride order, so sort them once.
     # Result-neutral vs the scan loop: its first merge performs the same
@@ -132,7 +148,7 @@ def _state_impl(g: KnnGraph, data, queries, beam, metric, n_entries,
 
 
 def _resume_impl(g: KnnGraph, data, queries, state, num_steps, max_steps,
-                 metric, expand):
+                 metric, expand, tombstones=None):
     kg = g.k
     nq, beam = state.ids.shape
     use_visited = state.visited.shape[1] > 0
@@ -170,11 +186,12 @@ def _resume_impl(g: KnnGraph, data, queries, state, num_steps, max_steps,
         if use_visited:
             ids, dists, expanded, ev, visited = kops.beam_expand(
                 queries, vecs, nbrs, ids, dists, expanded, metric=metric,
-                distinct_cands=expand == 1, visited=st.visited)
+                distinct_cands=expand == 1, visited=st.visited,
+                tombstones=tombstones)
         else:
             ids, dists, expanded, ev = kops.beam_expand(
                 queries, vecs, nbrs, ids, dists, expanded, metric=metric,
-                distinct_cands=expand == 1)
+                distinct_cands=expand == 1, tombstones=tombstones)
             visited = st.visited
         st = SearchState(ids, dists, expanded, st.evals + ev,
                          st.steps + act.astype(jnp.int32), visited)
@@ -185,22 +202,28 @@ def _resume_impl(g: KnnGraph, data, queries, state, num_steps, max_steps,
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
-                                              "visited_bits"))
+                                              "visited_bits", "seed_span"))
 def beam_search_state(g: KnnGraph, data: jax.Array, queries: jax.Array, *,
                       beam: int = 32, metric: str = "l2", n_entries: int = 8,
-                      visited_bits: int = 0) -> SearchState:
+                      visited_bits: int = 0,
+                      tombstones: jax.Array | None = None,
+                      seed_span: int | None = None) -> SearchState:
     """Initial :class:`SearchState` for each query (sorted entry beam,
     zero evals/steps, entry seeds inserted into the bloom plane when
-    ``visited_bits`` > 0)."""
+    ``visited_bits`` > 0). ``tombstones`` masks dead entry seeds to
+    (INVALID, +inf) before the sort, and ``seed_span`` (static) strides
+    the seeds over the LIVE prefix of a capacity-padded streaming index —
+    see ``_init_beam``."""
     return _state_impl(g, data, queries, beam, metric, n_entries,
-                       visited_bits)
+                       visited_bits, tombstones, seed_span)
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps", "max_steps",
                                               "metric", "expand"))
 def beam_search_resume(g: KnnGraph, data: jax.Array, queries: jax.Array,
                        state: SearchState, *, num_steps: int, max_steps: int,
-                       metric: str = "l2", expand: int = 1) -> SearchState:
+                       metric: str = "l2", expand: int = 1,
+                       tombstones: jax.Array | None = None) -> SearchState:
     """Advance every non-finished query by up to ``num_steps`` loop steps.
 
     ``max_steps`` is the PER-QUERY budget against ``state.steps`` (slots
@@ -209,9 +232,11 @@ def beam_search_resume(g: KnnGraph, data: jax.Array, queries: jax.Array,
     while-loop exits early once none remain, so resuming an all-finished
     batch costs no device steps. Chunked resumption is bit-identical to
     one monolithic run — pinned by tests/test_beam_expand.py.
+    ``tombstones`` threads the streaming validity plane into every fused
+    step (dead nodes masked pre-eval, never surfacing in the beam).
     """
     return _resume_impl(g, data, queries, state, num_steps, max_steps,
-                        metric, expand)
+                        metric, expand, tombstones)
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps",))
@@ -223,11 +248,13 @@ def beam_search_finished(state: SearchState, *, max_steps: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("beam", "max_steps", "metric",
                                               "k", "n_entries", "expand",
-                                              "visited_bits"))
+                                              "visited_bits", "seed_span"))
 def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
                 beam: int = 32, max_steps: int | None = None,
                 metric: str = "l2", n_entries: int = 8, expand: int = 1,
-                visited_bits: int = 0):
+                visited_bits: int = 0,
+                tombstones: jax.Array | None = None,
+                seed_span: int | None = None):
     """Search each query; returns (ids (q,k), dists (q,k), evals (q,)).
 
     ``beam`` is the ef/L parameter of HNSW/Vamana (must be >= k).
@@ -240,16 +267,24 @@ def beam_search(g: KnnGraph, data: jax.Array, queries: jax.Array, k: int,
     converged, with results and eval counts identical to running the
     full budget. ``visited_bits`` > 0 enables the bounded visited set
     (bloom plane; fewer evals at a false-positive-bounded recall cost —
-    see the module docstring).
+    see the module docstring). ``tombstones`` threads the streaming
+    validity plane (a shared (n_words,) uint32 bit plane over node ids):
+    dead nodes are masked before every distance evaluation — entry seeds
+    included — and can never appear in the returned ids; ``None``
+    (default) is bit-identical to the pre-plane behavior. ``seed_span``
+    (static) strides the entry seeds over ``[0, seed_span)`` — the
+    streaming index passes its live extent so a capacity-padded graph
+    seeds identically to its unpadded static equivalent.
     """
     _check_k_beam(k, beam)
     if not 1 <= expand <= beam:
         raise ValueError(f"expand must be in [1, beam], got {expand}")
     if max_steps is None:
         max_steps = default_max_steps(beam, expand)
-    st = _state_impl(g, data, queries, beam, metric, n_entries, visited_bits)
+    st = _state_impl(g, data, queries, beam, metric, n_entries, visited_bits,
+                     tombstones, seed_span)
     st = _resume_impl(g, data, queries, st, max_steps, max_steps, metric,
-                      expand)
+                      expand, tombstones)
     return st.ids[:, :k], st.dists[:, :k], st.evals
 
 

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.graph import INVALID_ID
-from repro.kernels.ref import bloom_hash
+from repro.kernels.ref import bloom_hash, tomb_test
 from repro.kernels.topk_merge import rank_topc_multi
 
 
@@ -89,11 +89,14 @@ def _bloom_kernel_probe(nid, vis, n_bits):
 
 
 def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref, *refs,
-            beam, metric, distinct_cands, n_bits):
+            beam, metric, distinct_cands, n_bits, tomb):
+    refs = list(refs)
+    dead_ref = refs.pop(0) if tomb else None
     if n_bits:
         (vis_ref, oid_ref, od_ref, oexp_ref, cnt_ref, ovis_ref) = refs
     else:
         (oid_ref, od_ref, oexp_ref, cnt_ref) = refs
+        ovis_ref = None
     q = q_ref[...]                                     # (bq, d)
     nv = nv_ref[...]                                   # (bq, C, d)
     nid = nid_ref[...]                                 # (bq, C)
@@ -118,6 +121,14 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref, *refs,
         nn = jnp.sum(nv * nv, axis=-1)                 # (bq, C)
         nd = jnp.maximum(nn + qn[:, None] - 2.0 * cross, 0.0)
     valid = nid != INVALID_ID
+    if tomb:
+        # tombstoned candidates behave exactly like -1 padding: masked
+        # before the cross term is used, excluded from the eval count and
+        # never recorded in the bloom plane. The dead mask is gathered
+        # from the shared validity plane OUTSIDE the kernel (the plane
+        # spans all of HBM-resident node space; staging it one-hot per
+        # query would blow VMEM for nothing — the gather is a cheap XLA op).
+        valid &= dead_ref[...] == 0
     if n_bits:
         # bounded visited set: already-probed candidates are masked
         # BEFORE the cross term is used (not evaluated, not counted)
@@ -155,8 +166,8 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref, *refs,
 
 
 def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
-                      expanded, visited=None, *, metric: str,
-                      distinct_cands: bool = False,
+                      expanded, visited=None, tombstones=None, *,
+                      metric: str, distinct_cands: bool = False,
                       interpret: bool = False):
     """(q, d) × gathered (q, C, d) candidates → merged (q, beam) state."""
     nq, beam = beam_ids.shape
@@ -173,6 +184,8 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     # (W, beam) one-hot (dominant) + beam state and outputs, 4 B words.
     per_q = ((C2 + 1) * d2 + C2 * (beam + C2) + W * W + 2 * W * beam
              + 6 * beam + 2 * C2)
+    if tombstones is not None:
+        per_q += C2                            # the pre-gathered dead mask
     n_bits, n_words, wpad = 0, 0, 0
     if visited is not None:
         n_words = visited.shape[1]
@@ -195,7 +208,8 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     exp32 = jnp.pad(expanded.astype(jnp.int32), ((0, qpad), (0, 0)))
     nq2 = nq + qpad
     kern = functools.partial(_kernel, beam=beam, metric=metric,
-                             distinct_cands=distinct_cands, n_bits=n_bits)
+                             distinct_cands=distinct_cands, n_bits=n_bits,
+                             tomb=tombstones is not None)
     wtot = n_words + wpad
     in_specs = [
         pl.BlockSpec((bq, d2), lambda i: (i, 0)),
@@ -218,6 +232,12 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
         jax.ShapeDtypeStruct((nq2, 1), jnp.int32),
     ]
     operands = [queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, exp32]
+    if tombstones is not None:
+        # gather the shared validity plane down to a (q, C) dead mask
+        # outside the kernel — padding ids (-1) gather as live
+        dead32 = tomb_test(tombstones, nbr_ids).astype(jnp.int32)
+        in_specs.append(pl.BlockSpec((bq, C2), lambda i: (i, 0)))
+        operands.append(dead32)
     if visited is not None:
         visited = jnp.pad(visited, ((0, qpad), (0, 0)))
         in_specs.append(pl.BlockSpec((bq, wtot), lambda i: (i, 0)))
@@ -246,7 +266,7 @@ _beam_expand_jit = jax.jit(_beam_expand_impl,
 def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                        expanded, *, metric: str = "l2",
                        distinct_cands: bool = False, visited=None,
-                       interpret: bool = False):
+                       tombstones=None, interpret: bool = False):
     """Fused beam-expansion step; see the module docstring.
 
     ``distinct_cands`` asserts the candidate block has duplicate-free ids
@@ -254,16 +274,19 @@ def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     ``visited`` threads an optional (q, n_words) uint32 bloom plane
     through the kernel (already-probed candidates masked before the MXU
     cross term; a fifth output returns the updated plane — same contract
-    as the oracle). interpret=True runs the kernel body eagerly (CPU
-    validation path) — NOT under jit: compiling the interpreter loop is
-    pathologically slow (see pairdist).
+    as the oracle). ``tombstones`` threads the shared (n_words,) uint32
+    validity plane (streaming deletes): dead candidates are masked like
+    -1 padding before the cross term is used, excluded from ``n_evals``
+    and never recorded in the bloom plane. interpret=True runs the kernel
+    body eagerly (CPU validation path) — NOT under jit: compiling the
+    interpreter loop is pathologically slow (see pairdist).
     """
     if interpret:
         return _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids,
-                                 beam_dists, expanded, visited,
+                                 beam_dists, expanded, visited, tombstones,
                                  metric=metric,
                                  distinct_cands=distinct_cands,
                                  interpret=True)
     return _beam_expand_jit(queries, nbr_vecs, nbr_ids, beam_ids,
-                            beam_dists, expanded, visited, metric=metric,
-                            distinct_cands=distinct_cands)
+                            beam_dists, expanded, visited, tombstones,
+                            metric=metric, distinct_cands=distinct_cands)

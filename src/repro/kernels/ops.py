@@ -59,7 +59,7 @@ def join_topk(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
 
 def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
                 *, metric: str = "l2", distinct_cands: bool = False,
-                visited=None):
+                visited=None, tombstones=None):
     """Fused beam-expansion step for graph NN search.
 
     Distances for the gathered candidate block, duplicate masking against
@@ -74,16 +74,24 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
     n_evals[, new_visited])``; the jnp oracle is the parity ground truth
     and the non-TPU path (bit-identical to the pre-fusion search loop
     when ``visited`` is None).
+
+    ``tombstones`` threads the shared (n_words,) uint32 validity plane
+    over global node ids (streaming deletes — DESIGN.md §5): dead
+    candidates are masked like ``-1`` padding before the distance
+    evaluation, excluded from ``n_evals`` and never recorded in the
+    bloom plane. ``tombstones=None`` is bit-identical to pre-plane
+    behavior.
     """
     if use_pallas() and queries.ndim == 2:
         from repro.kernels import beam_expand as _k
         return _k.beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids,
                                      beam_dists, expanded, metric=metric,
                                      distinct_cands=distinct_cands,
-                                     visited=visited)
+                                     visited=visited, tombstones=tombstones)
     return _ref.beam_expand(queries, nbr_vecs, nbr_ids, beam_ids,
                             beam_dists, expanded, metric=metric,
-                            distinct_cands=distinct_cands, visited=visited)
+                            distinct_cands=distinct_cands, visited=visited,
+                            tombstones=tombstones)
 
 
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):

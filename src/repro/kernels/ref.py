@@ -159,9 +159,55 @@ def bloom_set(plane: jax.Array, word: jax.Array, bit: jax.Array,
                    axis=-1, dtype=jnp.uint32)
 
 
+# ---- tombstone validity plane (streaming mutable index) --------------------
+#
+# One packed uint32 bit plane over GLOBAL node ids, SHARED by every query
+# (unlike the per-query bloom plane above): bit set = the node is NOT
+# searchable — deleted, replaced by an upsert, or a never-allocated delta
+# slot. Writers (repro.stream.LiveIndex) flip bits host-side and publish a
+# new plane per generation; readers only ever test. Threaded through
+# ``kops.beam_expand`` so dead nodes are masked BEFORE the distance
+# evaluation and can never surface in a beam or a result row.
+
+def tomb_words(n: int) -> int:
+    """Word count of a validity plane covering ``n`` node ids."""
+    return (n + 31) // 32
+
+
+def tomb_test(plane: jax.Array, ids: jax.Array) -> jax.Array:
+    """(n_words,) uint32 plane × int32 ids (any shape) → bool dead mask.
+
+    Bit set ⇒ the id is tombstoned (not searchable). ``-1`` padding ids
+    test False — they are already invalid and must not disturb eval
+    accounting.
+    """
+    idx = jnp.maximum(ids, 0)
+    w = plane[idx >> 5]
+    bit = (w >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    return (bit == 1) & (ids >= 0)
+
+
+def tomb_set(plane: jax.Array, ids: jax.Array, dead: bool = True) -> jax.Array:
+    """Functional bit update: new plane with ``ids``' bits set (``dead``)
+    or cleared. Negative ids are ignored. Device-side form for tests and
+    device-resident writers; :class:`repro.stream.LiveIndex` keeps a host
+    numpy plane and republishes it instead (writes are host-paced).
+    """
+    n_words = plane.shape[0]
+    idx = jnp.maximum(ids, 0).reshape(-1)
+    pos = jnp.where(ids.reshape(-1) >= 0, idx, n_words * 32)  # OOB → dropped
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((plane[:, None] >> shifts) & 1).astype(bool).reshape(-1)
+    bits = bits.at[pos].set(dead, mode="drop")
+    bits = bits.reshape(n_words, 32)
+    return jnp.sum(jnp.where(bits, jnp.uint32(1) << shifts, jnp.uint32(0)),
+                   axis=-1, dtype=jnp.uint32)
+
+
 def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                 expanded, *, metric: str = "l2",
-                distinct_cands: bool = False, visited=None):
+                distinct_cands: bool = False, visited=None,
+                tombstones=None):
     """One fused beam-expansion step — oracle for the ``beam_expand`` kernel.
 
     queries: (q, d); nbr_vecs/nbr_ids: (q, C, d)/(q, C) the gathered
@@ -219,6 +265,14 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     once evaluated (entry seeds are inserted at state init), beam
     duplicates stop being re-paid. Returns a fifth element, the updated
     plane. ``visited=None`` is today's exact behavior (4-tuple).
+
+    ``tombstones`` (optional) is a (n_words,) uint32 validity plane over
+    GLOBAL node ids, shared by all queries (the streaming delete mask —
+    see DESIGN.md §5). Dead candidates are treated exactly like ``-1``
+    padding: masked before the distance evaluation, excluded from
+    ``n_evals``, never merged into the beam — and NOT recorded in the
+    bloom plane (a later generation may resurrect the slot).
+    ``tombstones=None`` is bit-identical to the pre-plane behavior.
     """
     q = queries[:, None, :]
     if metric == "ip":
@@ -234,6 +288,8 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     nq, beam = beam_ids.shape
     C = nbr_ids.shape[1]
     valid = nbr_ids != -1
+    if tombstones is not None:
+        valid &= ~tomb_test(tombstones, nbr_ids)
     if visited is not None:
         word, bitp = bloom_hash(nbr_ids, visited.shape[1] * 32)
         evald = valid & ~bloom_test(visited, word, bitp)

@@ -56,6 +56,13 @@ class KnnIndex:
         from repro.serve.knn_engine import SearchEngine
         return SearchEngine.from_index(self, **kw)
 
+    def live(self, **kw):
+        """Wrap this index in a mutable :class:`repro.stream.LiveIndex`
+        (upsert / delete / compaction / generation snapshots); ``kw``
+        forwards (delta_cap, compact_threshold, k, ids, …)."""
+        from repro.stream.live import LiveIndex
+        return LiveIndex(self, **kw)
+
     def search(self, queries: jax.Array, k: int = 10, beam: int = 32,
                expand: int = 1):
         """One-shot search: a single slot batch sized to the query block.

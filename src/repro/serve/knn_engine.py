@@ -53,15 +53,19 @@ from repro.core.search import (SearchState, beam_search, beam_search_finished,
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
-                                              "visited_bits"))
-def _admit(g, data, queries, state: SearchState, fresh, clear, *, beam,
-           metric, n_entries, visited_bits) -> SearchState:
+                                              "visited_bits", "seed_span"))
+def _admit(g, data, queries, state: SearchState, fresh, clear, tomb, *, beam,
+           metric, n_entries, visited_bits, seed_span=None) -> SearchState:
     """Slot admission: fresh slots get a new entry-beam state built from
     ``queries``; cleared slots become empty fixed points (all-INVALID
     beam ⇒ converged ⇒ the resume chunk never spends a step or an eval
-    on them); everything else keeps its in-flight state."""
+    on them); everything else keeps its in-flight state. ``tomb`` is the
+    streaming validity plane (or None) — dead entry seeds are masked at
+    state init; ``seed_span`` strides entry seeds over the live extent of
+    a capacity-padded streaming snapshot."""
     init = beam_search_state(g, data, queries, beam=beam, metric=metric,
-                             n_entries=n_entries, visited_bits=visited_bits)
+                             n_entries=n_entries, visited_bits=visited_bits,
+                             tombstones=tomb, seed_span=seed_span)
     empty = SearchState(
         ids=jnp.full_like(state.ids, INVALID_ID),
         dists=jnp.full_like(state.dists, jnp.inf),
@@ -92,9 +96,11 @@ def _empty_state(slots: int, beam: int, visited_bits: int) -> SearchState:
 
 @functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
                                               "visited_bits", "chunk_steps",
-                                              "max_steps", "expand"))
-def _round_step(g, data, queries, state, fresh, clear, *, beam, metric,
-                n_entries, visited_bits, chunk_steps, max_steps, expand):
+                                              "max_steps", "expand",
+                                              "seed_span"))
+def _round_step(g, data, queries, state, fresh, clear, tomb, *, beam, metric,
+                n_entries, visited_bits, chunk_steps, max_steps, expand,
+                seed_span=None):
     """One fused compaction round — admit, chunked resume, harvest
     predicate — as a SINGLE dispatch (the per-round host overhead is what
     compaction trades against, so the round must not cost three). The
@@ -102,15 +108,15 @@ def _round_step(g, data, queries, state, fresh, clear, *, beam, metric,
     runs when a slot actually changed hands — in the straggler-drain
     tail, every round skips straight to the resume chunk."""
     def do_admit(st):
-        return _admit(g, data, queries, st, fresh, clear, beam=beam,
+        return _admit(g, data, queries, st, fresh, clear, tomb, beam=beam,
                       metric=metric, n_entries=n_entries,
-                      visited_bits=visited_bits)
+                      visited_bits=visited_bits, seed_span=seed_span)
 
     st = jax.lax.cond(jnp.any(fresh) | jnp.any(clear), do_admit,
                       lambda st: st, state)
     st = beam_search_resume(g, data, queries, st, num_steps=chunk_steps,
                             max_steps=max_steps, metric=metric,
-                            expand=expand)
+                            expand=expand, tombstones=tomb)
     return st, beam_search_finished(st, max_steps=max_steps)
 
 
@@ -151,6 +157,20 @@ class SearchEngine:
     #: (KnnIndex.search) where the stats die with the engine and the sync
     #: would cost async dispatch pipelining
     record_stats: bool = True
+    #: streaming validity plane ((n_words,) uint32, shared by all queries)
+    #: threaded through every search dispatch — dead nodes masked before
+    #: the distance evaluation. None ⇒ bit-identical to pre-plane behavior.
+    tombstones: Any = None
+    #: entry seeds stride over [0, seed_span) instead of the whole data
+    #: array — the live extent of a capacity-padded streaming snapshot.
+    #: None ⇒ full-array stride (static graphs).
+    seed_span: int | None = None
+    #: the attached :class:`repro.stream.LiveIndex` (set via
+    #: :meth:`from_live`); enables ``upsert``/``delete`` and generation
+    #: adoption. A bare engine over a static graph leaves it None.
+    live: Any = None
+    #: generation tag of the snapshot currently being served
+    generation: int = 0
 
     def __post_init__(self):
         if self.slots < 1:
@@ -180,6 +200,10 @@ class SearchEngine:
                               np.float32)
         self._qdev: jax.Array | None = None     # device mirror of _qbuf
         self._state: SearchState | None = None
+        # generation adoption: set by upsert/delete, consumed by
+        # _try_adopt once no slot is in flight
+        self._adopt_pending = False
+        self._snap_ext = None                   # slot → external-id table
         self.reset_stats()
 
     def reset_stats(self) -> None:
@@ -195,6 +219,17 @@ class SearchEngine:
         return cls(graph=index.graph, data=index.data, metric=index.metric,
                    **kw)
 
+    @classmethod
+    def from_live(cls, live, **kw) -> "SearchEngine":
+        """Attach to a :class:`repro.stream.LiveIndex`: serve its current
+        snapshot and accept ``upsert``/``delete`` between batches."""
+        snap = live.snapshot()
+        eng = cls(graph=snap.graph, data=snap.data, metric=live.metric,
+                  tombstones=snap.tombstones, live=live,
+                  generation=snap.generation, seed_span=snap.seed_span, **kw)
+        eng._snap_ext = snap.ext_ids
+        return eng
+
     # ---- the batched search step ---------------------------------------
 
     def _search(self, qbatch: jax.Array):
@@ -202,7 +237,8 @@ class SearchEngine:
             self.graph, self.data, qbatch, self.k, beam=self.beam,
             max_steps=self._max_steps, metric=self.metric,
             n_entries=self.n_entries, expand=self.expand,
-            visited_bits=self.visited_bits)
+            visited_bits=self.visited_bits, tombstones=self.tombstones,
+            seed_span=self.seed_span)
 
     def _run(self, qbatch: jax.Array, fill: int):
         """One fixed-shape jitted search over a full slot batch.
@@ -267,6 +303,60 @@ class SearchEngine:
         self._in_flight.add(request_id)
         self._pending.append((request_id, vec))
 
+    # ---- live mutation (attached LiveIndex) -----------------------------
+
+    def _try_adopt(self) -> bool:
+        """Adopt the live index's newest snapshot — only with NO slot in
+        flight. That single rule is the generation-consistency story:
+        every query runs start-to-finish against one snapshot's arrays
+        (immutable jax arrays — the writer can't touch them), so a query
+        pinned to generation g returns bit-identical results while g+1,
+        g+2, … are being written. The compacted round loop pauses
+        admissions while an adoption is pending (slots drain, then the
+        swap happens between rounds); fixed-slot mode has no cross-batch
+        device state, so adoption is immediate between batches."""
+        if not self._adopt_pending or self._occupied():
+            return False
+        snap = self.live.snapshot()
+        self.graph, self.data = snap.graph, snap.data
+        self.tombstones = snap.tombstones
+        self.seed_span = snap.seed_span
+        self.generation = snap.generation
+        self._snap_ext = snap.ext_ids
+        self._adopt_pending = False
+        return True
+
+    def _mutate(self, op, *args):
+        if self.live is None:
+            raise ValueError(
+                f"{op} needs an attached LiveIndex — construct the engine "
+                f"via SearchEngine.from_live / LiveIndex.engine")
+        out = getattr(self.live, op)(*args)
+        self._adopt_pending = True
+        self._try_adopt()
+        return out
+
+    def upsert(self, ids, vectors) -> int:
+        """Insert/replace vectors in the attached live index. The engine
+        adopts the new generation as soon as no query is in flight;
+        queries already admitted finish on their pinned snapshot."""
+        return self._mutate("upsert", ids, vectors)
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids in the attached live index (same
+        adoption contract as :meth:`upsert`)."""
+        return self._mutate("delete", ids)
+
+    def to_external(self, slot_ids):
+        """Map internal slot ids from search results to external ids
+        using the adopted snapshot's table (identity for a bare engine
+        over a static graph)."""
+        a = np.asarray(slot_ids)
+        if self._snap_ext is None:
+            return a
+        return np.where(a >= 0, self._snap_ext[np.maximum(a, 0)],
+                        np.int64(-1))
+
     # ---- straggler compaction (compact=True) ---------------------------
 
     def _occupied(self) -> bool:
@@ -274,10 +364,11 @@ class SearchEngine:
 
     def _round_step(self, qdev, st, fresh, clear):
         return _round_step(
-            self.graph, self.data, qdev, st, fresh, clear, beam=self.beam,
-            metric=self.metric, n_entries=self.n_entries,
+            self.graph, self.data, qdev, st, fresh, clear, self.tombstones,
+            beam=self.beam, metric=self.metric, n_entries=self.n_entries,
             visited_bits=self.visited_bits, chunk_steps=self.chunk_steps,
-            max_steps=self._max_steps, expand=self.expand)
+            max_steps=self._max_steps, expand=self.expand,
+            seed_span=self.seed_span)
 
     def _compact_round(self) -> list:
         """One compaction round: backfill free slots from the queue, run
@@ -290,12 +381,18 @@ class SearchEngine:
         identical to the fixed-slot path, which is why per-query results
         and eval counts are bit-identical with compaction on or off.
         """
+        # a pending generation swap pauses admissions: occupied slots
+        # drain on their pinned snapshot, the swap lands between rounds
+        # (once nothing is in flight), and backfill resumes on the new
+        # generation — in-flight queries never see a mixed state
+        self._try_adopt()
         fresh = np.zeros(self.slots, bool)
         clear = self._slot_dirty.copy()
         admitted: list[tuple] = []              # (slot, rid, vec) this round
         try:
             for s in range(self.slots):
-                if self._slot_rids[s] is None and self._pending:
+                if (self._slot_rids[s] is None and self._pending
+                        and not self._adopt_pending):
                     rid, vec = self._pending.popleft()
                     try:
                         if vec.shape != self._qbuf[s].shape:
@@ -370,6 +467,8 @@ class SearchEngine:
                 if self.record_stats:
                     self._n_queries += 1
                     self._total_evals += int(ev_h[s])
+        # the round may have drained the last in-flight slot
+        self._try_adopt()
         return harvested
 
     def run_batch(self) -> list:

@@ -1,0 +1,12 @@
+"""Streaming mutable index — serve while you build (DESIGN.md §5).
+
+:class:`LiveIndex` wraps a search-ready graph with ``upsert`` /
+``delete`` / ``compact`` and generation-tagged :class:`Snapshot`\\ s;
+the serving engine (:class:`repro.serve.knn_engine.SearchEngine`) adopts
+snapshots between rounds so in-flight queries stay bit-consistent while
+writers advance.
+"""
+
+from repro.stream.live import LiveIndex, Snapshot
+
+__all__ = ["LiveIndex", "Snapshot"]

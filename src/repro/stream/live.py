@@ -1,0 +1,425 @@
+"""Streaming mutable k-NN index: upsert / delete / compact over a built graph.
+
+The paper builds a static graph and serves it; the north-star traffic
+model upserts vectors continuously. Following the online-insertion line
+(Debatty's search-then-link) and FGIM's framing of delta absorption as a
+graph-merge problem, the live index is structured so that EVERY mutation
+path reuses a primitive this repo already has:
+
+  upsert   search-then-link via the fused ``beam_search`` (new edges land
+           in a bounded DELTA graph; reverse links ride ``cap_scatter`` +
+           ``merge_rows``)
+  delete   a tombstone bit in a shared validity plane threaded through
+           ``kops.beam_expand`` — dead nodes are masked before the MXU
+           cross term and can never surface in a result row
+  compact  fold the delta into the base with the ``topk_merge``-backed
+           ``merge_graphs``, drop dead rows, repair with a few NN-Descent
+           rounds and α-re-diversify — off the query path
+
+Memory layout: one fixed CAPACITY of ``n_base + delta_cap`` slots.
+``_base`` holds the diversified index graph frozen at the last
+compaction; ``_delta`` is a same-capacity graph holding every edge added
+since (forward rows of new nodes plus reverse links into base rows); the
+query-time graph is their row-wise merge. External ids map to slots
+through a host-side table — internal slot ids are what the graph speaks,
+and a replaced id simply moves to a fresh slot while the old one is
+tombstoned (no in-place row surgery, which would break snapshots).
+
+Generations: every mutation bumps a counter and invalidates the cached
+:class:`Snapshot`. A snapshot is a NamedTuple of device arrays — jax
+arrays are immutable, so a pinned snapshot stays bit-frozen while the
+writer advances, for free. The serving engine adopts the newest snapshot
+only between rounds with no occupied slots (see ``SearchEngine.upsert``),
+which is the whole generation-consistency story: readers never observe a
+half-written generation because there is nothing half-written to observe.
+
+Writes are host-paced (the tombstone plane and the id table live in
+numpy; graph/vector updates are jnp scatters) — the target workload is
+query-dominated with mutation batches in between, not a write-optimized
+log. ``delta_cap`` bounds staleness; ``compact_threshold`` (counted over
+delta slots used PLUS dead slots, since both degrade the graph) triggers
+folding before the bound is hit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import INVALID_ID, KnnGraph, empty_graph, \
+    sort_rows_dedupe
+from repro.core.insertion import cap_scatter, merge_rows
+from repro.core.mergesort import merge_graphs
+from repro.core.search import beam_search
+from repro.kernels.ref import tomb_words
+
+
+def _plane_set(plane: np.ndarray, slots: np.ndarray, dead: bool) -> None:
+    """In-place host-side tombstone bit update (the writer's copy; device
+    planes are always fresh ``jnp.asarray`` copies of this array)."""
+    slots = np.asarray(slots, np.int64).reshape(-1)
+    word = slots >> 5
+    bit = (np.uint32(1) << (slots & 31).astype(np.uint32))
+    if dead:
+        np.bitwise_or.at(plane, word, bit)
+    else:
+        np.bitwise_and.at(plane, word, ~bit)
+
+
+class Snapshot(NamedTuple):
+    """One generation of the live index, bit-frozen.
+
+    All device members are immutable jax arrays: a query pinned to this
+    snapshot returns bit-identical results no matter how far the writer
+    has advanced. ``ext_ids`` is a host COPY of the slot → external-id
+    table at snapshot time (the writer's table mutates in place).
+    """
+
+    graph: KnnGraph          # merged base+delta, capacity rows
+    data: jax.Array          # (capacity, d) float32
+    tombstones: jax.Array    # (n_words,) uint32 validity plane
+    generation: int
+    ext_ids: Any             # np.ndarray (capacity,) int64; -1 = free slot
+    metric: str = "l2"
+    seed_span: int | None = None   # allocated extent; entry seeds stride here
+
+    def search(self, queries, k: int = 10, beam: int = 32,
+               expand: int = 1, n_entries: int = 8, visited_bits: int = 0,
+               max_steps: int | None = None):
+        """Fused beam search over this generation → INTERNAL slot ids.
+
+        Dead slots (deleted / replaced / never allocated) are masked by
+        the validity plane before every distance evaluation — entry seeds
+        included — so they cannot appear in the results. Entry seeds
+        stride over ``seed_span`` (the allocated slot extent), not the
+        capacity padding: with no mutations that makes this search
+        bit-identical to ``beam_search`` on the unpadded static index.
+        """
+        return beam_search(self.graph, self.data, jnp.asarray(queries), k,
+                           beam=beam, max_steps=max_steps,
+                           metric=self.metric, n_entries=n_entries,
+                           expand=expand, visited_bits=visited_bits,
+                           tombstones=self.tombstones,
+                           seed_span=self.seed_span)
+
+    def to_external(self, slot_ids) -> np.ndarray:
+        """Map internal slot ids (any shape) to external ids; -1 ↦ -1."""
+        a = np.asarray(slot_ids)
+        return np.where(a >= 0, self.ext_ids[np.maximum(a, 0)],
+                        np.int64(-1))
+
+
+class LiveIndex:
+    """Mutable wrapper over a search-ready index graph.
+
+    >>> live = result.to_live(delta_cap=256)     # from a GraphBuilder run
+    >>> live.upsert([1001, 1002], new_vectors)   # search-then-link
+    >>> live.delete([17])                        # tombstone, O(1)
+    >>> ids, dists = live.search(queries, k=10)  # external ids
+    >>> eng = live.engine(slots=64, compact=True)  # serving engine
+
+    ``k`` is the link degree for delta rows and the post-compaction base
+    width (default: the wrapped graph's width). ``ids`` names the base
+    rows externally (default ``0..n-1``); external ids are arbitrary
+    int64s, internal slot ids never escape unless asked for.
+    """
+
+    def __init__(self, index=None, *, graph: KnnGraph | None = None,
+                 data=None, metric: str = "l2", ids=None,
+                 delta_cap: int = 1024, compact_threshold: int | None = None,
+                 k: int | None = None, alpha: float = 1.1, lam: int = 8,
+                 refine_iters: int = 2, link_beam: int = 32,
+                 link_entries: int = 8):
+        if index is not None:
+            graph, data, metric = index.graph, index.data, index.metric
+        if graph is None or data is None:
+            raise ValueError("LiveIndex needs an index or (graph, data)")
+        if delta_cap < 0:
+            raise ValueError(f"delta_cap must be >= 0, got {delta_cap}")
+        self.metric = metric
+        self.delta_cap = int(delta_cap)
+        self.compact_threshold = (int(compact_threshold)
+                                  if compact_threshold is not None
+                                  else max(1, self.delta_cap))
+        if self.compact_threshold < 1:
+            raise ValueError("compact_threshold must be >= 1, got "
+                             f"{self.compact_threshold}")
+        self.k = int(k) if k is not None else graph.k
+        if self.k > link_beam:
+            raise ValueError(f"link degree k={self.k} > link_beam="
+                             f"{link_beam} (search-then-link needs "
+                             f"k <= beam)")
+        self.alpha = alpha
+        self.lam = lam
+        self.refine_iters = refine_iters
+        self.link_beam = link_beam
+        self.link_entries = link_entries
+        n0 = graph.n
+        data = jnp.asarray(data, jnp.float32)
+        if ids is None:
+            ids = np.arange(n0, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64).reshape(-1)
+            if ids.size != n0 or np.unique(ids).size != n0:
+                raise ValueError("ids must be n unique external ids")
+        self._install(graph, data, ids)
+        self._gen = 0
+        self._compactions = 0
+
+    # ---- layout ---------------------------------------------------------
+
+    def _install(self, base: KnnGraph, data_live: jax.Array,
+                 ext_live: np.ndarray) -> None:
+        """(Re)build the capacity-padded arrays around a live base."""
+        n0 = base.n
+        cap = n0 + self.delta_cap
+        pad = ((0, self.delta_cap), (0, 0))
+        self._base = KnnGraph(
+            ids=jnp.pad(base.ids, pad, constant_values=INVALID_ID),
+            dists=jnp.pad(base.dists, pad, constant_values=jnp.inf),
+            flags=jnp.pad(base.flags, pad))
+        self._data = jnp.pad(data_live, pad)
+        self._delta = empty_graph(cap, self.k)
+        self._tomb = np.zeros(tomb_words(cap), np.uint32)
+        _plane_set(self._tomb, np.arange(n0, cap), dead=True)
+        self._ext = np.concatenate(
+            [ext_live, np.full(self.delta_cap, -1, np.int64)])
+        self._slot_of = {int(e): i for i, e in enumerate(ext_live)}
+        self._n_base = n0
+        self._delta_used = 0
+        self._dead = 0
+        self._delta_edges = False
+        self._snap: Snapshot | None = None
+
+    @property
+    def capacity(self) -> int:
+        return self._n_base + self.delta_cap
+
+    @property
+    def n_live(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def generation(self) -> int:
+        return self._gen
+
+    @property
+    def compactions(self) -> int:
+        return self._compactions
+
+    @property
+    def dim(self) -> int:
+        return int(self._data.shape[1])
+
+    def __contains__(self, ext_id) -> bool:
+        return int(ext_id) in self._slot_of
+
+    def _bump(self) -> None:
+        self._gen += 1
+        self._snap = None
+
+    def _kill_slot(self, slot: int) -> None:
+        _plane_set(self._tomb, np.asarray([slot]), dead=True)
+        self._ext[slot] = -1
+        self._dead += 1
+
+    # ---- snapshots ------------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """The current generation as a bit-frozen :class:`Snapshot`.
+
+        Cached until the next mutation. With an empty delta the snapshot
+        serves the base graph DIRECTLY (no merge pass) — which is also
+        what pins the no-mutations parity: base graph + all-live plane ≡
+        today's ``beam_search`` (tests/test_stream.py).
+        """
+        if self._snap is None:
+            graph = (merge_graphs(self._base, self._delta)
+                     if self._delta_edges else self._base)
+            self._snap = Snapshot(graph=graph, data=self._data,
+                                  tombstones=jnp.asarray(self._tomb),
+                                  generation=self._gen,
+                                  ext_ids=self._ext.copy(),
+                                  metric=self.metric,
+                                  seed_span=self._n_base + self._delta_used)
+        return self._snap
+
+    # ---- mutation -------------------------------------------------------
+
+    def upsert(self, ids, vectors) -> int:
+        """Insert or replace a batch of vectors; returns the batch size.
+
+        Search-then-link: the batch is searched against the PREVIOUS
+        generation's graph (replaced slots already tombstoned, the new
+        slots not yet live — links within one batch are deferred to
+        compaction, keeping the link pass deterministic and one fused
+        dispatch). Forward edges become the new slots' delta rows; the
+        reverse direction rides one ``cap_scatter`` + ``merge_rows`` into
+        whatever rows the neighbors live in — base rows included, their
+        reverse links simply land in the delta plane.
+
+        A re-upserted external id REPLACES: the old slot is tombstoned
+        and the vector gets a fresh slot — no duplicate node, and pinned
+        snapshots keep seeing the old version (their plane predates the
+        kill). Auto-compacts when the delta would overflow or the
+        ``compact_threshold`` trips.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        vecs = jnp.asarray(vectors, jnp.float32)
+        b = int(ids.shape[0])
+        if vecs.ndim != 2 or vecs.shape[0] != b:
+            raise ValueError(f"vectors must be ({b}, d), got "
+                             f"{tuple(vecs.shape)}")
+        if b == 0:
+            return 0
+        if vecs.shape[1] != self.dim:
+            raise ValueError(f"vector dimension {vecs.shape[1]} != index "
+                             f"dimension {self.dim}")
+        if np.unique(ids).size != b:
+            raise ValueError("duplicate external ids in one upsert batch")
+        if b > self.delta_cap:
+            raise ValueError(f"batch of {b} exceeds delta_cap="
+                             f"{self.delta_cap}; split the batch or raise "
+                             f"delta_cap")
+        if self._delta_used + b > self.delta_cap:
+            self.compact()
+        # the link search runs over the pre-write graph; capture it before
+        # any mutation invalidates the cache
+        g_link = self.snapshot().graph
+        replaced = [self._slot_of.pop(int(e))
+                    for e in ids if int(e) in self._slot_of]
+        for s in replaced:
+            self._kill_slot(s)
+        # plane AFTER the kills, BEFORE the new slots go live: the batch
+        # links against exactly the surviving previous generation
+        tomb_link = jnp.asarray(self._tomb)
+        span_link = self._n_base + self._delta_used
+        slots = self._n_base + self._delta_used + np.arange(b)
+        self._delta_used += b
+        sl = jnp.asarray(slots, jnp.int32)
+        self._data = self._data.at[sl].set(vecs)
+        _plane_set(self._tomb, slots, dead=False)
+        self._ext[slots] = ids
+        for e, s in zip(ids.tolist(), slots.tolist()):
+            self._slot_of[int(e)] = int(s)
+        kd = self.k
+        nbr_ids, nbr_d, _ = beam_search(
+            g_link, self._data, vecs, kd, beam=self.link_beam,
+            metric=self.metric, n_entries=self.link_entries,
+            tombstones=tomb_link, seed_span=span_link)
+        delta = self._delta
+        delta = KnnGraph(ids=delta.ids.at[sl].set(nbr_ids),
+                         dists=delta.dists.at[sl].set(nbr_d),
+                         flags=delta.flags.at[sl].set(nbr_ids != INVALID_ID))
+        cand_ids, cand_dists = cap_scatter(
+            nbr_ids.reshape(-1), jnp.repeat(sl, kd), nbr_d.reshape(-1),
+            n=self.capacity, cap=kd)
+        delta, _ = merge_rows(delta, cand_ids, cand_dists)
+        self._delta = delta
+        self._delta_edges = True
+        self._bump()
+        if self._delta_used + self._dead >= self.compact_threshold:
+            self.compact()
+        return b
+
+    def delete(self, ids) -> int:
+        """Tombstone a batch of external ids; returns how many existed.
+
+        O(1) per id — one host bit flip plus the table drop; the node's
+        edges stay in place and are masked at query time by the validity
+        plane. Unknown ids are ignored (idempotent). Dead slots count
+        toward the compaction trigger: they degrade graph connectivity
+        (nothing can route THROUGH a masked node) until compaction drops
+        their rows and repairs the holes.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        n = 0
+        for e in ids.tolist():
+            slot = self._slot_of.pop(int(e), None)
+            if slot is not None:
+                self._kill_slot(slot)
+                n += 1
+        if n:
+            self._bump()
+            if self._delta_used + self._dead >= self.compact_threshold:
+                self.compact()
+        return n
+
+    # ---- compaction ------------------------------------------------------
+
+    def compact(self) -> None:
+        """Fold the delta into the base and drop the dead — off the query
+        path (pinned snapshots keep serving the old generation throughout).
+
+        merge_graphs(base, delta) is the FGIM-style absorption — the same
+        ``topk_merge`` primitive as the paper's two-way merge; live rows
+        are then compacted to the front (slot order preserved), neighbor
+        ids remapped (dead neighbors → INVALID), a few NN-Descent rounds
+        repair delete holes and discover intra-batch edges the deferred
+        link pass skipped, and an α-prune re-diversifies into the new
+        base. Capacity re-opens to ``n_live + delta_cap``.
+        """
+        if not self._delta_edges and self._dead == 0:
+            return
+        cap = self.capacity
+        folded = (merge_graphs(self._base, self._delta)
+                  if self._delta_edges else self._base)
+        live = np.flatnonzero(self._ext >= 0)
+        n_live = int(live.size)
+        kd = self.k
+        ext_live = self._ext[live].copy()
+        if n_live == 0:
+            self._install(empty_graph(0, kd), jnp.zeros((0, self.dim)),
+                          ext_live)
+            self._compactions += 1
+            self._gen += 1
+            return
+        perm = jnp.asarray(live, jnp.int32)
+        old2new = np.full(cap, INVALID_ID, np.int32)
+        old2new[live] = np.arange(n_live, dtype=np.int32)
+        o2n = jnp.asarray(old2new)
+        ids_l = folded.ids[perm]
+        new_ids = jnp.where(ids_l >= 0, o2n[jnp.maximum(ids_l, 0)],
+                            INVALID_ID)
+        new_d = jnp.where(new_ids >= 0, folded.dists[perm], jnp.inf)
+        ids2, d2, f2 = sort_rows_dedupe(new_ids, new_d, new_ids >= 0)
+        if ids2.shape[1] >= kd:                 # sorted: [:kd] keeps closest
+            g_live = KnnGraph(ids2[:, :kd], d2[:, :kd], f2[:, :kd])
+        else:
+            pad = ((0, 0), (0, kd - ids2.shape[1]))
+            g_live = KnnGraph(jnp.pad(ids2, pad, constant_values=INVALID_ID),
+                              jnp.pad(d2, pad, constant_values=jnp.inf),
+                              jnp.pad(f2, pad))
+        data_live = self._data[perm]
+        if self.refine_iters and n_live > 1:
+            from repro.core.nndescent import nn_descent_rounds
+            g_live, _ = nn_descent_rounds(
+                g_live, data_live, lam=self.lam,
+                max_iters=self.refine_iters, delta=0.0, metric=self.metric)
+        from repro.core.diversify import diversify
+        base = diversify(g_live, data_live, alpha=self.alpha,
+                         metric=self.metric, max_degree=kd)
+        self._install(base, data_live, ext_live)
+        self._compactions += 1
+        self._gen += 1
+
+    # ---- read fronts -----------------------------------------------------
+
+    def search(self, queries, k: int = 10, **kw):
+        """Search the newest generation → (external ids (q, k) int64 on
+        host, dists (q, k)). Convenience front; serving traffic should go
+        through :meth:`engine`."""
+        snap = self.snapshot()
+        ids, dists, _ = snap.search(queries, k=k, **kw)
+        return snap.to_external(np.asarray(ids)), dists
+
+    def engine(self, **kw):
+        """A :class:`repro.serve.knn_engine.SearchEngine` attached to this
+        live index: it serves the current snapshot, exposes
+        ``upsert``/``delete`` pass-throughs, and adopts newer generations
+        only between rounds with no in-flight slots."""
+        from repro.serve.knn_engine import SearchEngine
+        return SearchEngine.from_live(self, **kw)

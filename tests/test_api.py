@@ -192,4 +192,4 @@ def test_trace_fn_sees_full_graph(data):
 
 def test_all_strategies_listed():
     assert set(STRATEGIES) == {"twoway", "multiway", "hierarchy",
-                               "distributed", "outofcore"}
+                               "distributed", "outofcore", "streaming"}

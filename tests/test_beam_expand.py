@@ -316,3 +316,125 @@ def test_k_greater_than_beam_raises(search_setup):
         beam_search(g, data, q, 20, beam=16)
     with pytest.raises(ValueError, match="k <= beam"):
         beam_search_scan(g, data, q, 20, beam=16)
+
+
+# ---- 1c. tombstone validity plane (streaming) -----------------------------
+
+def _plane_with_dead(dead_ids, n):
+    plane = np.zeros(ref.tomb_words(n), np.uint32)
+    for i in dead_ids:
+        plane[i >> 5] |= np.uint32(1) << np.uint32(i & 31)
+    return jnp.asarray(plane)
+
+
+@pytest.mark.parametrize("nq,C,d,beam", [(5, 8, 10, 6), (7, 64, 128, 32)])
+@pytest.mark.parametrize("with_visited", [False, True])
+def test_beam_expand_tombstones_kernel_parity(nq, C, d, beam, with_visited):
+    # dead-candidate masking must be bit-identical between kernel and
+    # oracle — alone and composed with the bloom plane
+    rng = np.random.default_rng(nq * 7 + C)
+    args = _random_state(rng, nq, C, d, beam)
+    tomb = _plane_with_dead(rng.choice(60, 12, replace=False), 60)
+    kw = {"visited": _seeded_plane(args[3], 1024)} if with_visited else {}
+    want = ref.beam_expand(*args, tombstones=tomb, **kw)
+    got = beam_expand_pallas(*args, tombstones=tomb, interpret=True, **kw)
+    _assert_expand_equal(got[:4], want[:4])
+    if with_visited:
+        assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+def test_beam_expand_zero_plane_is_identity():
+    # an all-live plane is bit-identical to tombstones=None on BOTH paths
+    rng = np.random.default_rng(5)
+    nq, C, d, beam = 6, 16, 12, 10
+    args = _random_state(rng, nq, C, d, beam)
+    zero = jnp.zeros(ref.tomb_words(60), jnp.uint32)
+    for fn in (ref.beam_expand,
+               lambda *a, **k: beam_expand_pallas(*a, interpret=True, **k)):
+        want = fn(*args)
+        got = fn(*args, tombstones=zero)
+        _assert_expand_equal(got, want)
+
+
+def test_beam_expand_dead_masked_like_padding():
+    # a dead candidate behaves exactly like a -1 candidate: excluded
+    # pre-eval (no eval counted), never entering the beam, and — with a
+    # visited plane — never recorded in it
+    qs = jnp.zeros((1, 4), jnp.float32)
+    nv = jnp.ones((1, 3, 4), jnp.float32)
+    nid = jnp.asarray([[3, 9, 12]], jnp.int32)
+    bid = jnp.asarray([[5, -1, -1]], jnp.int32)
+    bd = jnp.asarray([[9.0, np.inf, np.inf]], jnp.float32)
+    bexp = jnp.asarray([[True, False, False]])
+    tomb = _plane_with_dead([9], 32)
+    vis0 = _seeded_plane(bid, 1024)
+    for fn in (ref.beam_expand,
+               lambda *a, **k: beam_expand_pallas(*a, interpret=True, **k)):
+        oid, od, oexp, ev, vis = fn(qs, nv, nid, bid, bd, bexp,
+                                    visited=vis0, tombstones=tomb)
+        assert 9 not in np.asarray(oid)
+        assert int(ev[0]) == 2                  # 3 and 12 only
+        dead_nid = jnp.asarray([[9]], jnp.int32)
+        masked = fn(qs, jnp.ones((1, 1, 4)), dead_nid, oid, od, oexp,
+                    visited=vis, tombstones=tomb)
+        assert int(masked[3][0]) == 0           # still masked, not revisited
+
+
+def test_search_tombstones_none_bit_parity(search_setup):
+    # threading the plane arg as None through beam_search leaves the
+    # pinned scan-loop parity untouched (the default-off contract)
+    data, g, qs, gt = search_setup
+    a = beam_search(g, data, qs, 10, beam=24, tombstones=None)
+    b = beam_search(g, data, qs, 10, beam=24)
+    for x, y in zip(a, b):
+        assert_array_equal(np.asarray(x), np.asarray(y))
+    zero = jnp.zeros(ref.tomb_words(int(data.shape[0])), jnp.uint32)
+    c = beam_search(g, data, qs, 10, beam=24, tombstones=zero)
+    for x, y in zip(a, c):
+        assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_search_dead_never_surface(search_setup):
+    # tombstone a third of the corpus: no dead id in any result row, and
+    # the masked search still finds the live ground truth
+    data, g, qs, gt = search_setup
+    n = int(data.shape[0])
+    rng = np.random.default_rng(17)
+    dead = rng.choice(n, n // 3, replace=False)
+    plane = _plane_with_dead(dead, n)
+    ids, dists, _ = beam_search(g, data, qs, 10, beam=48, n_entries=16,
+                                tombstones=plane)
+    assert not np.isin(np.asarray(ids), dead).any()
+    live_mask = np.ones(n, bool)
+    live_mask[dead] = False
+    live_rows = np.flatnonzero(live_mask)
+    gt_live, _ = knn_search_bruteforce(data[jnp.asarray(live_rows)], qs, 10)
+    gt_ids = live_rows[np.asarray(gt_live)]
+    rec = float(search_recall(ids, jnp.asarray(gt_ids), 10))
+    assert rec > 0.8
+
+
+def test_search_seed_span_restricts_entries():
+    # seed_span strides the entry seeds over a prefix: searching a padded
+    # copy of the corpus with span = n is bit-identical to the unpadded
+    # search (the streaming layout contract)
+    from repro.core.graph import KnnGraph as _KG
+    from repro.data.vectors import sift_like
+    data = sift_like(jax.random.key(3), 300, 8)
+    qs = sift_like(jax.random.key(4), 9, 8)
+    gt = knn_bruteforce(data, 10)
+    from repro.core.nndescent import nn_descent
+    g, _ = nn_descent(jax.random.key(5), data, 10, lam=6, max_iters=8)
+    want = beam_search(g, data, qs, 10, beam=24)
+    pad_rows = 50
+    g_pad = _KG(ids=jnp.pad(g.ids, ((0, pad_rows), (0, 0)),
+                            constant_values=INVALID_ID),
+                dists=jnp.pad(g.dists, ((0, pad_rows), (0, 0)),
+                              constant_values=jnp.inf),
+                flags=jnp.pad(g.flags, ((0, pad_rows), (0, 0))))
+    data_pad = jnp.pad(data, ((0, pad_rows), (0, 0)))
+    tomb = _plane_with_dead(np.arange(300, 350), 350)
+    got = beam_search(g_pad, data_pad, qs, 10, beam=24, tombstones=tomb,
+                      seed_span=300)
+    for x, y in zip(want, got):
+        assert_array_equal(np.asarray(x), np.asarray(y))

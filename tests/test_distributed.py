@@ -66,3 +66,89 @@ def test_distributed_matches_reference(tmp_path):
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                          capture_output=True, text=True, timeout=560)
     assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr
+
+
+CKPT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, os.environ["REPRO_SRC"])
+import jax, jax.numpy as jnp
+from repro.data.vectors import sift_like
+from repro.core.nndescent import build_subgraphs
+from repro.core.distributed import (build_distributed,
+                                    build_distributed_checkpointed)
+from repro.core.outofcore import Spool
+from repro.launch.mesh import make_nodes_mesh
+
+m, n_loc, d, k, lam = 4, 200, 16, 10, 6
+n = m * n_loc
+data = sift_like(jax.random.key(0), n, d)
+sizes = (n_loc,) * m
+subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam, max_iters=8)
+mesh = make_nodes_mesh(m)
+g_ids = jnp.concatenate([s.ids for s in subs])
+g_dists = jnp.concatenate([s.dists for s in subs])
+KW = dict(k=k, lam=lam, inner_iters=4)
+ids, dists = build_distributed(mesh, data, g_ids, g_dists, jax.random.key(5),
+                               **KW)
+
+# 1. segmented rounds through a fresh spool == one monolithic program
+root = os.environ["CKPT_DIR"]
+c_ids, c_dists = build_distributed_checkpointed(
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    spool=Spool(os.path.join(root, "seg")), **KW)
+assert bool(jnp.all(ids == c_ids)), "segmented rounds diverge from monolithic"
+assert bool(jnp.all(jnp.where(jnp.isinf(dists), 0, dists)
+                    == jnp.where(jnp.isinf(c_dists), 0, c_dists)))
+
+# 2. kill after round 1's durable put (before its manifest entry would be
+# consumed by round 2) and resume: bit-identical to uninterrupted
+class KillSpool(Spool):
+    def put(self, name, **arrays):
+        super().put(name, **arrays)
+        if name.endswith("round1"):
+            raise KeyboardInterrupt("simulated kill after round-1 put")
+
+killed = False
+try:
+    build_distributed_checkpointed(
+        mesh, data, g_ids, g_dists, jax.random.key(5),
+        spool=KillSpool(os.path.join(root, "kill")), **KW)
+except KeyboardInterrupt:
+    killed = True
+assert killed
+man = Spool(os.path.join(root, "kill")).manifest()
+assert man.get("rounds_done", []) == [], "manifest ran ahead of the kill"
+r_ids, r_dists = build_distributed_checkpointed(
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    spool=Spool(os.path.join(root, "kill")), **KW)
+assert bool(jnp.all(ids == r_ids)), "resumed build diverges"
+assert bool(jnp.all(jnp.where(jnp.isinf(dists), 0, dists)
+                    == jnp.where(jnp.isinf(r_dists), 0, r_dists)))
+
+# 3. a re-entry over a COMPLETE spool is a pure read (no recompute)
+class ReadOnlySpool(Spool):
+    def put(self, name, **arrays):
+        raise AssertionError("complete checkpoint must not re-put")
+
+f_ids, f_dists = build_distributed_checkpointed(
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    spool=ReadOnlySpool(os.path.join(root, "kill")), **KW)
+assert bool(jnp.all(ids == f_ids))
+print("DIST_CKPT_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_checkpoint_kill_and_resume(tmp_path):
+    """Round-level checkpointing: segmented == monolithic, a kill after a
+    round's durable put (manifest not yet advanced) resumes bit-identical,
+    and a complete spool serves the result without recompute."""
+    env = dict(os.environ,
+               REPRO_SRC=os.path.join(os.path.dirname(__file__), "..", "src"),
+               CKPT_DIR=str(tmp_path))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", CKPT_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "DIST_CKPT_OK" in out.stdout, out.stdout + out.stderr

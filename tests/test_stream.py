@@ -1,0 +1,230 @@
+"""Streaming live index: upsert / delete / compaction / generation snapshots.
+
+Pins the subsystem's contracts:
+  * no-mutation parity — a LiveIndex over a static index, searched through
+    its snapshot, is BIT-identical to ``beam_search`` on that index (the
+    capacity padding, the all-live validity plane and the seed_span
+    machinery must be invisible when nothing has mutated)
+  * mutation edge cases — delete→upsert the same external id round-trips;
+    re-upserting an existing id replaces (no duplicate results)
+  * the acceptance criterion — after an interleaved upsert/delete workload
+    crossing at least one compaction, recall@10 against brute force over
+    the LIVE set is within 0.01 of a from-scratch GraphBuilder build of
+    the same vectors
+  * generation consistency — a snapshot pinned at generation g returns
+    bit-identical results while g+1, g+2, … are written; the serving
+    engine adopts a new generation only between batches
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import BuildConfig, GraphBuilder
+from repro.core.bruteforce import knn_search_bruteforce
+from repro.core.search import beam_search
+
+K = 10
+
+
+def _uniform(key, n, d=16):
+    return jax.random.uniform(key, (n, d), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def built():
+    data = _uniform(jax.random.key(0), 600)
+    cfg = BuildConfig(strategy="streaming", k=K, n_subsets=2, delta_cap=64)
+    return GraphBuilder(cfg).build(data), data
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return _uniform(jax.random.key(2), 24)
+
+
+def _recall_vs(ext_ids, gt_ext):
+    hit = (np.asarray(ext_ids)[:, :, None] == gt_ext[:, None, :]) \
+        & (np.asarray(ext_ids)[:, :, None] >= 0)
+    return float(np.mean(np.sum(np.any(hit, axis=1), axis=1) / K))
+
+
+def _live_truth(snap, queries):
+    """(live slot rows, brute-force gt in EXTERNAL ids) for the snapshot."""
+    slots = np.flatnonzero(snap.ext_ids >= 0)
+    live_data = np.asarray(snap.data)[slots]
+    gt_local, _ = knn_search_bruteforce(jnp.asarray(live_data), queries, K)
+    return live_data, snap.ext_ids[slots][np.asarray(gt_local)]
+
+
+def test_no_mutation_bit_parity(built, queries):
+    """Empty delta + zero tombstones: the live snapshot search is
+    bit-identical to ``beam_search`` on the unpadded static index —
+    ids, dists AND eval counts."""
+    res, _ = built
+    idx = res.to_index()
+    snap = res.to_live().snapshot()
+    a_i, a_d, a_e = beam_search(idx.graph, idx.data, queries, K, beam=32)
+    c_i, c_d, c_e = snap.search(queries, k=K, beam=32)
+    assert bool(jnp.array_equal(a_i, c_i))
+    assert bool(jnp.array_equal(a_d, c_d))
+    assert bool(jnp.array_equal(a_e, c_e))
+    # external-id mapping is the identity for a default-named base
+    ids_e, d_e = res.to_live().search(queries, k=K, beam=32)
+    assert np.array_equal(ids_e, np.asarray(a_i))
+
+
+def test_delete_then_upsert_roundtrip(built):
+    """delete(x) → upsert(x, v): x is absent in between, present after,
+    and a query AT v returns x first."""
+    res, data = built
+    live = res.to_live()
+    v = np.asarray(data[7])
+    assert live.delete([7]) == 1
+    assert 7 not in live
+    ids, _ = live.search(v[None], k=K)
+    assert 7 not in ids[0]
+    assert live.upsert([7], v[None]) == 1
+    assert 7 in live
+    ids, dists = live.search(v[None], k=K)
+    assert ids[0, 0] == 7
+    assert float(dists[0, 0]) == 0.0
+
+
+def test_upsert_existing_replaces(built):
+    """Re-upserting a live id must not duplicate it: the result row
+    contains the id at most once, at the NEW vector's distance."""
+    res, data = built
+    live = res.to_live()
+    n0 = live.n_live
+    v_new = np.asarray(data[3]) + 0.25
+    live.upsert([3], v_new[None])
+    assert live.n_live == n0                      # replaced, not added
+    ids, dists = live.search(v_new[None], k=K)
+    assert int(np.sum(ids[0] == 3)) == 1
+    row = int(np.flatnonzero(ids[0] == 3)[0])
+    assert float(dists[0, row]) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_delete_is_idempotent_and_counts(built):
+    res, _ = built
+    live = res.to_live()
+    assert live.delete([11, 12, 999999]) == 2     # unknown id ignored
+    assert live.delete([11]) == 0
+
+
+def test_recall_matches_from_scratch_after_compaction(built, queries):
+    """The acceptance pin: interleaved upserts/deletes crossing >= 1
+    compaction, then recall@10 on the live set within 0.01 of a
+    from-scratch GraphBuilder build over the same vectors."""
+    res, _ = built
+    cfg = res.config
+    live = res.to_live()
+    rng = np.random.default_rng(7)
+    extra = np.asarray(_uniform(jax.random.key(5), 200))
+    nxt = 600
+    for wave in range(5):
+        ids = np.arange(nxt, nxt + 30)
+        nxt += 30
+        live.upsert(ids, extra[wave * 30:wave * 30 + 30])
+        dead = rng.choice(sorted(live._slot_of.keys()), 10, replace=False)
+        live.delete(dead)
+    assert live.compactions >= 1
+    live.compact()                                # fold the tail mutations
+    snap = live.snapshot()
+    live_data, gt_ext = _live_truth(snap, queries)
+
+    ids_live, _ = live.search(queries, k=K, beam=128, n_entries=64)
+    rec_live = _recall_vs(ids_live, gt_ext)
+
+    scratch = GraphBuilder(cfg).build(jnp.asarray(live_data)).to_index()
+    s_i, _, _ = beam_search(scratch.graph, scratch.data, queries, K,
+                            beam=128, n_entries=64)
+    slots = np.flatnonzero(snap.ext_ids >= 0)
+    rec_scratch = _recall_vs(snap.ext_ids[slots][np.asarray(s_i)], gt_ext)
+    assert abs(rec_live - rec_scratch) <= 0.01, \
+        f"live {rec_live} vs from-scratch {rec_scratch}"
+    assert rec_live > 0.9
+
+
+def test_pinned_snapshot_is_bit_frozen(built, queries):
+    """A query pinned to generation g is bit-identical before and after
+    g+1, g+2, … are written (upserts, deletes AND a compaction)."""
+    res, data = built
+    live = res.to_live(delta_cap=32)
+    live.upsert([1000], np.asarray(data[:1]) + 1.0)   # g: non-trivial delta
+    snap = live.snapshot()
+    g = snap.generation
+    before = snap.search(queries, k=K)
+    live.upsert(np.arange(2000, 2016),
+                np.asarray(_uniform(jax.random.key(9), 16)))
+    live.delete([0, 1, 2, 1000])
+    live.compact()
+    assert live.generation > g
+    after = snap.search(queries, k=K)
+    for a, b in zip(before, after):
+        assert bool(jnp.array_equal(a, b))
+    # the pinned snapshot still resolves external ids as of generation g
+    assert 1000 in snap.ext_ids
+    assert 1000 not in live
+
+
+def test_auto_compaction_triggers(built):
+    res, _ = built
+    live = res.to_live(delta_cap=16, compact_threshold=16)
+    live.upsert(np.arange(5000, 5016),
+                np.asarray(_uniform(jax.random.key(11), 16)))
+    assert live.compactions == 1                  # threshold tripped
+    assert live.n_live == 616
+
+
+def test_engine_upsert_delete_and_adoption(built, queries):
+    """The serving engine over a LiveIndex: mutations between batches are
+    adopted (generation advances), results come back in external ids, and
+    a deleted id never surfaces."""
+    res, data = built
+    eng = res.to_live().engine(k=K, slots=8, record_stats=False)
+    g0 = eng.generation
+    v = np.asarray(data[5]) + 0.5
+    eng.upsert([4242], v[None])
+    assert eng.generation > g0                    # adopted: nothing in flight
+    ids, _, _ = eng.search(jnp.asarray(v[None]))
+    assert eng.to_external(np.asarray(ids))[0, 0] == 4242
+    eng.delete([4242])
+    ids2, _, _ = eng.search(jnp.asarray(v[None]))
+    assert 4242 not in eng.to_external(np.asarray(ids2))[0]
+
+
+def test_engine_compacted_mode_matches_fixed(built, queries):
+    """Compacted and fixed-slot engines over the same live snapshot return
+    identical results (the straggler-compaction bit-parity contract holds
+    with the validity plane and seed_span threaded through)."""
+    res, data = built
+    live = res.to_live()
+    live.upsert(np.arange(3000, 3020),
+                np.asarray(_uniform(jax.random.key(13), 20)))
+    live.delete(np.arange(40, 50))
+    fixed = live.engine(k=K, slots=8, record_stats=False)
+    comp = live.engine(k=K, slots=8, compact=True, record_stats=False)
+    a = fixed.search(queries)
+    b = comp.search(queries)
+    for x, y in zip(a, b):
+        assert bool(jnp.array_equal(x, y))
+
+
+def test_streaming_strategy_via_builder(built):
+    """The streaming strategy is a real facade citizen: config fields
+    validate, and build → to_live round-trips."""
+    with pytest.raises(ValueError):
+        BuildConfig(delta_cap=-1)
+    with pytest.raises(ValueError):
+        BuildConfig(compact_threshold=0)
+    res, _ = built
+    assert res.stats["strategy"] == "streaming"
+    live = res.to_live(delta_cap=8)
+    assert live.capacity == 608
+    # delta_cap=0: a frozen live view (upsert must refuse, search works)
+    frozen = res.to_live(delta_cap=0)
+    with pytest.raises(ValueError):
+        frozen.upsert([1], np.zeros((1, 16), np.float32))
