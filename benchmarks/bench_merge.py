@@ -62,7 +62,9 @@ def _seed_arm_spool(template: str, arm_dir: str, spool_kw: dict) -> None:
     man = {"subgraphs_done": [], "pairs_done": []}
     for p in pathlib.Path(template).glob("[gv]*.npz"):
         with np.load(p) as z:
-            seeder.put(p.stem, **{k: z[k] for k in z.files})
+            # skip the reserved checksum vector: put() recomputes it
+            seeder.put(p.stem, **{k: z[k] for k in z.files
+                                  if k != "__crc__"})
         if p.stem.startswith("g"):
             man["subgraphs_done"].append(int(p.stem[1:]))
     man["subgraphs_done"].sort()
@@ -146,6 +148,29 @@ def bench_merge_graphs(args) -> dict:
     return out
 
 
+def bench_fault_sites(args) -> dict:
+    """Disarmed fault-site overhead: ``fault_point`` with no plan armed
+    must be one global load + None check, so the hot paths pay ~nothing
+    for the robustness layer. Asserted in-worker (not just reported) —
+    the CI chaos job runs this with ``--faults``."""
+    from repro.faults import current_plan, fault_point
+    assert current_plan() is None, "a FaultPlan is armed during the bench"
+    calls = 300_000
+    fault_point("spool.put", name="warm")
+    with Timer() as t:
+        for _ in range(calls):
+            fault_point("spool.put")
+    ns_per_call = t.s / calls * 1e9
+    # generous ceiling (a python call + global load is tens of ns; 3 µs
+    # would mean the disarmed path grew real work)
+    assert ns_per_call < 3000, \
+        f"disarmed fault_point costs {ns_per_call:.0f} ns/call"
+    out = {"calls": calls, "sec": round(t.s, 4),
+           "ns_per_call": round(ns_per_call, 1)}
+    emit({"bench": "merge/fault_sites_disarmed", **out})
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=100_000)
@@ -170,6 +195,9 @@ def main(argv=None):
                          "of the spool's external-storage v{i} blocks")
     ap.add_argument("--toy", action="store_true",
                     help="CI smoke: n=3000, m=3")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the disarmed fault-site overhead arm "
+                         "(asserted ~0 in-worker)")
     ap.add_argument("--out", default="BENCH_merge.json")
     args = ap.parse_args(argv)
     if args.toy:
@@ -189,6 +217,8 @@ def main(argv=None):
             results["outofcore_pagecache"] = bench_outofcore(
                 args, pathlib.Path(td), "pagecache", {"compress": True})
     results["merge_graphs"] = bench_merge_graphs(args)
+    if args.faults:
+        results["fault_sites_disarmed"] = bench_fault_sites(args)
     emit({"bench": "merge",
           "overlap_speedup": results["outofcore"]["overlap_speedup"],
           "merge_graphs_fused_speedup":

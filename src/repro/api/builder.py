@@ -202,7 +202,7 @@ class GraphBuilder:
 
         from repro.core.outofcore import Spool, build_out_of_core
         cfg = self.config
-        spool = Spool(cfg.spool_dir)
+        spool = Spool(cfg.spool_dir, retry=cfg.retry)
         # build_out_of_core owns both stages (subgraphs + pair merges) and
         # its own key folding — pass root through so the facade is
         # bit-identical to a direct legacy call (and resume keeps working).
@@ -215,10 +215,14 @@ class GraphBuilder:
                                   fused=cfg.fused_localjoin,
                                   overlap=cfg.overlap,
                                   prefetch_depth=cfg.prefetch_depth,
+                                  retry=cfg.retry,
+                                  prefetch_timeout_s=cfg.prefetch_timeout_s,
                                   phase_times=phase_times)
         m = len(sizes)
         stats = {"subsets": m, "pairs": len(spool.manifest()["pairs_done"]),
-                 "overlap": cfg.overlap}
+                 "overlap": cfg.overlap,
+                 "degraded_pairs": int(
+                     phase_times.get("merge_degraded_pairs", 0))}
         extras = {"spool": spool}
         return graph, stats, phase_times, extras
 

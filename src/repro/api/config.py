@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.metrics import METRICS
+from repro.faults import RetryPolicy
 
 #: merge backends selectable via ``BuildConfig.strategy``
 STRATEGIES = ("twoway", "multiway", "hierarchy", "distributed", "outofcore",
@@ -63,6 +64,16 @@ class BuildConfig:
       compact_threshold: streaming: fold the delta into the base once
                       ``delta slots used + dead slots`` reaches this
                       (default: ``delta_cap``, i.e. compact when full).
+      retry:          :class:`repro.faults.RetryPolicy` bounding retries of
+                      transient ``OSError`` on the spool, the write-behind
+                      lane and the streaming compaction fold (DESIGN.md
+                      §7). Default: 3 attempts with exponential backoff;
+                      ``None`` disables retrying (pure fail-stop, the
+                      pre-hardening behavior).
+      prefetch_timeout_s: out-of-core: how long the merge loop waits for a
+                      prefetched pair before degrading that pair to a
+                      synchronous load (``None`` = wait forever). Degraded
+                      pairs surface in ``BuildResult.degraded_pairs``.
     """
 
     strategy: str = "twoway"
@@ -84,6 +95,8 @@ class BuildConfig:
     prefetch_depth: int = 2
     delta_cap: int = 1024
     compact_threshold: int | None = None
+    retry: RetryPolicy | None = RetryPolicy()
+    prefetch_timeout_s: float | None = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -117,6 +130,12 @@ class BuildConfig:
         if self.compact_threshold is not None and self.compact_threshold < 1:
             raise ValueError(f"compact_threshold must be >= 1, got "
                              f"{self.compact_threshold}")
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise ValueError(f"retry must be a RetryPolicy or None, got "
+                             f"{type(self.retry).__name__}")
+        if self.prefetch_timeout_s is not None and self.prefetch_timeout_s <= 0:
+            raise ValueError(f"prefetch_timeout_s must be > 0, got "
+                             f"{self.prefetch_timeout_s}")
 
     def partition_sizes(self, n: int) -> tuple[int, ...]:
         """Per-subset sizes for an ``n``-vector dataset.

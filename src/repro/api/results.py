@@ -49,6 +49,15 @@ class BuildResult:
     timings: dict
     extras: dict = dataclasses.field(default_factory=dict)
 
+    @property
+    def degraded_pairs(self) -> int:
+        """How many merge pairs fell back to synchronous loads because
+        their prefetch faulted or stalled (out-of-core strategy; 0
+        elsewhere and on a clean run). Nonzero means the build survived
+        data-plane trouble — the RESULT is still bit-identical, only the
+        overlap was lost for those pairs (DESIGN.md §7)."""
+        return int(self.timings.get("merge_degraded_pairs", 0))
+
     def recall(self, gt_ids=None, at: int = 10) -> float:
         """Recall@``at``; computes the brute-force oracle when not given."""
         if gt_ids is None:
@@ -87,6 +96,7 @@ class BuildResult:
         """
         from repro.stream.live import LiveIndex
         cfg = self.config
+        live_kw.setdefault("retry", cfg.retry)
         return LiveIndex(
             self.to_index(alpha, max_degree),
             delta_cap=(delta_cap if delta_cap is not None

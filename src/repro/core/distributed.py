@@ -252,6 +252,13 @@ def build_distributed_checkpointed(mesh, data, g_ids, g_dists, key, *,
     last = 0
     while last + 1 in rounds_done and spool.has(f"{tag}_round{last + 1}"):
         last += 1
+    # self-heal: a round block that exists but fails checksum verification
+    # (torn write) is no checkpoint at all — walk back to the newest round
+    # that reads clean and re-run from there (the schedule is stateless
+    # given the round index, so the recomputed rounds are bit-identical)
+    while last and hasattr(spool, "verify") \
+            and not spool.verify(f"{tag}_round{last}"):
+        last -= 1
     if last:
         blk = spool.get(f"{tag}_round{last}")
         ids = jnp.asarray(blk["ids"])

@@ -20,6 +20,19 @@ FIFO writer, so it only advances after both writes land — a crash leaves
 the manifest at-or-behind the spool and the re-merged pairs are idempotent
 (``merge_graphs`` duplicate suppression), keeping resume bit-identical
 (pinned by tests/test_outofcore.py). Round-time model: DESIGN.md §4.1.
+
+Robustness (DESIGN.md §7): every block carries per-array CRC32 checksums
+verified on read — a corrupt/torn block is quarantine-renamed and either
+raises ``SpoolCorruptionError`` (mid-build: fail-stop, the manifest is
+at-or-behind) or is recomputed on resume (the scrub pass drops the
+affected manifest entries; the re-merge is idempotent, so the healed
+build is bit-identical). Transient ``OSError`` on put/get is retried
+under a bounded ``RetryPolicy``; the write-behind lane retries per-task
+before latching fail-stop; the prefetcher degrades to synchronous reads
+on fault or stall instead of killing the build (degraded-pair counts
+surface in ``phase_times``/``BuildResult.timings``). All pacing and
+elapsed math uses ``time.monotonic()`` — a wall-clock step must never
+make the bandwidth model over- or under-sleep.
 """
 
 from __future__ import annotations
@@ -31,6 +44,9 @@ import queue
 import tempfile
 import threading
 import time
+import warnings
+import zipfile
+import zlib
 from typing import Callable, Sequence
 
 import jax
@@ -42,6 +58,24 @@ from repro.core.graph import INVALID_ID, KnnGraph
 from repro.core.mergesort import merge_graphs
 from repro.core.nndescent import nn_descent
 from repro.core.sampling import support_graph
+from repro.faults import RetryPolicy, fault_point
+
+
+class SpoolCorruptionError(RuntimeError):
+    """A block failed checksum/structural verification on read. The file
+    has already been quarantine-renamed (``<name>.npz.corrupt*``) so the
+    next resume recomputes it; deliberately NOT an ``OSError`` — a
+    deterministic corruption must never be retried as if transient."""
+
+
+#: npz key reserved for the per-array checksum vector
+_CRC_KEY = "__crc__"
+
+
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 over an array's shape, dtype and raw bytes."""
+    c = zlib.crc32(repr((arr.shape, arr.dtype.str)).encode())
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes(), c) & 0xFFFFFFFF
 
 
 class Spool:
@@ -61,14 +95,25 @@ class Spool:
     the overlap win on the media the out-of-core path actually targets; a
     dev-container spool directory sits in RAM-speed page cache, which no
     billion-scale external store does. ``None`` (default) disables pacing.
+
+    Integrity: :meth:`put` stores a CRC32 per array inside the npz
+    (reserved key ``__crc__``, ordered by sorted array name); :meth:`get`
+    verifies and, on mismatch or an unreadable/torn npz, quarantines the
+    file and raises :class:`SpoolCorruptionError`. Blocks written before
+    checksums existed (no ``__crc__`` key) still read fine. ``retry``
+    (a :class:`repro.faults.RetryPolicy` or ``None``) bounds retries of
+    transient ``OSError`` on put/get — a missing file
+    (``FileNotFoundError``) and a checksum failure are never retried.
     """
 
     def __init__(self, root: str, *, compress: bool = False,
-                 fsync: bool = False, bandwidth_mbps: float | None = None):
+                 fsync: bool = False, bandwidth_mbps: float | None = None,
+                 retry: RetryPolicy | None = None):
         self.root = root
         self.compress = compress
         self.fsync = fsync
         self.bandwidth_mbps = bandwidth_mbps
+        self.retry = retry
         os.makedirs(root, exist_ok=True)
 
     def _p(self, name: str) -> str:
@@ -77,9 +122,15 @@ class Spool:
     def _pace(self, nbytes: int, t_start: float) -> None:
         if self.bandwidth_mbps:
             floor = nbytes / (self.bandwidth_mbps * 1e6)
-            remain = floor - (time.time() - t_start)
+            remain = floor - (time.monotonic() - t_start)
             if remain > 0:
                 time.sleep(remain)
+
+    def _io(self, site: str, name: str, fn, *, give_up_on=()):
+        if self.retry is None:
+            return fn()
+        return self.retry.run(fn, site=f"{site}:{name}",
+                              retry_on=(OSError,), give_up_on=give_up_on)
 
     def _fsync_dir(self) -> None:
         """Make a just-published rename itself durable (and ordered w.r.t.
@@ -90,36 +141,117 @@ class Spool:
         finally:
             os.close(fd)
 
+    def _quarantine(self, name: str, why: str) -> None:
+        """Move a corrupt block aside (``has()`` goes False, resume
+        recomputes) instead of deleting — the evidence survives."""
+        src = self._p(name + ".npz")
+        dst = src + ".corrupt"
+        i = 0
+        while os.path.exists(dst):
+            i += 1
+            dst = src + f".corrupt{i}"
+        try:
+            os.replace(src, dst)
+        except FileNotFoundError:
+            pass
+        warnings.warn(f"spool block {name!r} corrupt ({why}); quarantined "
+                      f"to {os.path.basename(dst)} — it will be recomputed "
+                      f"on resume", stacklevel=3)
+
     def put(self, name: str, **arrays) -> None:
-        t0 = time.time()
         hosted = {k: np.asarray(v) for k, v in arrays.items()}
-        tmp = self._p(name + ".tmp.npz")
+        if _CRC_KEY in hosted:
+            raise ValueError(f"array name {_CRC_KEY!r} is reserved")
+        payload = dict(hosted)
+        payload[_CRC_KEY] = np.array(
+            [_crc(hosted[k]) for k in sorted(hosted)], np.uint32)
+        nbytes = sum(a.nbytes for a in hosted.values())
         save = np.savez_compressed if self.compress else np.savez
-        with open(tmp, "wb") as f:
-            save(f, **hosted)
+
+        def _once():
+            t0 = time.monotonic()
+            fault_point("spool.put", name=name)
+            tmp = self._p(name + ".tmp.npz")
+            with open(tmp, "wb") as f:
+                save(f, **payload)
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
+            dec = fault_point("spool.torn_write", name=name)
+            if dec is not None and dec.torn_bytes is not None:
+                # torn-write model: only a prefix of the block survives
+                # (as after a crash mid-write + rename by a buggy layer);
+                # the checksum turns this silent corruption into a
+                # quarantine + recompute on the next read
+                with open(tmp, "r+b") as f:
+                    f.truncate(dec.torn_bytes)
+            os.replace(tmp, self._p(name + ".npz"))     # atomic publish
             if self.fsync:
-                f.flush()
-                os.fsync(f.fileno())
-        os.replace(tmp, self._p(name + ".npz"))     # atomic publish
-        if self.fsync:
-            self._fsync_dir()
-        self._pace(sum(a.nbytes for a in hosted.values()), t0)
+                self._fsync_dir()
+            self._pace(nbytes, t0)
+
+        self._io("spool.put", name, _once)
 
     def get(self, name: str) -> dict:
-        t0 = time.time()
-        with np.load(self._p(name + ".npz")) as z:
-            out = {k: z[k] for k in z.files}
-        self._pace(sum(a.nbytes for a in out.values()), t0)
-        return out
+        def _once():
+            t0 = time.monotonic()
+            fault_point("spool.get", name=name)
+            try:
+                with np.load(self._p(name + ".npz")) as z:
+                    out = {k: z[k] for k in z.files}
+            except FileNotFoundError:
+                raise
+            except (zipfile.BadZipFile, zlib.error, ValueError, EOFError,
+                    KeyError) as e:
+                self._quarantine(name, f"unreadable: {e}")
+                raise SpoolCorruptionError(
+                    f"spool block {name!r} unreadable: {e}") from e
+            crcs = out.pop(_CRC_KEY, None)
+            if crcs is not None:
+                names = sorted(out)
+                ok = (len(crcs) == len(names)
+                      and all(_crc(out[k]) == int(c)
+                              for k, c in zip(names, crcs)))
+                if not ok:
+                    self._quarantine(name, "checksum mismatch")
+                    raise SpoolCorruptionError(
+                        f"spool block {name!r} failed checksum verification")
+            self._pace(sum(a.nbytes for a in out.values()), t0)
+            return out
+
+        return self._io("spool.get", name, _once,
+                        give_up_on=(FileNotFoundError,))
 
     def has(self, name: str) -> bool:
         return os.path.exists(self._p(name + ".npz"))
 
+    def verify(self, name: str) -> bool:
+        """True iff the block exists and reads back checksum-clean. A
+        corrupt block is quarantined as a side effect (``has()`` goes
+        False), so callers can treat ``not verify`` as "recompute"."""
+        if not self.has(name):
+            return False
+        try:
+            self.get(name)
+            return True
+        except SpoolCorruptionError:
+            return False
+
     def manifest(self) -> dict:
         p = self._p("manifest.json")
         if os.path.exists(p):
-            with open(p) as f:
-                return json.load(f)
+            try:
+                with open(p) as f:
+                    return json.load(f)
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                # a torn manifest must not kill resume: every completed
+                # unit is re-verified against its durable block anyway,
+                # and the re-merge is idempotent — an empty manifest is
+                # always safe, just slower
+                warnings.warn(
+                    f"spool manifest unparseable ({e}); treating as empty — "
+                    f"completed work is re-verified / re-merged idempotently",
+                    stacklevel=2)
         return {"subgraphs_done": [], "pairs_done": []}
 
     def write_manifest(self, man: dict) -> None:
@@ -135,21 +267,35 @@ class Spool:
 
 
 class _WriteBehind:
-    """Ordered write-behind lane: one worker, FIFO, fail-stop.
+    """Ordered write-behind lane: one worker, FIFO, retry-then-fail-stop.
 
     Tasks run in submission order, so a pair's manifest update queued after
     its two ``full{a}`` puts cannot land before them (the crash-resume
-    ordering invariant). The first task failure latches: later tasks are
-    skipped and :meth:`flush`/:meth:`wait` re-raise, so a failed put can
-    never be papered over by a successful manifest write behind it.
+    ordering invariant). Each task is retried per ``retry`` (transient
+    ``OSError`` only) BEFORE the lane latches: a recoverable blip costs a
+    bounded backoff, not a 17-hour build. The first exhausted/terminal
+    failure latches: later tasks are skipped and :meth:`flush`/:meth:`wait`
+    re-raise, so a failed put can never be papered over by a successful
+    manifest write behind it.
     """
 
-    def __init__(self):
+    def __init__(self, retry: RetryPolicy | None = None):
         self._q: queue.Queue = queue.Queue()
         self._err: BaseException | None = None
+        self._retry = retry
         self._inflight: dict[str, threading.Event] = {}
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+
+    def _attempt(self, fn: Callable[[], None]) -> None:
+        def _once():
+            fault_point("writebehind.task")
+            fn()
+        if self._retry is None:
+            _once()
+        else:
+            self._retry.run(_once, site="writebehind.task",
+                            retry_on=(OSError,))
 
     def _run(self):
         while True:
@@ -159,7 +305,7 @@ class _WriteBehind:
             fn, done = item
             if self._err is None:
                 try:
-                    fn()
+                    self._attempt(fn)
                 except BaseException as e:      # noqa: BLE001 — latched
                     self._err = e
             done.set()
@@ -178,20 +324,20 @@ class _WriteBehind:
         done = self._inflight.get(name)
         if done is None:
             return 0.0
-        t0 = time.time()
+        t0 = time.monotonic()
         done.wait()
         if self._err is not None:
             raise self._err
-        return time.time() - t0
+        return time.monotonic() - t0
 
     def flush(self) -> float:
         """Drain the queue; re-raise any latched failure. Returns wait secs."""
-        t0 = time.time()
+        t0 = time.monotonic()
         barrier = self.submit(lambda: None)
         barrier.wait()
         if self._err is not None:
             raise self._err
-        return time.time() - t0
+        return time.monotonic() - t0
 
     def close(self):
         self._q.put(None)
@@ -209,35 +355,65 @@ class _Prefetcher:
     ``prefetch_depth`` promises. ``close()`` cancels outstanding jobs: the
     producer re-checks the stop flag after every permit, so at most the
     one in-flight load finishes before the thread exits.
+
+    Degrade contract: a job that raises does NOT kill the pipeline — the
+    failure is delivered for that bundle only and the producer moves on,
+    so the consumer can fall back to a synchronous load (with its own
+    retry budget) and keep the build alive. ``stall_timeout_s`` bounds
+    how long :meth:`next` waits for a bundle: on timeout the bundle is
+    abandoned (its late result is discarded when it eventually arrives)
+    and the consumer degrades the same way. ``None`` waits forever —
+    the pre-hardening behavior.
     """
 
-    def __init__(self, jobs: Sequence[Callable[[], object]], depth: int):
+    def __init__(self, jobs: Sequence[Callable[[], object]], depth: int,
+                 *, stall_timeout_s: float | None = None):
         self._jobs = list(jobs)
         self._permits = threading.Semaphore(max(1, depth))
         self._results: queue.Queue = queue.Queue()
         self._stop = False
+        self._timeout = stall_timeout_s
+        self._expect = 0                # next bundle index the consumer wants
+        self._skip: set[int] = set()    # abandoned (timed-out) bundle indices
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self):
-        for job in self._jobs:
+        for idx, job in enumerate(self._jobs):
             self._permits.acquire()             # bounds resident look-ahead
             if self._stop:
                 return
             try:
-                self._results.put((job(), None))
-            except BaseException as e:          # noqa: BLE001 — forwarded
-                self._results.put((None, e))
-                return
+                fault_point("prefetch.job")
+                self._results.put((idx, job(), None))
+            except BaseException as e:          # noqa: BLE001 — degradable
+                self._results.put((idx, None, e))
 
     def next(self):
-        """(bundle, seconds blocked waiting for it)."""
-        t0 = time.time()
-        bundle, err = self._results.get()
-        self._permits.release()
-        if err is not None:
-            raise err
-        return bundle, time.time() - t0
+        """(bundle | None, seconds blocked, degrade reason | None).
+
+        ``bundle is None`` means this pair's prefetch degraded (job fault
+        or stall past ``stall_timeout_s``); the caller loads it
+        synchronously. Later bundles are unaffected — the producer keeps
+        running ahead.
+        """
+        t0 = time.monotonic()
+        want = self._expect
+        self._expect += 1
+        while True:
+            try:
+                idx, bundle, err = self._results.get(timeout=self._timeout)
+            except queue.Empty:
+                self._skip.add(want)
+                return None, time.monotonic() - t0, "stall"
+            self._permits.release()
+            if idx in self._skip:               # late result of an abandoned
+                self._skip.discard(idx)         # bundle: drop it
+                continue
+            if err is not None:
+                return (None, time.monotonic() - t0,
+                        f"{type(err).__name__}: {err}")
+            return bundle, time.monotonic() - t0, None
 
     def close(self):
         self._stop = True
@@ -285,12 +461,52 @@ def pair_schedule(m: int) -> list[tuple[int, int]]:
     return uniq
 
 
+def _scrub_spool(spool: Spool, man: dict, m: int,
+                 spool_vectors: bool) -> dict:
+    """Resume-time self-heal: drop manifest entries whose durable blocks
+    are missing or corrupt (``verify`` quarantines as a side effect).
+
+    A lost ``g{i}``/``v{i}`` re-runs that subset's (deterministic)
+    NN-Descent; a lost ``full{a}`` drops every pair touching ``a`` so
+    the schedule re-merges them — ``merge_graphs`` is idempotent and the
+    pair order is unchanged, so the healed build is bit-identical to an
+    uninterrupted one (pinned by tests/test_faults.py). A fresh build
+    (empty manifest, no ``full*`` blocks) pays nothing here.
+    """
+    changed = False
+    for i in sorted(man.get("subgraphs_done", [])):
+        names = [f"g{i}"] + ([f"v{i}"] if spool_vectors else [])
+        if not all(spool.verify(nm) for nm in names):
+            man["subgraphs_done"].remove(i)
+            warnings.warn(f"subgraph {i} failed verification on resume; "
+                          f"it will be rebuilt", stacklevel=2)
+            changed = True
+    # a subset referenced by any completed pair MUST have a verifiable
+    # full{a} (the manifest entry was queued behind both puts); absent or
+    # corrupt means a quarantine happened — re-merge everything touching it
+    referenced = {int(x) for t in man.get("pairs_done", [])
+                  for x in t.split("-")}
+    for a in sorted(referenced):
+        if not spool.verify(f"full{a}"):
+            man["pairs_done"] = [t for t in man["pairs_done"]
+                                 if a not in {int(x) for x in t.split("-")}]
+            warnings.warn(f"full graph of subset {a} failed verification on "
+                          f"resume; its pairs will be re-merged "
+                          f"(idempotent)", stacklevel=2)
+            changed = True
+    if changed:
+        spool.write_manifest(man)
+    return man
+
+
 def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                       sizes: Sequence[int], *, k: int, lam: int,
                       inner_iters: int = 8, nnd_iters: int = 20,
                       metric: str = "l2", fused: bool = True,
                       overlap: bool = True, prefetch_depth: int = 2,
                       spool_vectors: bool = False,
+                      retry: RetryPolicy | None = None,
+                      prefetch_timeout_s: float | None = None,
                       phase_times: dict | None = None) -> KnnGraph:
     """Full out-of-core build: subset NN-Descent + all-pairs Two-way Merge.
 
@@ -307,6 +523,13 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
     stage 2 reads pair vectors from the spool instead of slicing ``data`` —
     the mode for datasets whose vectors are not addressable as one array
     during the merge stage.
+
+    ``retry`` bounds transient-``OSError`` retries on the spool and the
+    write-behind lane (installed on ``spool`` if it has none);
+    ``prefetch_timeout_s`` bounds how long the merge loop waits for a
+    prefetched pair before degrading to a synchronous load. Degraded
+    pairs are counted in ``phase_times["merge_degraded_pairs"]``.
+
     ``phase_times``, when passed, receives wall seconds per stage
     (``"subgraphs_s"`` / ``"merge_s"``; near-zero for resumed stages) plus
     the merge-stage split ``"merge_io_s"`` (host blocked on spool I/O or
@@ -314,8 +537,10 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
     """
     m = len(sizes)
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(int)
-    man = spool.manifest()
-    t0 = time.time()
+    if retry is not None and spool.retry is None:
+        spool.retry = retry
+    man = _scrub_spool(spool, spool.manifest(), m, spool_vectors)
+    t0 = time.monotonic()
 
     # ---- stage 1: per-subset subgraphs, one at a time ------------------
     for i in range(m):
@@ -333,9 +558,10 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
         spool.write_manifest(man)
 
     if phase_times is not None:
-        phase_times["subgraphs_s"] = time.time() - t0
-    t0 = time.time()
+        phase_times["subgraphs_s"] = time.monotonic() - t0
+    t0 = time.monotonic()
     io_s = 0.0
+    degraded = 0
 
     # ---- stage 2: pairwise merges, two subsets resident ----------------
     # Follows Alg. 3's pair order (node-major); each pair durable on finish.
@@ -359,20 +585,31 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                        jnp.asarray(bj["s"]) + ni)])
         return seg, s_pair, ni, nj
 
-    writer = _WriteBehind() if overlap else None
+    writer = _WriteBehind(retry=retry) if overlap else None
     prefetch = _Prefetcher(
         [lambda i=i, j=j: load_pair(i, j) for i, j in todo],
-        prefetch_depth) if overlap else None
+        prefetch_depth,
+        stall_timeout_s=prefetch_timeout_s) if overlap else None
     try:
         for i, j in todo:
             tag = f"{i}-{j}"
             if overlap:
-                (seg, s_pair, ni, nj), waited = prefetch.next()
+                bundle, waited, why = prefetch.next()
                 io_s += waited
+                if bundle is None:
+                    # degrade, don't die: the prefetch lane faulted or
+                    # stalled, so this pair loads synchronously (its own
+                    # spool retry budget applies); later pairs keep
+                    # arriving on the prefetch thread
+                    degraded += 1
+                    t_io = time.monotonic()
+                    bundle = load_pair(i, j)
+                    io_s += time.monotonic() - t_io
+                seg, s_pair, ni, nj = bundle
             else:
-                t_io = time.time()
+                t_io = time.monotonic()
                 seg, s_pair, ni, nj = load_pair(i, j)
-                io_s += time.time() - t_io
+                io_s += time.monotonic() - t_io
             kk = jax.random.fold_in(jax.random.fold_in(key, 101 + i), j)
             g_cross = pair_two_way_fixed(kk, seg, ni, s_pair, k=k, lam=lam,
                                          iters=inner_iters, metric=metric,
@@ -381,13 +618,13 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
             for (a, sl, base_other, na) in ((i, slice(0, ni), starts[j], ni),
                                             (j, slice(ni, None), starts[i],
                                              nj)):
-                t_io = time.time()
+                t_io = time.monotonic()
                 if overlap:
                     # read-your-writes: an in-flight full{a} put from an
                     # earlier pair must land before this read
                     writer.wait(f"full{a}")
                 full = _load_full(spool, a, int(starts[a]))
-                io_s += time.time() - t_io
+                io_s += time.monotonic() - t_io
                 ids_half = g_cross.ids[sl]
                 off = -ni + int(base_other) if a == i else int(base_other)
                 half = KnnGraph(
@@ -403,9 +640,9 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                         name=f"full{a}")
                 else:
                     full.ids.block_until_ready()   # charge compute as compute
-                    t_io = time.time()
+                    t_io = time.monotonic()
                     spool.put(f"full{a}", ids=full.ids, dists=full.dists)
-                    io_s += time.time() - t_io
+                    io_s += time.monotonic() - t_io
             man["pairs_done"].append(tag)
             if overlap:
                 # queued BEHIND this pair's two puts on the same FIFO lane:
@@ -413,9 +650,9 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                 writer.submit(
                     lambda snap=copy.deepcopy(man): spool.write_manifest(snap))
             else:
-                t_io = time.time()
+                t_io = time.monotonic()
                 spool.write_manifest(man)
-                io_s += time.time() - t_io
+                io_s += time.monotonic() - t_io
         if overlap:
             io_s += writer.flush()
     finally:
@@ -424,10 +661,11 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
             prefetch.close()
 
     if phase_times is not None:
-        merge_s = time.time() - t0
+        merge_s = time.monotonic() - t0
         phase_times["merge_s"] = merge_s
         phase_times["merge_io_s"] = io_s
         phase_times["merge_compute_s"] = max(0.0, merge_s - io_s)
+        phase_times["merge_degraded_pairs"] = degraded
     # _load_full falls back to the re-based subgraph when a subset was
     # never pair-merged (the degenerate m=1 build has no pairs at all)
     fulls = [_load_full(spool, i, int(starts[i])) for i in range(m)]

@@ -1,0 +1,16 @@
+"""Deterministic fault injection + retry policy (the robustness layer).
+
+``FaultPlan``/``fault_point`` are the seeded injection harness
+(``repro.faults.plan``); ``RetryPolicy`` is the bounded-backoff policy
+threaded through ``BuildConfig.retry`` (``repro.faults.retry``).
+Failure model and injection-site catalog: DESIGN.md §7.
+"""
+
+from repro.faults.plan import (SITES, FaultDecision, FaultPlan, FaultSpec,
+                               arm, armed, current_plan, disarm, fault_point)
+from repro.faults.retry import RetryPolicy
+
+__all__ = [
+    "SITES", "FaultDecision", "FaultPlan", "FaultSpec", "RetryPolicy",
+    "arm", "armed", "current_plan", "disarm", "fault_point",
+]

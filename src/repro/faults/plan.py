@@ -1,0 +1,210 @@
+"""Deterministic, seeded fault injection for the storage/serve planes.
+
+A :class:`FaultPlan` maps named injection *sites* (the catalog in
+:data:`SITES`) to per-invocation fault decisions. Determinism contract:
+a decision is a pure function of (plan seed, spec, per-spec invocation
+index), so any failure sequence replays bit-exactly — re-running the
+same build under the same plan fires the same faults at the same calls.
+
+Sites are host-side only (spool I/O, writer/prefetch threads, engine
+dispatch, compaction fold) — never inside jitted device code, so the
+fused hot paths are untouched. When no plan is armed,
+:func:`fault_point` is one module-global load and a ``None`` check
+(~100 ns — pinned by ``benchmarks/bench_merge.py --faults``).
+
+Usage::
+
+    plan = FaultPlan([
+        FaultSpec("spool.put", fail_first=2),            # first 2 calls raise
+        FaultSpec("spool.get", fail_on=(3,)),            # 4th call raises
+        FaultSpec("spool.torn_write", match="full",      # torn npz block
+                  kind="torn", fail_on=(5,), torn_bytes=64),
+        FaultSpec("prefetch.job", kind="delay", p=0.2,   # seeded 20% stall
+                  delay_s=0.2),
+    ], seed=7)
+    with plan.armed():
+        build_out_of_core(...)
+    plan.fired      # [(site, invocation index, kind), ...] — the replay log
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+import zlib
+
+#: the injection-site catalog (see DESIGN.md §7). Specs naming a site
+#: outside this list fail at plan construction — a typo must never
+#: silently arm nothing.
+SITES = (
+    "spool.put",          # block write (raise ⇒ transient I/O error)
+    "spool.get",          # block read
+    "spool.torn_write",   # torn write: truncate the block after N bytes
+    "writebehind.task",   # one write-behind lane task
+    "prefetch.job",       # one prefetcher load (raise/stall ⇒ degrade)
+    "engine.dispatch",    # one SearchEngine batch / compaction-round dispatch
+    "stream.compact",     # the LiveIndex compaction fold
+)
+
+KINDS = ("error", "delay", "torn")
+
+
+def _unit(seed: int, tag: str, idx: int) -> float:
+    """Deterministic, platform-stable uniform in [0, 1)."""
+    return zlib.crc32(f"{seed}:{tag}:{idx}".encode()) / 2.0 ** 32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One site's fault schedule.
+
+    Trigger rules (any may fire a given invocation): the first
+    ``fail_first`` invocations, the exact indices in ``fail_on``, or a
+    seeded Bernoulli with probability ``p`` (hashed from the plan seed,
+    the spec, and the invocation index — replayable). ``match``
+    restricts the spec to invocations whose ``name`` context contains
+    the substring (e.g. ``match="full"`` faults only ``full{a}`` puts).
+
+    ``kind``: ``"error"`` raises ``exc(message)``; ``"delay"`` sleeps
+    ``delay_s`` inside the site (slow I/O / stall model); ``"torn"``
+    returns a decision the site acts on (Spool truncates the block file
+    after ``torn_bytes`` — the partial-write-survives-a-crash model).
+    """
+
+    site: str
+    kind: str = "error"
+    fail_first: int = 0
+    fail_on: tuple[int, ...] = ()
+    p: float = 0.0
+    exc: type = OSError
+    message: str = "injected fault"
+    delay_s: float = 0.0
+    torn_bytes: int = 64
+    match: str | None = None
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"catalog: {SITES}")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"p must be in [0, 1], got {self.p}")
+        if self.fail_first < 0 or self.torn_bytes < 0 or self.delay_s < 0:
+            raise ValueError("fail_first, torn_bytes and delay_s must be >= 0")
+        object.__setattr__(self, "fail_on", tuple(int(i) for i in self.fail_on))
+
+
+class FaultDecision:
+    """What a triggered non-raising site decision tells the site to do."""
+
+    __slots__ = ("kind", "torn_bytes")
+
+    def __init__(self, kind: str, torn_bytes: int | None = None):
+        self.kind = kind
+        self.torn_bytes = torn_bytes
+
+
+class FaultPlan:
+    """A seeded set of :class:`FaultSpec` schedules, armed globally.
+
+    Thread-safe: per-spec invocation counters advance under a lock
+    (spool sites are hit from the write-behind and prefetch threads).
+    ``fired`` records every triggered decision as
+    ``(site, invocation index, kind)`` — the replay/inspection log.
+    """
+
+    def __init__(self, specs, *, seed: int = 0):
+        self.specs = tuple(specs)
+        for s in self.specs:
+            if not isinstance(s, FaultSpec):
+                raise TypeError(f"expected FaultSpec, got {type(s).__name__}")
+        self.seed = int(seed)
+        self._by_site: dict[str, list[tuple[int, FaultSpec]]] = {}
+        for i, s in enumerate(self.specs):
+            self._by_site.setdefault(s.site, []).append((i, s))
+        self._counts = [0] * len(self.specs)
+        self.fired: list[tuple[str, int, str]] = []
+        self._lock = threading.Lock()
+
+    def invocations(self, site: str) -> int:
+        """Total matched invocations a site's specs have seen."""
+        return sum(self._counts[i]
+                   for i, _ in self._by_site.get(site, ()))
+
+    def decide(self, site: str, ctx: dict):
+        """Advance the site's schedule one invocation; act on a trigger.
+
+        Raises the spec's exception (kind ``error``), sleeps (``delay``),
+        or returns a :class:`FaultDecision` (``torn``); returns ``None``
+        when nothing fires.
+        """
+        name = str(ctx.get("name", ""))
+        for si, spec in self._by_site.get(site, ()):
+            if spec.match is not None and spec.match not in name:
+                continue
+            with self._lock:
+                idx = self._counts[si]
+                self._counts[si] = idx + 1
+                trig = (idx < spec.fail_first or idx in spec.fail_on
+                        or (spec.p > 0.0
+                            and _unit(self.seed, f"{site}#{si}", idx)
+                            < spec.p))
+                if trig:
+                    self.fired.append((site, idx, spec.kind))
+            if not trig:
+                continue
+            if spec.kind == "delay":
+                time.sleep(spec.delay_s)
+                return None
+            if spec.kind == "torn":
+                return FaultDecision("torn", spec.torn_bytes)
+            raise spec.exc(f"{spec.message} [site={site} call={idx}]")
+        return None
+
+    def armed(self):
+        """Context manager arming this plan globally for its body."""
+        return armed(self)
+
+
+_PLAN: FaultPlan | None = None
+
+
+def fault_point(site: str, **ctx):
+    """A named injection site. No plan armed ⇒ a no-op returning ``None``
+    (one global load + compare — the hot paths pay nothing)."""
+    plan = _PLAN
+    if plan is None:
+        return None
+    return plan.decide(site, ctx)
+
+
+def arm(plan: FaultPlan) -> FaultPlan:
+    """Arm ``plan`` globally (one plan at a time — arming over an armed
+    plan raises, so a leaked arm in a test cannot silently stack)."""
+    global _PLAN
+    if _PLAN is not None:
+        raise RuntimeError("a FaultPlan is already armed; disarm() it first")
+    _PLAN = plan
+    return plan
+
+
+def disarm() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def current_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+@contextlib.contextmanager
+def armed(plan: FaultPlan):
+    arm(plan)
+    try:
+        yield plan
+    finally:
+        disarm()

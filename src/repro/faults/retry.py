@@ -1,0 +1,96 @@
+"""Bounded retry with exponential backoff, seeded jitter and a deadline.
+
+The storage/serve hardening policy object (DESIGN.md §7): every retry
+loop in the repo — spool puts/gets, write-behind tasks, the streaming
+compaction fold — runs through :meth:`RetryPolicy.run`, so the
+retry/degrade/fail-stop ladder has exactly one knob surface
+(``BuildConfig.retry``) and one deterministic jitter source.
+
+Jitter is SEEDED (hashed from ``seed``, the call site tag and the
+attempt index, not sampled from global state), so a replayed failure
+sequence sleeps the same schedule — chaos runs are reproducible
+wall-clock-shape included. All elapsed math is ``time.monotonic``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+
+
+def _unit(seed: int, tag: str, attempt: int) -> float:
+    """Deterministic uniform in [0, 1) — same construction as
+    :mod:`repro.faults.plan` so one seed story covers both."""
+    return zlib.crc32(f"retry:{seed}:{tag}:{attempt}".encode()) / 2.0 ** 32
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-attempt retry schedule.
+
+    Attributes:
+      attempts:     TOTAL attempts (>= 1); ``1`` disables retrying.
+      base_delay_s: sleep before the first retry.
+      backoff:      multiplicative factor per further retry.
+      max_delay_s:  cap on any single sleep.
+      jitter:       fractional jitter: each sleep is scaled by
+                    ``1 + jitter * u`` with ``u`` seeded-uniform in
+                    [0, 1) — deterministic given (seed, site, attempt).
+      deadline_s:   overall budget per :meth:`run` call (monotonic);
+                    a retry whose sleep would cross it re-raises instead.
+      seed:         jitter seed.
+    """
+
+    attempts: int = 3
+    base_delay_s: float = 0.02
+    backoff: float = 2.0
+    max_delay_s: float = 1.0
+    jitter: float = 0.5
+    deadline_s: float | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+        if (self.base_delay_s < 0 or self.max_delay_s < 0
+                or self.jitter < 0 or self.backoff < 1.0):
+            raise ValueError("base_delay_s/max_delay_s/jitter must be >= 0 "
+                             "and backoff >= 1")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+
+    def delay_s(self, site: str, attempt: int) -> float:
+        """The sleep before retry ``attempt`` (1-based) at ``site``."""
+        d = min(self.max_delay_s,
+                self.base_delay_s * self.backoff ** (attempt - 1))
+        return d * (1.0 + self.jitter * _unit(self.seed, site, attempt))
+
+    def run(self, fn, *, site: str = "", retry_on=(OSError,),
+            give_up_on=(), on_retry=None):
+        """Call ``fn()`` with up to ``attempts`` tries.
+
+        Only ``retry_on`` exceptions are retried; anything else —
+        including ``give_up_on`` subclasses of a retryable type (e.g.
+        ``FileNotFoundError`` under ``OSError``: a missing block is not
+        transient) — propagates immediately. ``on_retry(site, attempt,
+        exc)`` observes each retry (hook for logging/telemetry).
+        """
+        deadline = (None if self.deadline_s is None
+                    else time.monotonic() + self.deadline_s)
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except retry_on as e:
+                if give_up_on and isinstance(e, tuple(give_up_on)):
+                    raise
+                attempt += 1
+                if attempt >= self.attempts:
+                    raise
+                d = self.delay_s(site, attempt)
+                if deadline is not None and time.monotonic() + d > deadline:
+                    raise
+                if on_retry is not None:
+                    on_retry(site, attempt, e)
+                time.sleep(d)

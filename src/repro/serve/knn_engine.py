@@ -50,6 +50,19 @@ from repro.core.graph import INVALID_ID, KnnGraph
 from repro.core.search import (SearchState, beam_search, beam_search_finished,
                                beam_search_resume, beam_search_state,
                                default_max_steps)
+from repro.faults import fault_point
+
+
+class EngineOverloaded(RuntimeError):
+    """:meth:`SearchEngine.submit` load-shed: the pending queue is at
+    ``max_pending``. The request was NOT enqueued (its id is free) — the
+    caller backs off and resubmits, or routes elsewhere."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's per-request deadline passed before it was admitted to
+    a batch. Raised by :meth:`SearchEngine.result` when the expired
+    request's slot is claimed."""
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "metric", "n_entries",
@@ -171,10 +184,17 @@ class SearchEngine:
     live: Any = None
     #: generation tag of the snapshot currently being served
     generation: int = 0
+    #: bounded pending queue: a ``submit`` past this depth load-sheds
+    #: (raises :class:`EngineOverloaded` WITHOUT enqueueing — backpressure
+    #: instead of unbounded memory growth). None = unbounded (default).
+    max_pending: int | None = None
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got "
+                             f"{self.max_pending}")
         if self.k > self.beam:
             raise ValueError(f"k={self.k} > beam={self.beam}")
         if self.chunk_steps < 1:
@@ -184,9 +204,10 @@ class SearchEngine:
             # fail at construction, not mid-batch with requests in flight
             from repro.kernels.ref import bloom_check_bits
             bloom_check_bits(self.visited_bits)
-        self._pending: deque = deque()          # (request id, query row)
+        self._pending: deque = deque()  # (request id, query row, deadline)
         self._done: dict[Any, tuple] = {}
         self._in_flight: set = set()            # queued or served-unclaimed
+        self._has_deadlines = False     # any queued request has a deadline?
         self._warmed = False                    # first timed batch pending
         self._token_seq = 0                     # internal request-id source
         # per-query step budget: the compacted path needs it resolved (a
@@ -212,6 +233,8 @@ class SearchEngine:
         self._batch_s: list[float] = []
         self._n_queries = 0
         self._total_evals = 0                   # host int, never wraps
+        self._shed = 0                          # submits refused at capacity
+        self._expired = 0                       # deadlines missed pre-admit
 
     @classmethod
     def from_index(cls, index, **kw) -> "SearchEngine":
@@ -274,7 +297,8 @@ class SearchEngine:
 
     # ---- request lifecycle (streaming path) ----------------------------
 
-    def submit(self, request_id, query) -> None:
+    def submit(self, request_id, query, *, deadline_s: float | None = None
+               ) -> None:
         """Queue one query vector (d,) — or (1, d) — under an arbitrary
         hashable id.
 
@@ -290,9 +314,24 @@ class SearchEngine:
         overwrite the earlier response, so it raises instead. Served
         results are retained until claimed; callers that abandon requests
         must still ``result()`` (or discard) them, or the backlog grows.
+
+        Backpressure: with ``max_pending`` set, a submit against a full
+        queue raises :class:`EngineOverloaded` WITHOUT enqueueing (the id
+        stays free, ``stats()["shed"]`` counts it). ``deadline_s`` gives
+        the request a monotonic admission deadline: if it is still queued
+        when a batch starts after the deadline, it is dropped instead of
+        searched and :meth:`result` raises :class:`DeadlineExceeded`
+        (``stats()["expired"]`` counts it). Requests without deadlines
+        pay nothing for the feature.
         """
         if request_id in self._in_flight:
             raise ValueError(f"request id {request_id!r} already in flight")
+        if (self.max_pending is not None
+                and len(self._pending) >= self.max_pending):
+            self._shed += 1
+            raise EngineOverloaded(
+                f"pending queue at max_pending={self.max_pending}; "
+                f"request {request_id!r} shed")
         vec = np.asarray(query)
         if vec.ndim == 2 and vec.shape[0] == 1:
             vec = vec[0]
@@ -300,8 +339,33 @@ class SearchEngine:
             raise ValueError(
                 f"submit expects one query vector of shape (d,) or (1, d), "
                 f"got shape {vec.shape}")
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + deadline_s)
+        if deadline is not None:
+            self._has_deadlines = True
         self._in_flight.add(request_id)
-        self._pending.append((request_id, vec))
+        self._pending.append((request_id, vec, deadline))
+
+    def _drop_expired(self) -> None:
+        """Admission-time deadline pass: queued requests whose deadline
+        already passed are dropped (never searched); their ``result()``
+        raises :class:`DeadlineExceeded`. Zero-cost when no queued
+        request ever carried a deadline."""
+        if not self._has_deadlines:
+            return
+        now = time.monotonic()
+        keep, any_dl = deque(), False
+        for item in self._pending:
+            rid, _, dl = item
+            if dl is not None and dl < now:
+                self._expired += 1
+                self._done[rid] = DeadlineExceeded(
+                    f"request {rid!r} missed its deadline before admission")
+            else:
+                any_dl = any_dl or dl is not None
+                keep.append(item)
+        self._pending = keep
+        self._has_deadlines = any_dl
 
     # ---- live mutation (attached LiveIndex) -----------------------------
 
@@ -386,14 +450,16 @@ class SearchEngine:
         # (once nothing is in flight), and backfill resumes on the new
         # generation — in-flight queries never see a mixed state
         self._try_adopt()
+        self._drop_expired()
         fresh = np.zeros(self.slots, bool)
         clear = self._slot_dirty.copy()
-        admitted: list[tuple] = []              # (slot, rid, vec) this round
+        admitted: list[tuple] = []              # (slot, pending item)
         try:
             for s in range(self.slots):
                 if (self._slot_rids[s] is None and self._pending
                         and not self._adopt_pending):
-                    rid, vec = self._pending.popleft()
+                    item = self._pending.popleft()
+                    rid, vec = item[0], item[1]
                     try:
                         if vec.shape != self._qbuf[s].shape:
                             # explicit check: numpy assignment would
@@ -406,12 +472,12 @@ class SearchEngine:
                     except Exception:
                         # the failing row restores itself; the outer
                         # handler restores everything admitted before it
-                        self._pending.appendleft((rid, vec))
+                        self._pending.appendleft(item)
                         raise
                     self._slot_rids[s] = rid
                     fresh[s] = True
                     clear[s] = False
-                    admitted.append((s, rid, vec))
+                    admitted.append((s, item))
             if fresh.any() or self._qdev is None:
                 self._qdev = jnp.asarray(self._qbuf)
             qdev = self._qdev
@@ -429,6 +495,7 @@ class SearchEngine:
                                               clear_d)
                 np.asarray(wfin)
                 self._warmed = True
+            fault_point("engine.dispatch")
             t0 = time.perf_counter()
             st, fin_d = self._round_step(qdev, self._state, fresh_d,
                                          clear_d)
@@ -439,9 +506,9 @@ class SearchEngine:
             # committed (self._state is only reassigned on success), so
             # leaving them in slots would hand back garbage harvests —
             # the requeue keeps them retryable
-            for s, arid, avec in reversed(admitted):
+            for s, aitem in reversed(admitted):
                 self._slot_rids[s] = None
-                self._pending.appendleft((arid, avec))
+                self._pending.appendleft(aitem)
             raise
         if self.record_stats:
             self._batch_s.append(time.perf_counter() - t0)
@@ -485,13 +552,15 @@ class SearchEngine:
             if not self._pending and not self._occupied():
                 return []
             return self._compact_round()
+        self._drop_expired()
         if not self._pending:
             return []
         items = [self._pending.popleft()
                  for _ in range(min(self.slots, len(self._pending)))]
         fill = len(items)
         try:
-            q = jnp.asarray(np.stack([v for _, v in items]))
+            fault_point("engine.dispatch")
+            q = jnp.asarray(np.stack([it[1] for it in items]))
             if q.shape[1] != self.data.shape[1]:
                 # np.stack accepts a uniformly-wrong width (e.g. all (1,)
                 # rows) that would broadcast to garbage downstream
@@ -513,10 +582,21 @@ class SearchEngine:
             self._pending.extendleft(reversed(items))
             raise
         served = []
-        for r, (rid, _) in enumerate(items):
-            self._done[rid] = (ids_h[r], d_h[r], ev_h[r])
-            served.append(rid)
+        for r, it in enumerate(items):
+            self._done[it[0]] = (ids_h[r], d_h[r], ev_h[r])
+            served.append(it[0])
         return served
+
+    def _submit_blocking(self, request_id, query) -> None:
+        """Submit from an engine-owned front end (:meth:`search`,
+        :meth:`search_stream`): these drive the drain loop themselves, so
+        a full queue means backpressure — run rounds until a slot frees —
+        never :class:`EngineOverloaded`. Shedding is for external callers
+        that outpace the engine; the engine must not shed its own rows."""
+        while (self.max_pending is not None
+               and len(self._pending) >= self.max_pending):
+            self.run_batch()
+        self.submit(request_id, query)
 
     def drain(self) -> None:
         """Run batches until the queue is empty (compacted mode: until
@@ -527,9 +607,13 @@ class SearchEngine:
             self.run_batch()
 
     def result(self, request_id):
-        """(ids (k,), dists (k,), evals ()) for a served request."""
+        """(ids (k,), dists (k,), evals ()) for a served request; raises
+        :class:`DeadlineExceeded` if the request expired before admission
+        (claiming the failure frees the id for resubmission)."""
         out = self._done.pop(request_id)
         self._in_flight.discard(request_id)
+        if isinstance(out, Exception):
+            raise out
         return out
 
     def _release(self, rids: set) -> None:
@@ -594,7 +678,7 @@ class SearchEngine:
                   for i in range(len(host_q))]
         try:
             for tok, row in zip(tokens, host_q):
-                self.submit(tok, row)
+                self._submit_blocking(tok, row)
             self.drain()
         except Exception:
             toks = set(tokens)
@@ -621,7 +705,7 @@ class SearchEngine:
         waiting: deque = deque()
         try:
             for rid, vec in requests:
-                self.submit(rid, vec)
+                self._submit_blocking(rid, vec)
                 waiting.append(rid)
                 if len(self._pending) >= self.slots:
                     self.run_batch()
@@ -654,4 +738,6 @@ class SearchEngine:
             "total_evals": self._total_evals,
             "evals_per_query": (self._total_evals / self._n_queries
                                 if self._n_queries else 0.0),
+            "shed": self._shed,
+            "expired": self._expired,
         }

@@ -132,7 +132,7 @@ class LiveIndex:
                  delta_cap: int = 1024, compact_threshold: int | None = None,
                  k: int | None = None, alpha: float = 1.1, lam: int = 8,
                  refine_iters: int = 2, link_beam: int = 32,
-                 link_entries: int = 8):
+                 link_entries: int = 8, retry=None):
         if index is not None:
             graph, data, metric = index.graph, index.data, index.metric
         if graph is None or data is None:
@@ -157,6 +157,7 @@ class LiveIndex:
         self.refine_iters = refine_iters
         self.link_beam = link_beam
         self.link_entries = link_entries
+        self._retry = retry     # repro.faults.RetryPolicy | None
         n0 = graph.n
         data = jnp.asarray(data, jnp.float32)
         if ids is None:
@@ -361,9 +362,27 @@ class LiveIndex:
         repair delete holes and discover intra-batch edges the deferred
         link pass skipped, and an α-prune re-diversifies into the new
         base. Capacity re-opens to ``n_live + delta_cap``.
+
+        Robustness: the fold is pure until the final ``_install`` swap,
+        so a transient ``OSError`` mid-fold leaves every generation
+        intact and the whole fold is safely retryable — when the index
+        was built with a ``retry`` policy, transient failures are
+        retried under it; otherwise (or when exhausted) the error
+        propagates with the index still fully serviceable on the old
+        generation, and an explicit later ``compact()`` folds the same
+        state to the same bits (pinned by tests/test_faults.py).
         """
         if not self._delta_edges and self._dead == 0:
             return
+        if self._retry is not None:
+            self._retry.run(self._compact_once, site="stream.compact",
+                            retry_on=(OSError,))
+        else:
+            self._compact_once()
+
+    def _compact_once(self) -> None:
+        from repro.faults import fault_point
+        fault_point("stream.compact")
         cap = self.capacity
         folded = (merge_graphs(self._base, self._delta)
                   if self._delta_edges else self._base)

@@ -1,0 +1,486 @@
+"""Chaos matrix: seeded fault plans over the storage/serve/stream planes.
+
+The acceptance bar (ISSUE 7 / DESIGN.md §7): under a RECOVERABLE seeded
+fault plan (transient errors within the retry budget, prefetch stalls,
+one torn write) every build's final graph is BIT-IDENTICAL to the
+unfaulted build; under an EXHAUSTED plan the build fail-stops cleanly
+with the spool manifest at-or-behind, and a disarmed resume heals to the
+bit-identical graph. The harness itself must be deterministic (same plan
+seed → same fired log) and free when disarmed.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.outofcore import (Spool, SpoolCorruptionError,
+                                  build_out_of_core)
+from repro.faults import (FaultPlan, FaultSpec, RetryPolicy, current_plan,
+                          disarm, fault_point)
+from repro.serve.knn_engine import SearchEngine
+
+
+def assert_bit_identical(a, b):
+    assert bool(jnp.all(a.ids == b.ids)), "neighbor ids differ"
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(jnp.isinf(a.dists), 0.0, a.dists)),
+        np.asarray(jnp.where(jnp.isinf(b.dists), 0.0, b.dists)))
+
+
+BUILD_KW = dict(k=8, lam=6, inner_iters=3, nnd_iters=6)
+M, N_LOC = 3, 100
+#: fast deterministic retry budget for the chaos builds
+RETRY = RetryPolicy(attempts=3, base_delay_s=0.001, jitter=0.0)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    if current_plan() is not None:
+        disarm()
+        pytest.fail("test leaked an armed FaultPlan")
+
+
+@pytest.fixture(scope="module")
+def chaos_data(small_data):
+    return np.asarray(small_data[:M * N_LOC])
+
+
+@pytest.fixture(scope="module")
+def ref_graph(tmp_path_factory, chaos_data):
+    """The unfaulted out-of-core build every chaos run must reproduce."""
+    sp = Spool(str(tmp_path_factory.mktemp("ref")))
+    return build_out_of_core(jax.random.key(11), sp, chaos_data,
+                             (N_LOC,) * M, **BUILD_KW)
+
+
+# ---- the harness itself ------------------------------------------------
+
+
+def test_fault_point_disarmed_is_noop():
+    assert current_plan() is None
+    assert fault_point("spool.put", name="whatever") is None
+    assert fault_point("engine.dispatch") is None
+
+
+def test_plan_replay_is_deterministic():
+    """Same seed → identical fired log; a different seed diverges."""
+    def drive(seed):
+        plan = FaultPlan([FaultSpec("spool.get", kind="delay", p=0.3,
+                                    delay_s=0.0)], seed=seed)
+        with plan.armed():
+            for i in range(200):
+                fault_point("spool.get", name=f"blk{i}")
+        return list(plan.fired)
+
+    a, b, c = drive(7), drive(7), drive(8)
+    assert a == b and len(a) > 0
+    assert a != c
+
+
+def test_plan_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("spool.nope")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("spool.put", kind="explode")
+    with pytest.raises(ValueError, match="p must be"):
+        FaultSpec("spool.put", p=1.5)
+    with pytest.raises(TypeError):
+        FaultPlan(["spool.put"])
+
+
+def test_double_arm_raises():
+    plan = FaultPlan([FaultSpec("spool.put", fail_first=1)])
+    with plan.armed():
+        with pytest.raises(RuntimeError, match="already armed"):
+            FaultPlan([]).armed().__enter__()
+    assert current_plan() is None
+
+
+def test_fault_spec_match_filters_and_counts():
+    plan = FaultPlan([FaultSpec("spool.put", match="full", fail_first=1)])
+    with plan.armed():
+        fault_point("spool.put", name="g0")         # filtered out
+        assert plan.invocations("spool.put") == 0
+        with pytest.raises(OSError):
+            fault_point("spool.put", name="full0")
+        fault_point("spool.put", name="full1")      # idx 1: past fail_first
+    assert plan.fired == [("spool.put", 0, "error")]
+
+
+def test_retry_policy_deterministic_and_bounded(monkeypatch):
+    pol = RetryPolicy(attempts=3, base_delay_s=0.01, backoff=2.0, jitter=0.5,
+                      seed=4)
+    assert pol.delay_s("x", 1) == pol.delay_s("x", 1)       # seeded jitter
+    assert pol.delay_s("x", 1) != pol.delay_s("y", 1)
+    sleeps = []
+    monkeypatch.setattr("time.sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert pol.run(flaky, site="x") == "ok"
+    assert sleeps == [pol.delay_s("x", 1), pol.delay_s("x", 2)]
+    # exhausted attempts re-raise
+    with pytest.raises(OSError):
+        pol.run(lambda: (_ for _ in ()).throw(OSError("always")), site="x")
+    # give_up_on short-circuits a retryable subclass (missing != transient)
+    calls["n"] = 0
+
+    def missing():
+        calls["n"] += 1
+        raise FileNotFoundError("gone")
+
+    with pytest.raises(FileNotFoundError):
+        pol.run(missing, site="x", give_up_on=(FileNotFoundError,))
+    assert calls["n"] == 1
+    # non-retryable types propagate immediately
+    with pytest.raises(TypeError):
+        pol.run(lambda: (_ for _ in ()).throw(TypeError("bug")), site="x")
+
+
+def test_retry_policy_deadline_stops_retrying(monkeypatch):
+    pol = RetryPolicy(attempts=5, base_delay_s=10.0, jitter=0.0,
+                      deadline_s=0.05)
+    monkeypatch.setattr(
+        "time.sleep",
+        lambda s: pytest.fail("slept past the deadline"))
+    with pytest.raises(OSError):
+        pol.run(lambda: (_ for _ in ()).throw(OSError("x")), site="s")
+
+
+# ---- spool integrity ---------------------------------------------------
+
+
+def test_spool_checksum_catches_flipped_bytes(tmp_path):
+    sp = Spool(str(tmp_path))
+    sp.put("blk", a=np.arange(64, dtype=np.int32),
+           b=np.ones((4, 4), np.float32))
+    assert sp.verify("blk")
+    p = os.path.join(str(tmp_path), "blk.npz")
+    raw = bytearray(open(p, "rb").read())
+    mid = len(raw) // 2
+    raw[mid] ^= 0xFF
+    raw[mid + 1] ^= 0xFF
+    open(p, "wb").write(bytes(raw))
+    with pytest.warns(UserWarning, match="quarantined"):
+        with pytest.raises(SpoolCorruptionError):
+            sp.get("blk")
+    assert not sp.has("blk")                    # quarantine-renamed away
+    assert os.path.exists(p + ".corrupt")
+    assert not sp.verify("blk")
+
+
+def test_spool_reserved_key_rejected(tmp_path):
+    with pytest.raises(ValueError, match="reserved"):
+        Spool(str(tmp_path)).put("blk", **{"__crc__": np.zeros(1)})
+
+
+def test_spool_retry_recovers_transient_get(tmp_path):
+    sp = Spool(str(tmp_path), retry=RETRY)
+    sp.put("blk", a=np.arange(8))
+    plan = FaultPlan([FaultSpec("spool.get", fail_first=2)])
+    with plan.armed():
+        out = sp.get("blk")                     # 2 faults < 3 attempts
+    np.testing.assert_array_equal(out["a"], np.arange(8))
+    assert plan.invocations("spool.get") == 3
+
+
+# ---- out-of-core chaos -------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_outofcore_recoverable_chaos_bit_identical(tmp_path, chaos_data,
+                                                   ref_graph, seed):
+    """Transient faults on every storage lane (within the retry budget)
+    plus a prefetch fault: the build survives, degrades where designed,
+    and the final graph is bit-identical to the unfaulted run."""
+    plan = FaultPlan([
+        FaultSpec("spool.put", fail_on=(0,)),
+        FaultSpec("spool.get", fail_on=(1,)),
+        FaultSpec("writebehind.task", fail_on=(0,)),
+        FaultSpec("prefetch.job", fail_on=(0,)),
+        # seeded slow-I/O noise: varies per seed, can never fail the build
+        FaultSpec("spool.get", kind="delay", p=0.2, delay_s=0.002),
+    ], seed=seed)
+    pt = {}
+    with plan.armed():
+        g = build_out_of_core(jax.random.key(11),
+                              Spool(str(tmp_path / "s"), retry=RETRY),
+                              chaos_data, (N_LOC,) * M, retry=RETRY,
+                              phase_times=pt, **BUILD_KW)
+    assert_bit_identical(g, ref_graph)
+    assert len(plan.fired) >= 4
+    assert pt["merge_degraded_pairs"] >= 1      # the faulted prefetch job
+
+
+def test_outofcore_exhausted_retries_failstop_manifest_behind(
+        tmp_path, chaos_data, ref_graph):
+    """A permanently failing ``full{a}`` put exhausts every retry layer:
+    the build fail-stops with OSError, the manifest never advanced past
+    the durable state, and a disarmed resume is bit-identical."""
+    spool_dir = str(tmp_path / "s")
+    plan = FaultPlan([FaultSpec("spool.put", match="full", fail_first=999)])
+    with plan.armed():
+        with pytest.raises(OSError):
+            build_out_of_core(jax.random.key(11),
+                              Spool(spool_dir, retry=RETRY), chaos_data,
+                              (N_LOC,) * M, retry=RETRY, **BUILD_KW)
+    sp = Spool(spool_dir)
+    man = sp.manifest()
+    for tag in man["pairs_done"]:               # at-or-behind: every
+        for a in tag.split("-"):                # completed pair is durable
+            assert sp.verify(f"full{a}")
+    resumed = build_out_of_core(jax.random.key(11), Spool(spool_dir),
+                                chaos_data, (N_LOC,) * M, **BUILD_KW)
+    assert_bit_identical(resumed, ref_graph)
+
+
+def test_outofcore_torn_write_quarantined_then_healed(tmp_path, chaos_data,
+                                                      ref_graph):
+    """Tear the LAST ``full`` block write: the checksum catches it at the
+    final read (quarantine + SpoolCorruptionError — never retried), and
+    the resume's scrub pass drops the affected pairs and re-merges them
+    idempotently to the bit-identical graph."""
+    spool_dir = str(tmp_path / "s")
+    # M=3 ⇒ 3 pairs ⇒ 6 matched full-put invocations; tear the last one
+    plan = FaultPlan([FaultSpec("spool.torn_write", kind="torn",
+                                match="full", fail_on=(5,), torn_bytes=64)])
+    with plan.armed():
+        with pytest.warns(UserWarning, match="quarantined"):
+            with pytest.raises(SpoolCorruptionError):
+                build_out_of_core(jax.random.key(11), Spool(spool_dir),
+                                  chaos_data, (N_LOC,) * M, **BUILD_KW)
+    assert any(f.endswith(".corrupt") for f in os.listdir(spool_dir))
+    with pytest.warns(UserWarning):             # scrub warns re-merge
+        resumed = build_out_of_core(jax.random.key(11), Spool(spool_dir),
+                                    chaos_data, (N_LOC,) * M, **BUILD_KW)
+    assert_bit_identical(resumed, ref_graph)
+
+
+def test_prefetch_stall_degrades_to_sync_reads(tmp_path, chaos_data,
+                                               ref_graph):
+    """A stalled prefetch job (slow-I/O fault past ``prefetch_timeout_s``)
+    degrades that pair to a synchronous load — counted, bit-identical."""
+    plan = FaultPlan([FaultSpec("prefetch.job", kind="delay", fail_on=(0,),
+                                delay_s=0.5)])
+    pt = {}
+    with plan.armed():
+        g = build_out_of_core(jax.random.key(11), Spool(str(tmp_path / "s")),
+                              chaos_data, (N_LOC,) * M,
+                              prefetch_timeout_s=0.05, phase_times=pt,
+                              **BUILD_KW)
+    assert_bit_identical(g, ref_graph)
+    assert pt["merge_degraded_pairs"] >= 1
+
+
+def test_manifest_corruption_heals_on_resume(tmp_path, chaos_data,
+                                             ref_graph):
+    """Truncate the manifest mid-json AFTER a complete build: the next
+    build warns, treats it as empty and re-merges idempotently back to
+    the bit-identical graph (nothing recomputed from scratch — the
+    durable blocks all verify)."""
+    spool_dir = str(tmp_path / "s")
+    build_out_of_core(jax.random.key(11), Spool(spool_dir), chaos_data,
+                      (N_LOC,) * M, **BUILD_KW)
+    p = os.path.join(spool_dir, "manifest.json")
+    open(p, "w").write(open(p).read()[:17])     # torn json
+    with pytest.warns(UserWarning, match="unparseable"):
+        g = build_out_of_core(jax.random.key(11), Spool(spool_dir),
+                              chaos_data, (N_LOC,) * M, **BUILD_KW)
+    assert_bit_identical(g, ref_graph)
+
+
+# ---- streaming compaction chaos ----------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stream_built(chaos_data):
+    from repro.api import BuildConfig, GraphBuilder
+    cfg = BuildConfig(strategy="streaming", k=8, n_subsets=2, delta_cap=32,
+                      retry=RETRY)
+    return GraphBuilder(cfg).build(jnp.asarray(chaos_data))
+
+
+def _mutate(live, data):
+    n = data.shape[0]
+    new = np.asarray(data[:20]) + 0.01
+    live.upsert(np.arange(n, n + 20), new)
+    live.delete(np.arange(5))
+
+
+def test_stream_compaction_retry_recovers_bit_identical(stream_built,
+                                                        chaos_data):
+    """A transient fault in the compaction fold is retried under the
+    build config's policy; the folded state matches an unfaulted twin."""
+    ref = stream_built.to_live(retry=None)
+    _mutate(ref, chaos_data)
+    ref.compact()
+
+    live = stream_built.to_live()               # inherits cfg.retry
+    _mutate(live, chaos_data)
+    plan = FaultPlan([FaultSpec("stream.compact", fail_on=(0,))])
+    with plan.armed():
+        live.compact()
+    assert plan.fired == [("stream.compact", 0, "error")]
+    a, b = live.snapshot(), ref.snapshot()
+    assert bool(jnp.all(a.graph.ids == b.graph.ids))
+    np.testing.assert_array_equal(a.ext_ids, b.ext_ids)
+
+
+def test_stream_compaction_exhausted_stays_serviceable(stream_built,
+                                                       chaos_data):
+    """Exhausted compaction retries propagate, but every generation stays
+    intact and serviceable; an explicit compact after disarm folds the
+    same state to the same bits as the unfaulted twin."""
+    ref = stream_built.to_live(retry=None)
+    _mutate(ref, chaos_data)
+    ref.compact()
+
+    live = stream_built.to_live(retry=None)     # no retry: first fault kills
+    _mutate(live, chaos_data)
+    gen_before = live.snapshot().generation
+    plan = FaultPlan([FaultSpec("stream.compact", fail_first=999)])
+    with plan.armed():
+        with pytest.raises(OSError):
+            live.compact()
+    snap = live.snapshot()
+    assert snap.generation == gen_before        # nothing was installed
+    ids, _ = live.search(np.asarray(chaos_data[:4]), k=8)   # still serves
+    assert ids.shape == (4, 8)
+    live.compact()                              # disarmed: heals
+    a, b = live.snapshot(), ref.snapshot()
+    assert bool(jnp.all(a.graph.ids == b.graph.ids))
+    np.testing.assert_array_equal(a.ext_ids, b.ext_ids)
+
+
+# ---- serving engine chaos ----------------------------------------------
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_engine_dispatch_fault_requeues_then_serves(small_data, compact):
+    """An injected dispatch failure rolls the batch/round back; the SAME
+    queue drains successfully on the next call and the results equal the
+    unfaulted engine's, with consistent stats."""
+    data = jnp.asarray(small_data[:300])
+    g = knn_bruteforce(data, 8)
+    q = np.asarray(data[:9]) + 0.01
+    ref = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    want_ids, _, _ = ref.search(jnp.asarray(q))
+
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    for i, row in enumerate(q):
+        eng.submit(f"r{i}", row)
+    plan = FaultPlan([FaultSpec("engine.dispatch", fail_on=(0,))])
+    with plan.armed():
+        with pytest.raises(OSError):
+            eng.run_batch()
+        assert all(f"r{i}" in eng._in_flight for i in range(9))
+        eng.drain()                             # idx ≥ 1: no further faults
+    got = [eng.result(f"r{i}") for i in range(9)]
+    np.testing.assert_array_equal(np.stack([r[0] for r in got]),
+                                  np.asarray(want_ids))
+    st = eng.stats()
+    assert st["queries"] == 9 and eng._in_flight == set()
+
+
+# ---- distributed-checkpointed chaos (subprocess, multi-device) ---------
+
+
+DIST_CHAOS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, os.environ["REPRO_SRC"])
+import jax, jax.numpy as jnp
+from repro.data.vectors import sift_like
+from repro.core.nndescent import build_subgraphs
+from repro.core.distributed import build_distributed_checkpointed
+from repro.core.outofcore import Spool
+from repro.faults import FaultPlan, FaultSpec, RetryPolicy
+from repro.launch.mesh import make_nodes_mesh
+
+m, n_loc, d, k, lam = 2, 80, 8, 6, 4
+data = sift_like(jax.random.key(0), m * n_loc, d)
+sizes = (n_loc,) * m
+subs = build_subgraphs(jax.random.key(2), data, sizes, k, lam=lam, max_iters=6)
+mesh = make_nodes_mesh(m)
+g_ids = jnp.concatenate([s.ids for s in subs])
+g_dists = jnp.concatenate([s.dists for s in subs])
+KW = dict(k=k, lam=lam, inner_iters=2)
+RETRY = RetryPolicy(attempts=3, base_delay_s=0.001, jitter=0.0)
+root = os.environ["CKPT_DIR"]
+
+ids, dists = build_distributed_checkpointed(
+    mesh, data, g_ids, g_dists, jax.random.key(5),
+    spool=Spool(os.path.join(root, "ref")), **KW)
+
+# 1. recoverable: transient put faults within the retry budget
+plan = FaultPlan([FaultSpec("spool.put", fail_on=(0,))])
+with plan.armed():
+    r_ids, r_dists = build_distributed_checkpointed(
+        mesh, data, g_ids, g_dists, jax.random.key(5),
+        spool=Spool(os.path.join(root, "rec"), retry=RETRY), **KW)
+assert plan.fired, "fault never fired"
+assert bool(jnp.all(ids == r_ids)), "recoverable chaos diverged"
+
+# 2. exhausted: permanent round-put failure fail-stops, manifest behind
+plan = FaultPlan([FaultSpec("spool.put", match="dist_round",
+                            fail_first=999)])
+failed = False
+with plan.armed():
+    try:
+        build_distributed_checkpointed(
+            mesh, data, g_ids, g_dists, jax.random.key(5),
+            spool=Spool(os.path.join(root, "exh"), retry=RETRY), **KW)
+    except OSError:
+        failed = True
+assert failed, "exhausted retries did not fail-stop"
+sp = Spool(os.path.join(root, "exh"))
+for r in sp.manifest().get("rounds_done", []):
+    assert sp.verify(f"dist_round{r}"), "manifest ran ahead"
+e_ids, e_dists = build_distributed_checkpointed(
+    mesh, data, g_ids, g_dists, jax.random.key(5), spool=sp, **KW)
+assert bool(jnp.all(ids == e_ids)), "post-failstop resume diverged"
+
+# 3. torn final round block: re-entry walks back past the corrupt
+# checkpoint and recomputes bit-identically
+plan = FaultPlan([FaultSpec("spool.torn_write", kind="torn",
+                            match="dist_round", fail_on=(0,),
+                            torn_bytes=64)])
+with plan.armed():
+    build_distributed_checkpointed(
+        mesh, data, g_ids, g_dists, jax.random.key(5),
+        spool=Spool(os.path.join(root, "torn")), **KW)
+import warnings
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    t_ids, t_dists = build_distributed_checkpointed(
+        mesh, data, g_ids, g_dists, jax.random.key(5),
+        spool=Spool(os.path.join(root, "torn")), **KW)
+assert bool(jnp.all(ids == t_ids)), "torn-checkpoint walk-back diverged"
+print("DIST_CHAOS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_checkpoint_chaos(tmp_path):
+    env = dict(os.environ,
+               REPRO_SRC=os.path.join(os.path.dirname(__file__), "..", "src"),
+               CKPT_DIR=str(tmp_path))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", DIST_CHAOS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "DIST_CHAOS_OK" in out.stdout, out.stdout + out.stderr

@@ -196,6 +196,91 @@ def test_stream_failure_releases_unserved_ids(setup, compact):
                            np.asarray(want_ids[int(rid[1:])]))
 
 
+@pytest.mark.parametrize("compact", [False, True])
+def test_failed_dispatch_then_resubmit_same_ids(setup, compact):
+    """The failure-release pin the _release requeue claim was missing:
+    after a failed search_stream (dispatch fault, not a bad row), the
+    SAME request ids resubmit cleanly, serve correct results, and the
+    stats see every query exactly once."""
+    from repro.faults import FaultPlan, FaultSpec
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    reqs = [(f"f{i}", np.asarray(q[i])) for i in range(6)]
+    plan = FaultPlan([FaultSpec("engine.dispatch", fail_first=99)])
+    with plan.armed():
+        with pytest.raises(OSError):
+            for _ in eng.search_stream(iter(reqs)):
+                pytest.fail("nothing can be served under a dispatch fault")
+    # every id was released — resubmitting the SAME ids must not raise
+    assert not any(rid in eng._in_flight for rid, _ in reqs
+                   if rid not in eng._done)
+    want_ids, _, _ = beam_search(g, data, q[:6], 5, beam=16)
+    out = {rid: ids for rid, ids, _ in eng.search_stream(iter(reqs))}
+    for i in range(6):
+        assert_array_equal(out[f"f{i}"], np.asarray(want_ids[i]))
+    st = eng.stats()
+    assert st["queries"] == 6 and eng._in_flight == set()
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_deadline_expired_request_is_dropped(setup, compact):
+    from repro.serve.knn_engine import DeadlineExceeded
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact)
+    eng.submit("late", q[0], deadline_s=0.0)    # expired before any batch
+    eng.submit("ok", q[1])
+    import time as _time
+    _time.sleep(0.005)
+    eng.drain()
+    with pytest.raises(DeadlineExceeded):
+        eng.result("late")
+    assert "late" not in eng._in_flight         # claimable exactly once
+    want_ids, _, _ = beam_search(g, data, q[1:2], 5, beam=16)
+    assert_array_equal(eng.result("ok")[0], np.asarray(want_ids[0]))
+    st = eng.stats()
+    assert st["expired"] == 1 and st["queries"] == 1
+    eng.submit("late", q[0])                    # the id is reusable
+    eng.drain()
+    eng.result("late")
+
+
+def test_max_pending_load_sheds_on_submit(setup):
+    from repro.serve.knn_engine import EngineOverloaded
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       max_pending=2)
+    eng.submit("a", q[0])
+    eng.submit("b", q[1])
+    with pytest.raises(EngineOverloaded):
+        eng.submit("c", q[2])
+    assert "c" not in eng._in_flight            # shed ⇒ never enqueued
+    assert eng.stats()["shed"] == 1
+    eng.drain()
+    eng.submit("c", q[2])                       # capacity freed
+    eng.drain()
+    for rid, i in (("a", 0), ("b", 1), ("c", 2)):
+        want_ids, _, _ = beam_search(g, data, q[i:i + 1], 5, beam=16)
+        assert_array_equal(eng.result(rid)[0], np.asarray(want_ids[0]))
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_front_ends_backpressure_instead_of_shedding(setup, compact):
+    """search()/search_stream() own the drain loop, so max_pending means
+    backpressure for them — every row is served, nothing is shed. Only
+    external submit() calls shed."""
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=16, slots=4,
+                       compact=compact, max_pending=2)
+    ids, _, _ = eng.search(q[:7])                 # 7 rows > max_pending
+    want_ids, _, _ = beam_search(g, data, q[:7], 5, beam=16)
+    assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+    got = {rid: r_ids for rid, r_ids, _ in
+           eng.search_stream((f"s{i}", q[i]) for i in range(7))}
+    assert len(got) == 7 and eng.stats()["shed"] == 0
+
+
 # ---- straggler compaction -------------------------------------------------
 
 def _skewed_queries(data, n_easy, n_hard, key=7):

@@ -100,6 +100,22 @@ def test_write_behind_failure_is_not_swallowed(tmp_path, small_data):
     assert crashy.manifest()["pairs_done"] == []
 
 
+def test_truncated_manifest_warns_and_reads_empty(tmp_path):
+    """A corrupt/truncated manifest.json must not kill resume: it reads
+    as empty (re-merge is idempotent) with a warning, instead of dying
+    on json.JSONDecodeError."""
+    sp = Spool(str(tmp_path))
+    sp.write_manifest({"subgraphs_done": [0], "pairs_done": ["0-1"]})
+    p = str(tmp_path / "manifest.json")
+    with open(p) as f:
+        torn = f.read()[:11]                    # cut mid-key
+    with open(p, "w") as f:
+        f.write(torn)
+    with pytest.warns(UserWarning, match="unparseable"):
+        man = sp.manifest()
+    assert man == {"subgraphs_done": [], "pairs_done": []}
+
+
 @pytest.mark.slow
 def test_out_of_core_build_and_resume(tmp_path, small_data):
     m, n_loc = 4, 150
