@@ -1,0 +1,180 @@
+"""Leaf-tier bench: exact bruteforce vs NN-Descent below the crossover.
+
+The tentpole claim of the leaf tier (DESIGN.md §8): small leaves are
+CHEAPER to build exactly. Per leaf size this bench times both tiers over
+identical data (same key, warm), reports the speedup, and then shows the
+``auto`` dispatcher earning its keep:
+
+  * per-size rows: bruteforce vs NN-Descent wall seconds + the speedup
+    (``bf_speedup`` ≥ 2 expected at the smallest sizes — the acceptance
+    number), plus the bruteforce tier's recall, which is 1.0 by
+    construction (exact) vs NN-Descent's approximation
+  * the MEASURED crossover for this (d, k, metric, backend)
+    (``leaf.measure_crossover`` — the one-shot probe ``auto`` uses above
+    the deterministic SURE_FLOOR)
+  * auto-pick demonstration, two parts: against the measured crossover,
+    ``auto`` must select the tier the sweep actually measured as faster
+    at every swept size (``auto_matches_faster``); and with a crossover
+    PINNED mid-sweep (``BuildConfig.leaf_crossover``), dispatch must take
+    the bruteforce branch below the pin and the NN-Descent branch above
+    it — both branches exercised deterministically on every backend
+  * end-to-end: a hierarchy build with ``leaf_strategy="auto"`` vs
+    ``"nndescent"`` over the same data/seed (one warm build per arm, then
+    timed; subgraph-phase seconds + final recall)
+
+Emits ``name=value`` CSV rows plus ``BENCH_leaf.json``. Run with
+``--toy`` in CI.
+
+    PYTHONPATH=src python benchmarks/bench_leaf.py [--sizes 256,512,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from common import Timer, emit, write_json  # noqa: E402
+
+from repro.api import BuildConfig, GraphBuilder  # noqa: E402
+from repro.core import leaf  # noqa: E402
+from repro.core.graph import recall as graph_recall  # noqa: E402
+from repro.data.vectors import sift_like  # noqa: E402
+
+
+def _time_tier(key, data, k, strategy, reps):
+    """Min-of-``reps`` wall seconds for one leaf build (warm)."""
+    g, tier = leaf.build_leaf(key, data, k, strategy=strategy)
+    g.ids.block_until_ready()                  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            g, _ = leaf.build_leaf(key, data, k, strategy=strategy)
+            g.ids.block_until_ready()
+        best = min(best, t.s)
+    return best, g, tier
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="256,512,1024,2048,4096",
+                    help="comma-separated leaf sizes to sweep")
+    ap.add_argument("--d", type=int, default=24)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--metric", default="l2")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--probe-n", type=int, default=leaf.PROBE_N,
+                    help="crossover probe size (smaller = cheaper probe)")
+    ap.add_argument("--e2e-n", type=int, default=4096,
+                    help="dataset size for the hierarchy end-to-end arm")
+    ap.add_argument("--e2e-subsets", type=int, default=4)
+    ap.add_argument("--toy", action="store_true",
+                    help="CI smoke: sizes=128,256,512, 1 rep, small e2e")
+    ap.add_argument("--out", default="BENCH_leaf.json")
+    args = ap.parse_args(argv)
+    if args.toy:
+        args.sizes, args.reps = "128,256,512", 1
+        args.e2e_n, args.e2e_subsets, args.probe_n = 1024, 4, 256
+    sizes = [int(s) for s in args.sizes.split(",")]
+
+    key = jax.random.key(0)
+    results = {"d": args.d, "k": args.k, "metric": args.metric,
+               "sizes": sizes, "backend": jax.default_backend(),
+               "size_rows": []}
+
+    # ---- per-size tier sweep ---------------------------------------------
+    for n in sizes:
+        data = sift_like(jax.random.key(1), n, args.d)
+        bf_s, g_bf, _ = _time_tier(key, data, args.k, "bruteforce", args.reps)
+        nnd_s, g_nnd, _ = _time_tier(key, data, args.k, "nndescent", args.reps)
+        nnd_rec = float(graph_recall(g_nnd, g_bf.ids, args.k))
+        row = {"n": n, "bf_s": round(bf_s, 4), "nnd_s": round(nnd_s, 4),
+               "bf_speedup": round(nnd_s / max(bf_s, 1e-9), 2),
+               "nnd_recall_vs_exact": round(nnd_rec, 4)}
+        results["size_rows"].append(row)
+        emit({"bench": "leaf", **row})
+
+    # ---- measured crossover (the probe auto runs above SURE_FLOOR) -------
+    leaf.clear_crossover_cache()
+    with Timer() as t:
+        n_star = leaf.measure_crossover(args.d, args.k, args.metric,
+                                        probe_n=args.probe_n)
+    results["measured_crossover"] = n_star
+    results["probe_s"] = round(t.s, 3)
+    results["sure_floor"] = leaf.SURE_FLOOR
+    emit({"bench": "leaf", "measured_crossover": n_star,
+          "probe_s": results["probe_s"]})
+
+    # ---- auto picks the measured winner at every swept size --------------
+    auto_rows = []
+    for row in results["size_rows"]:
+        n = row["n"]
+        picked = leaf.resolve_tier(n, args.d, args.k, args.metric,
+                                   strategy="auto", crossover=n_star)
+        faster = "bruteforce" if row["bf_s"] <= row["nnd_s"] else "nndescent"
+        auto_rows.append({"n": n, "picked": picked, "faster": faster,
+                          "auto_matches_faster": picked == faster})
+        emit({"bench": "leaf", "n": n, "auto_picked": picked,
+              "matches_faster": picked == faster})
+    results["auto_rows"] = auto_rows
+
+    # ---- pinned crossover exercises BOTH dispatch branches ---------------
+    # (deterministic on every backend, even when the measured n* sits
+    # entirely above or below the swept sizes)
+    mid = sizes[len(sizes) // 2]
+    below = leaf.resolve_tier(mid, args.d, args.k, args.metric,
+                              strategy="auto", crossover=mid)
+    above = leaf.resolve_tier(mid + 1, args.d, args.k, args.metric,
+                              strategy="auto", crossover=mid)
+    results["pinned_demo"] = {"pinned_crossover": mid, "at_pin": below,
+                              "above_pin": above,
+                              "ok": (below, above) == ("bruteforce",
+                                                       "nndescent")}
+    emit({"bench": "leaf", "pinned_crossover": mid, "at_pin": below,
+          "above_pin": above})
+
+    # ---- end-to-end: hierarchy build, auto vs forced NN-Descent ----------
+    data = sift_like(jax.random.key(2), args.e2e_n, args.d)
+    gt = None
+    e2e = {}
+    for strat in ("auto", "nndescent"):
+        cfg = BuildConfig(strategy="hierarchy", k=args.k,
+                          n_subsets=args.e2e_subsets, metric=args.metric,
+                          leaf_strategy=strat,
+                          leaf_crossover=(mid if strat == "auto" else None))
+        GraphBuilder(cfg).build(data)          # compile + warm this arm
+        with Timer() as t:
+            res = GraphBuilder(cfg).build(data)
+        if gt is None:
+            from repro.core.bruteforce import knn_bruteforce
+            gt = knn_bruteforce(data, args.k, metric=args.metric).ids
+        e2e[strat] = {"total_s": round(t.s, 3),
+                      "subgraphs_s": round(res.timings["subgraphs_s"], 3),
+                      "leaf_tiers": res.stats["leaf_tiers"],
+                      "recall": round(float(graph_recall(res.graph, gt,
+                                                         args.k)), 4)}
+        emit({"bench": "leaf", "e2e": strat, **{k: v for k, v in
+                                                e2e[strat].items()
+                                                if k != "leaf_tiers"}})
+    results["e2e"] = e2e
+
+    min_size = results["size_rows"][0]
+    emit({"bench": "leaf", "smallest_n": min_size["n"],
+          "smallest_bf_speedup": min_size["bf_speedup"],
+          "all_auto_match": all(r["auto_matches_faster"]
+                                for r in auto_rows)})
+    write_json(args.out, results)
+
+
+def run(sizes: str = "128,256,512", reps: int = 1):
+    """Entry point for ``benchmarks.run`` (CPU-scale defaults)."""
+    main(["--sizes", sizes, "--reps", str(reps),
+          "--e2e-n", "1024", "--e2e-subsets", "4"])
+
+
+if __name__ == "__main__":
+    main()

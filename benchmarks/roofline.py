@@ -11,13 +11,15 @@ derives MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute
 ratio. Emits markdown (for EXPERIMENTS.md) or CSV.
 
 The k-NN kernel table (printed unconditionally) models HBM bytes and
-FLOPs per call for the two fused kernels at reference shapes, against the
-ridge point PEAK_FLOPS / HBM_BW ≈ 241 flops/byte. The last column shows
-what the fusion buys in traffic: the unfused pipelines additionally move
-the full intermediates (the (G, A, B) distance block / the per-step
-candidate block + merge workspace) through HBM — ~1.6–1.7× the fused
-bytes at these shapes, a direct multiplier on the runtime of kernels
-this far into the memory-bound regime.
+FLOPs per call for the three fused kernels at reference shapes, against
+the ridge point PEAK_FLOPS / HBM_BW ≈ 241 flops/byte. The last column
+shows what the fusion buys in traffic: the unfused pipelines additionally
+move the full intermediates (the (G, A, B) distance block / the per-step
+candidate block + merge workspace / the bruteforce tier's (n, n) distance
+matrix) through HBM — a direct multiplier on the runtime of the
+memory-bound merge kernels, and the reason the bruteforce leaf kernel is
+the one k-NN kernel that lands COMPUTE-bound (Θ(n²·d) flops against
+Θ(n·d) streamed bytes).
 """
 
 from __future__ import annotations
@@ -73,12 +75,34 @@ def beam_expand_model(q=4096, kg=16, E=4, beam=32, d=128):
             "unfused_bytes": bytes_in + bytes_out + unfused_extra}
 
 
+def bruteforce_topk_model(n=4096, d=128, k=16, bt=256):
+    """Fused bruteforce leaf build (kernels/bruteforce_topk.py).
+
+    In: the dataset twice (query blocks + streamed base tiles); out: the
+    (n, k) result rows. The running top-k lives in VMEM scratch, so the
+    (n, n) distance matrix never exists — the unfused pipeline
+    (``pairdist`` + ``top_k``) writes and re-reads exactly that matrix,
+    which dominates its traffic at any realistic n.
+    """
+    W = k + bt
+    bytes_in = 4 * (n * d * 2)                           # queries + base
+    bytes_out = 4 * (n * k * 2)                          # ids + dists
+    flops = (2 * n * n * d                               # MXU cross term
+             + (n // bt + 1) * (2 * n * W * W            # rank-sort blocks
+                                + 2 * n * W * k))        # one-hot place
+    unfused_extra = 2 * 4 * n * n                        # the (n, n) matrix
+    return {"kernel": "bruteforce_topk (leaf tier)",
+            "bytes": bytes_in + bytes_out, "flops": flops,
+            "unfused_bytes": bytes_in + bytes_out + unfused_extra}
+
+
 def knn_kernel_markdown() -> str:
     ridge = PEAK_FLOPS / HBM_BW
     lines = [f"| kernel | MB/call | MFLOP/call | flops/byte "
              f"(ridge {ridge:.0f}) | regime | fused/unfused bytes |",
              "|---|---|---|---|---|---|"]
-    for m in (join_topk_model(), beam_expand_model()):
+    for m in (join_topk_model(), beam_expand_model(),
+              bruteforce_topk_model()):
         inten = m["flops"] / m["bytes"]
         regime = "compute" if inten >= ridge else "memory"
         lines.append(

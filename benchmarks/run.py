@@ -10,6 +10,7 @@ localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
 search     fused/compacted/visited engine arms vs seed scan loop (BENCH json)
 merge      overlapped vs serial spool data plane + fused merge_graphs (BENCH json)
 stream     sustained upsert/delete/query mix over the live index (BENCH json)
+leaf       bruteforce vs NN-Descent leaf tier + crossover dispatch (BENCH json)
 
 ``--only`` selects a subset by name; an unknown name is a HARD error
 (exit 2) — a typo must never silently skip the benchmark it meant.
@@ -30,8 +31,8 @@ def main() -> None:
         if i + 1 >= len(argv):
             raise SystemExit("--only needs a comma-separated name list")
         only = [s.strip() for s in argv[i + 1].split(",") if s.strip()]
-    from benchmarks import (bench_localjoin, bench_merge, bench_search,
-                            bench_stream, fig5_fig6_lambda,
+    from benchmarks import (bench_leaf, bench_localjoin, bench_merge,
+                            bench_search, bench_stream, fig5_fig6_lambda,
                             fig7_subgraph_quality, fig8_merge_vs_baselines,
                             fig9_multiway, fig10_index_search,
                             fig12_build_time, roofline, tab3_distributed)
@@ -42,6 +43,8 @@ def main() -> None:
         ("merge", lambda: bench_merge.run(n=1800 if fast else 3000)),
         ("stream", lambda: bench_stream.run(n=1200 if fast else 1500,
                                             nq=32 if fast else 48)),
+        ("leaf", lambda: bench_leaf.run(
+            sizes="128,256" if fast else "128,256,512")),
         ("fig5/6", lambda: fig5_fig6_lambda.run(
             n=1200 if fast else 2000, lams=(2, 8) if fast else (2, 4, 8, 12))),
         ("fig7", lambda: fig7_subgraph_quality.run(n=1200 if fast else 2000)),

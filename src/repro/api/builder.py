@@ -40,10 +40,11 @@ import jax.numpy as jnp
 from repro.api.config import BuildConfig
 from repro.api.results import BuildResult
 from repro.core.graph import KnnGraph
+from repro.core.leaf import build_leaves
 from repro.core.mergesort import concat_subgraphs
 from repro.core.multiway import multi_way_merge, two_way_hierarchy
-from repro.core.nndescent import build_subgraphs
 from repro.core.twoway import merge_full, two_way_merge
+from repro.faults import retry as _retry_mod
 
 TraceFn = Callable[[KnnGraph, int, dict], None]
 
@@ -85,9 +86,15 @@ class GraphBuilder:
                 f"trace_fn requires a host-side round loop; "
                 f"{cfg.strategy!r} does not have one")
         t_start = time.time()
+        retries0 = _retry_mod.retries_total()
         build_fn = getattr(self, f"_build_{cfg.strategy}")
         graph, stats, timings, extras = build_fn(root, data, sizes, trace_fn)
         stats.setdefault("strategy", cfg.strategy)
+        # uniform fault counters (DESIGN.md §7): retries this build
+        # performed (process-wide odometer delta) and degraded prefetch
+        # pairs (nonzero only for outofcore; 0 = clean data plane)
+        stats["retries"] = _retry_mod.retries_total() - retries0
+        stats.setdefault("degraded_pairs", 0)
         timings["total_s"] = time.time() - t_start
         return BuildResult(graph=graph, data=data, config=cfg, stats=stats,
                            timings=timings, extras=extras)
@@ -96,16 +103,19 @@ class GraphBuilder:
         """``build()`` + diversify: the one-call RAG/serving path."""
         return self.build(data, key=key).to_index()
 
-    # ---- shared stage: per-subset NN-Descent ---------------------------
+    # ---- shared stage: per-subset leaves (tier-dispatched) -------------
 
     def _subgraphs(self, root, data, sizes):
         cfg = self.config
         t0 = time.time()
-        subs = build_subgraphs(jax.random.fold_in(root, 1), data, sizes,
-                               cfg.k, lam=cfg.lam,
-                               max_iters=cfg.subgraph_iters, delta=cfg.delta,
-                               metric=cfg.metric, fused=cfg.fused_localjoin)
-        return subs, time.time() - t0
+        subs, tiers = build_leaves(jax.random.fold_in(root, 1), data, sizes,
+                                   cfg.k, lam=cfg.lam,
+                                   max_iters=cfg.subgraph_iters,
+                                   delta=cfg.delta, metric=cfg.metric,
+                                   fused=cfg.fused_localjoin,
+                                   strategy=cfg.leaf_strategy,
+                                   crossover=cfg.leaf_crossover)
+        return subs, tiers, time.time() - t0
 
     # ---- strategy implementations --------------------------------------
 
@@ -128,9 +138,9 @@ class GraphBuilder:
 
     def _build_flat(self, root, data, sizes, trace_fn, merge_fn):
         cfg = self.config
-        subs, t_sub = self._subgraphs(root, data, sizes)
+        subs, tiers, t_sub = self._subgraphs(root, data, sizes)
         if len(sizes) == 1:          # degenerate m=1: nothing to merge
-            return subs[0], _empty_stats(), _timings(t_sub, 0.0), {}
+            return subs[0], _empty_stats(tiers), _timings(t_sub, 0.0), {}
         g0 = concat_subgraphs(subs)
         wrapped = None
         if trace_fn is not None:
@@ -143,19 +153,21 @@ class GraphBuilder:
                                   fused=cfg.fused_localjoin,
                                   trace_fn=wrapped)
         graph = merge_full(g_cross, g0)
+        stats.setdefault("leaf_tiers", list(tiers))
         return graph, stats, _timings(t_sub, time.time() - t0), {}
 
     def _build_hierarchy(self, root, data, sizes, trace_fn):
         cfg = self.config
-        subs, t_sub = self._subgraphs(root, data, sizes)
+        subs, tiers, t_sub = self._subgraphs(root, data, sizes)
         if len(sizes) == 1:
-            return subs[0], _empty_stats(), _timings(t_sub, 0.0), {}
+            return subs[0], _empty_stats(tiers), _timings(t_sub, 0.0), {}
         t0 = time.time()
         graph, stats = two_way_hierarchy(jax.random.fold_in(root, 2), data,
                                          sizes, subs, lam=cfg.lam, k=cfg.k,
                                          max_iters=cfg.max_iters,
                                          delta=cfg.delta, metric=cfg.metric,
                                          fused=cfg.fused_localjoin)
+        stats.setdefault("leaf_tiers", list(tiers))
         return graph, stats, _timings(t_sub, time.time() - t0), {}
 
     def _build_distributed(self, root, data, sizes, trace_fn):
@@ -169,7 +181,7 @@ class GraphBuilder:
                 f"distributed build over {m} nodes needs {m} devices, have "
                 f"{n_dev}; set XLA_FLAGS=--xla_force_host_platform_device_"
                 f"count={m} before importing jax (or reduce n_subsets)")
-        subs, t_sub = self._subgraphs(root, data, sizes)
+        subs, tiers, t_sub = self._subgraphs(root, data, sizes)
         mesh = make_nodes_mesh(m)
         g_ids = jnp.concatenate([s.ids for s in subs])
         g_dists = jnp.concatenate([s.dists for s in subs])
@@ -186,7 +198,8 @@ class GraphBuilder:
                          flags=jnp.zeros_like(ids, dtype=bool))
         stats: dict[str, Any] = {"nodes": m, "rounds": (m - 1 + 1) // 2,
                                  "inner_iters": cfg.inner_iters,
-                                 "overlap": cfg.overlap}
+                                 "overlap": cfg.overlap,
+                                 "leaf_tiers": list(tiers)}
         extras = {"mesh": mesh, "subgraph_ids": g_ids,
                   "subgraph_dists": g_dists}
         merge_s = time.time() - t0
@@ -215,6 +228,8 @@ class GraphBuilder:
                                   fused=cfg.fused_localjoin,
                                   overlap=cfg.overlap,
                                   prefetch_depth=cfg.prefetch_depth,
+                                  leaf_strategy=cfg.leaf_strategy,
+                                  leaf_crossover=cfg.leaf_crossover,
                                   retry=cfg.retry,
                                   prefetch_timeout_s=cfg.prefetch_timeout_s,
                                   phase_times=phase_times)
@@ -227,8 +242,12 @@ class GraphBuilder:
         return graph, stats, phase_times, extras
 
 
-def _empty_stats() -> dict:
-    return {"updates": [], "evals": [], "iters": 0, "total_evals": 0}
+def _empty_stats(leaf_tiers=None) -> dict:
+    stats: dict[str, Any] = {"updates": [], "evals": [], "iters": 0,
+                             "total_evals": 0}
+    if leaf_tiers is not None:
+        stats["leaf_tiers"] = list(leaf_tiers)
+    return stats
 
 
 def _timings(subgraphs_s: float, merge_s: float) -> dict:

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.leaf import LEAF_STRATEGIES
 from repro.core.metrics import METRICS
 from repro.faults import RetryPolicy
 
@@ -74,6 +75,16 @@ class BuildConfig:
                       prefetched pair before degrading that pair to a
                       synchronous load (``None`` = wait forever). Degraded
                       pairs surface in ``BuildResult.degraded_pairs``.
+      leaf_strategy:  how each per-subset leaf graph is built (DESIGN.md
+                      §8): ``"auto"`` (default) picks exact bruteforce
+                      below the measured crossover and NN-Descent above
+                      it; ``"bruteforce"`` / ``"nndescent"`` force a tier.
+                      The NN-Descent tier is bit-identical to the
+                      pre-tier builds.
+      leaf_crossover: pin the auto tier's crossover size explicitly
+                      (leaves with ``n <= leaf_crossover`` go bruteforce)
+                      instead of the one-shot measured probe — the
+                      production knob for reproducible tier plans.
     """
 
     strategy: str = "twoway"
@@ -97,6 +108,8 @@ class BuildConfig:
     compact_threshold: int | None = None
     retry: RetryPolicy | None = RetryPolicy()
     prefetch_timeout_s: float | None = None
+    leaf_strategy: str = "auto"
+    leaf_crossover: int | None = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -136,6 +149,12 @@ class BuildConfig:
         if self.prefetch_timeout_s is not None and self.prefetch_timeout_s <= 0:
             raise ValueError(f"prefetch_timeout_s must be > 0, got "
                              f"{self.prefetch_timeout_s}")
+        if self.leaf_strategy not in LEAF_STRATEGIES:
+            raise ValueError(f"unknown leaf_strategy {self.leaf_strategy!r}; "
+                             f"expected one of {LEAF_STRATEGIES}")
+        if self.leaf_crossover is not None and self.leaf_crossover < 1:
+            raise ValueError(f"leaf_crossover must be >= 1, got "
+                             f"{self.leaf_crossover}")
 
     def partition_sizes(self, n: int) -> tuple[int, ...]:
         """Per-subset sizes for an ``n``-vector dataset.

@@ -58,12 +58,21 @@ class BuildResult:
         overlap was lost for those pairs (DESIGN.md §7)."""
         return int(self.timings.get("merge_degraded_pairs", 0))
 
-    def recall(self, gt_ids=None, at: int = 10) -> float:
-        """Recall@``at``; computes the brute-force oracle when not given."""
+    def recall(self, gt_ids=None, at: int = 10, *,
+               block: int = 1024) -> float:
+        """Recall@``at``; computes the brute-force oracle when not given.
+
+        ``block`` tiles the oracle's query dimension (forwarded to
+        ``knn_bruteforce``) — raise it on large ``n`` so the ground-truth
+        pass amortizes its per-block dispatch instead of silently running
+        at the 1024 default.
+        """
         if gt_ids is None:
             from repro.core.bruteforce import knn_bruteforce
             gt_ids = knn_bruteforce(jnp.asarray(self.data),
-                                    max(at, self.config.k)).ids
+                                    max(at, self.config.k),
+                                    metric=self.config.metric,
+                                    block=block).ids
         return float(graph_recall(self.graph, gt_ids, at))
 
     def diversify(self, alpha: float | None = None,

@@ -1,0 +1,168 @@
+"""Leaf-tier dispatch: exact bruteforce vs NN-Descent per subgraph.
+
+Wang & Zhao (*Large-Scale Approximate k-NN Graph Construction on GPU*,
+PAPERS.md) observe that exact on-device bruteforce beats iterative
+NN-Descent below a crossover size — and the paper's merge procedure
+(Alg. 2/3) never looks at HOW a leaf was built. This module is the single
+leaf-builder code path under every merge backend (``build_subgraphs``,
+the out-of-core stage-1 loop, and through them the distributed path):
+each leaf picks a tier and the merge stage sees only a valid
+:class:`KnnGraph`.
+
+Cost model (DESIGN.md §8): bruteforce is Θ(n²·d) exactly; NN-Descent's
+empirical cost is ∝ n^1.14 per the paper's measured scaling. One timed
+probe at a fixed size calibrates both constants, and the crossover
+
+    n* = n₀ · (t_nnd(n₀) / t_bf(n₀)) ^ (1 / (2 − 1.14))
+
+is cached per (d, k, metric, backend). Determinism: leaves at or below
+:data:`SURE_FLOOR` pick bruteforce WITHOUT probing — at those sizes
+bruteforce wins on every backend by a wide margin, and the rule keeps
+tier selection bit-reproducible across processes (the out-of-core
+kill-and-resume pins rely on it; a timing probe could flip near the
+crossover). Probes only ever run for leaves above the floor, and an
+explicit ``crossover`` (``BuildConfig.leaf_crossover``) pins the decision
+entirely.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import KnnGraph
+from repro.kernels import ops as kops
+
+#: selectable via ``BuildConfig.leaf_strategy``
+LEAF_STRATEGIES = ("auto", "bruteforce", "nndescent")
+
+#: leaves at or below this size always take the bruteforce tier under
+#: ``auto`` — no probe, no timing dependence (see module docstring)
+SURE_FLOOR = 2048
+
+#: the paper's measured NN-Descent scaling exponent (§empirical cost)
+NND_EXPONENT = 1.14
+
+#: probe size for the measured crossover (above SURE_FLOOR is pointless —
+#: the floor already decided those; well below keeps the probe cheap)
+PROBE_N = 1024
+
+_CROSSOVER_CACHE: dict[tuple, int] = {}
+
+
+def clear_crossover_cache() -> None:
+    _CROSSOVER_CACHE.clear()
+
+
+def measure_crossover(d: int, k: int, metric: str = "l2", *,
+                      probe_n: int = PROBE_N, lam: int | None = None,
+                      fused: bool = True) -> int:
+    """Measured bruteforce/NN-Descent crossover size for (d, k, metric).
+
+    Times both tiers once on synthetic data at ``probe_n`` and
+    extrapolates by the power laws above. Cached per
+    (d, k, metric, backend) — ONE probe per configuration per process.
+    """
+    cache_key = (d, k, metric, jax.default_backend())
+    hit = _CROSSOVER_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    from repro.core.nndescent import nn_descent
+    key = jax.random.key(0)
+    data = jax.random.normal(key, (probe_n, d), jnp.float32)
+
+    def t_bf():
+        ids, _ = kops.bruteforce_topk(data, k, metric=metric)
+        ids.block_until_ready()
+
+    def t_nnd():
+        g, _ = nn_descent(key, data, k, lam=lam, metric=metric, fused=fused)
+        g.ids.block_until_ready()
+
+    t_bf()                                   # compile + warm both tiers
+    t_nnd()
+    t0 = time.perf_counter()
+    t_bf()
+    bf_s = max(time.perf_counter() - t0, 1e-9)
+    t0 = time.perf_counter()
+    t_nnd()
+    nnd_s = max(time.perf_counter() - t0, 1e-9)
+    n_star = int(probe_n * (nnd_s / bf_s) ** (1.0 / (2.0 - NND_EXPONENT)))
+    n_star = max(n_star, SURE_FLOOR)         # the floor is a lower bound
+    _CROSSOVER_CACHE[cache_key] = n_star
+    return n_star
+
+
+def resolve_tier(n: int, d: int, k: int, metric: str = "l2", *,
+                 strategy: str = "auto", crossover: int | None = None) -> str:
+    """Which tier builds an ``n``-vector leaf; see the module docstring."""
+    if strategy not in LEAF_STRATEGIES:
+        raise ValueError(f"unknown leaf strategy {strategy!r}; "
+                         f"expected one of {LEAF_STRATEGIES}")
+    if strategy != "auto":
+        return strategy
+    if k > n - 1:                # an exact build cannot fill k rows
+        return "nndescent"
+    if crossover is not None:
+        return "bruteforce" if n <= crossover else "nndescent"
+    if n <= SURE_FLOOR:
+        return "bruteforce"
+    return ("bruteforce" if n <= measure_crossover(d, k, metric)
+            else "nndescent")
+
+
+def build_leaf(key: jax.Array, data: jax.Array, k: int, *,
+               lam: int | None = None, max_iters: int = 30,
+               delta: float = 0.001, metric: str = "l2", fused: bool = True,
+               strategy: str = "auto", crossover: int | None = None):
+    """Build one leaf graph; returns ``(KnnGraph, tier)``.
+
+    The bruteforce tier routes through ``kops.bruteforce_topk`` (Pallas on
+    TPU, the ``knn_bruteforce``-bit-identical oracle elsewhere) and comes
+    back with ``flags=False`` — safe because the merge stage reads only
+    ids/dists (the cross graph starts empty and seeds its own first
+    round). The NN-Descent tier is exactly the legacy
+    :func:`repro.core.nndescent.nn_descent` call, same key, so existing
+    builds are bit-identical when it is selected.
+    """
+    n, d = data.shape
+    tier = resolve_tier(n, d, k, metric, strategy=strategy,
+                        crossover=crossover)
+    if tier == "bruteforce":
+        if k > n - 1:
+            raise ValueError(
+                f"bruteforce leaf tier needs k <= n - 1 (exact build): "
+                f"k={k}, n={n}; use leaf_strategy='nndescent'")
+        ids, dists = kops.bruteforce_topk(data, k, metric=metric)
+        return KnnGraph(ids=ids, dists=dists,
+                        flags=jnp.zeros_like(ids, dtype=bool)), tier
+    from repro.core.nndescent import nn_descent
+    g, _ = nn_descent(key, data, k, lam=lam, max_iters=max_iters,
+                      delta=delta, metric=metric, fused=fused)
+    return g, tier
+
+
+def build_leaves(key: jax.Array, data: jax.Array, sizes, k: int, *,
+                 lam: int | None = None, max_iters: int = 30,
+                 delta: float = 0.001, metric: str = "l2",
+                 fused: bool = True, strategy: str = "auto",
+                 crossover: int | None = None):
+    """Per-contiguous-subset leaves; returns ``(graphs, tiers)``.
+
+    Key folding matches the legacy ``build_subgraphs`` exactly
+    (``fold_in(key, i)`` per subset), so any leaf that takes the
+    NN-Descent tier is bit-identical to the pre-dispatcher build.
+    """
+    gs, tiers, offset = [], [], 0
+    for i, s in enumerate(sizes):
+        sub = jax.lax.dynamic_slice_in_dim(data, offset, s, axis=0)
+        g, tier = build_leaf(jax.random.fold_in(key, i), sub, k, lam=lam,
+                             max_iters=max_iters, delta=delta, metric=metric,
+                             fused=fused, strategy=strategy,
+                             crossover=crossover)
+        gs.append(g)
+        tiers.append(tier)
+        offset += s
+    return gs, tiers

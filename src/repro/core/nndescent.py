@@ -76,14 +76,17 @@ def nn_descent(key: jax.Array, data: jax.Array, k: int, *, lam: int | None = Non
 def build_subgraphs(key: jax.Array, data: jax.Array, sizes, k: int, *,
                     lam: int | None = None, max_iters: int = 30,
                     delta: float = 0.001, metric: str = "l2",
-                    fused: bool = True):
-    """NN-Descent per contiguous subset — the merge experiments' input."""
-    gs, offset = [], 0
-    for i, s in enumerate(sizes):
-        sub = jax.lax.dynamic_slice_in_dim(data, offset, s, axis=0)
-        g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
-                          max_iters=max_iters, delta=delta, metric=metric,
-                          fused=fused)
-        gs.append(g)
-        offset += s
+                    fused: bool = True, leaf_strategy: str = "auto",
+                    leaf_crossover: int | None = None):
+    """Per-contiguous-subset leaves — the merge experiments' input.
+
+    Routed through the :mod:`repro.core.leaf` tier dispatcher (exact
+    bruteforce below the crossover, NN-Descent above — see DESIGN.md §8);
+    ``leaf_strategy='nndescent'`` forces the legacy bit-identical path.
+    Key folding is unchanged (``fold_in(key, i)`` per subset).
+    """
+    from repro.core.leaf import build_leaves
+    gs, _ = build_leaves(key, data, sizes, k, lam=lam, max_iters=max_iters,
+                         delta=delta, metric=metric, fused=fused,
+                         strategy=leaf_strategy, crossover=leaf_crossover)
     return gs

@@ -56,7 +56,6 @@ import numpy as np
 from repro.core.distributed import pair_two_way_fixed
 from repro.core.graph import INVALID_ID, KnnGraph
 from repro.core.mergesort import merge_graphs
-from repro.core.nndescent import nn_descent
 from repro.core.sampling import support_graph
 from repro.faults import RetryPolicy, fault_point
 
@@ -466,8 +465,10 @@ def _scrub_spool(spool: Spool, man: dict, m: int,
     """Resume-time self-heal: drop manifest entries whose durable blocks
     are missing or corrupt (``verify`` quarantines as a side effect).
 
-    A lost ``g{i}``/``v{i}`` re-runs that subset's (deterministic)
-    NN-Descent; a lost ``full{a}`` drops every pair touching ``a`` so
+    A lost ``g{i}``/``v{i}`` re-runs that subset's (deterministic) leaf
+    build — same tier, same key, so the healed leaf is bit-identical
+    (tier selection is size-deterministic, see ``leaf.SURE_FLOOR``);
+    a lost ``full{a}`` drops every pair touching ``a`` so
     the schedule re-merges them — ``merge_graphs`` is idempotent and the
     pair order is unchanged, so the healed build is bit-identical to an
     uninterrupted one (pinned by tests/test_faults.py). A fresh build
@@ -505,6 +506,8 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
                       metric: str = "l2", fused: bool = True,
                       overlap: bool = True, prefetch_depth: int = 2,
                       spool_vectors: bool = False,
+                      leaf_strategy: str = "auto",
+                      leaf_crossover: int | None = None,
                       retry: RetryPolicy | None = None,
                       prefetch_timeout_s: float | None = None,
                       phase_times: dict | None = None) -> KnnGraph:
@@ -524,6 +527,13 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
     the mode for datasets whose vectors are not addressable as one array
     during the merge stage.
 
+    ``leaf_strategy`` / ``leaf_crossover`` pick the stage-1 leaf tier per
+    subset (exact bruteforce below the crossover vs NN-Descent — the same
+    :mod:`repro.core.leaf` dispatcher ``build_subgraphs`` uses, so there
+    is exactly one leaf-builder code path). Tier selection is
+    deterministic at any fixed size (see ``leaf.SURE_FLOOR``), which the
+    kill-and-resume bit-identity pins rely on.
+
     ``retry`` bounds transient-``OSError`` retries on the spool and the
     write-behind lane (installed on ``spool`` if it has none);
     ``prefetch_timeout_s`` bounds how long the merge loop waits for a
@@ -542,14 +552,18 @@ def build_out_of_core(key: jax.Array, spool: Spool, data: np.ndarray,
     man = _scrub_spool(spool, spool.manifest(), m, spool_vectors)
     t0 = time.monotonic()
 
-    # ---- stage 1: per-subset subgraphs, one at a time ------------------
+    # ---- stage 1: per-subset leaves, one at a time ---------------------
+    # One leaf-builder code path: the same tier dispatcher build_subgraphs
+    # uses, with the same fold_in(key, i) folding this loop always had.
+    from repro.core.leaf import build_leaf
     for i in range(m):
         if (i in man["subgraphs_done"] and spool.has(f"g{i}")
                 and (not spool_vectors or spool.has(f"v{i}"))):
             continue
         sub = jnp.asarray(data[starts[i]:starts[i] + sizes[i]])
-        g, _ = nn_descent(jax.random.fold_in(key, i), sub, k, lam=lam,
-                          max_iters=nnd_iters, metric=metric, fused=fused)
+        g, _ = build_leaf(jax.random.fold_in(key, i), sub, k, lam=lam,
+                          max_iters=nnd_iters, metric=metric, fused=fused,
+                          strategy=leaf_strategy, crossover=leaf_crossover)
         s_ids = support_graph(g, lam)
         spool.put(f"g{i}", ids=g.ids, dists=g.dists, s=s_ids)
         if spool_vectors:

@@ -15,8 +15,28 @@ wall-clock-shape included. All elapsed math is ``time.monotonic``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import zlib
+
+# process-wide retry odometer: every retry ANY RetryPolicy performs bumps
+# it (spool, write-behind, compaction fold, …). Monotonic, never reset —
+# consumers snapshot before/after a build (GraphBuilder surfaces the delta
+# as stats["retries"]) so concurrent builds each see their own window.
+_RETRIES_LOCK = threading.Lock()
+_RETRIES_TOTAL = 0
+
+
+def retries_total() -> int:
+    """Process-wide count of retries performed so far (monotonic)."""
+    with _RETRIES_LOCK:
+        return _RETRIES_TOTAL
+
+
+def _note_retry() -> None:
+    global _RETRIES_TOTAL
+    with _RETRIES_LOCK:
+        _RETRIES_TOTAL += 1
 
 
 def _unit(seed: int, tag: str, attempt: int) -> float:
@@ -91,6 +111,7 @@ class RetryPolicy:
                 d = self.delay_s(site, attempt)
                 if deadline is not None and time.monotonic() + d > deadline:
                     raise
+                _note_retry()
                 if on_retry is not None:
                     on_retry(site, attempt, e)
                 time.sleep(d)

@@ -1,0 +1,189 @@
+"""Roofline-driven block-size autotune for the k-NN Pallas kernels.
+
+Each fused kernel (``join_topk``, ``beam_expand``, ``bruteforce_topk``)
+tiles its grid by a block height derived from an analytic VMEM budget —
+the roofline model's optimum (``benchmarks/roofline.py`` documents the
+byte/FLOP accounting the budgets come from). The analytic number is the
+right ORDER of magnitude but the true winner depends on how the compiler
+schedules the double-buffered DMA against the MXU, which only a
+measurement can see. This module sweeps a small candidate ladder around
+the analytic optimum ({opt/4, opt/2, opt, 2·opt, 4·opt}, clipped and
+deduped), times real kernel calls on synthetic operands (median-of-min
+after a warmup), and caches the winner per (kernel, shape-bucket, dtype,
+platform).
+
+Bit-parity-safe BY CONSTRUCTION: the block height only tiles a fixed
+per-row computation (every kernel pads and slices back), so any block ≥ 1
+selects the same winners; and every candidate this module emits is
+SUBLANE-ALIGNED (a multiple of 8), which keeps the lowered per-row
+arithmetic identical across candidates too — a degenerate height (e.g. 1)
+can lower a kernel's matmul to a different reduction and drift distances
+by ~1 ulp, so unaligned heights are never swept. Aligned-block
+bit-identity is pinned by tests/test_leaf.py. That is why the sweep needs
+no correctness check and why a cached winner can be adopted without
+revalidation.
+
+Resolution happens in the PUBLIC kernel wrappers (outside their jitted
+impls) so a tuned block is picked up on the next call instead of being
+frozen into a stale jit cache. Shapes are bucketed to the next power of
+two so one measurement serves a family of nearby shapes. Sweeps only run
+on TPU (``REPRO_AUTOTUNE=0`` disables them); elsewhere ``lookup`` returns
+the analytic default — CPU runs the jnp oracles anyway, and interpreter
+timings would be noise. ``record`` lets tests and offline sweeps inject
+winners on any backend.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable
+
+import jax
+
+_CACHE: dict[tuple, int] = {}
+_LOCK = threading.Lock()
+
+#: sweep ladder around the analytic optimum
+LADDER = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+
+def enabled() -> bool:
+    """Measured sweeps armed? TPU only, ``REPRO_AUTOTUNE=0`` to disable."""
+    if os.environ.get("REPRO_AUTOTUNE", "1") in ("0", "false", "False"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def bucket(x: int) -> int:
+    """Next power of two ≥ x (≥ 1): the shape-family key."""
+    x = max(1, int(x))
+    return 1 << (x - 1).bit_length()
+
+
+def _key(kernel: str, shape: tuple, dtype: str = "float32") -> tuple:
+    return (kernel, tuple(bucket(int(s)) for s in shape), dtype,
+            jax.default_backend())
+
+
+def clear_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+
+
+def record(kernel: str, shape: tuple, block: int,
+           dtype: str = "float32") -> None:
+    """Pin a winner (tests / offline sweeps); same key as :func:`lookup`."""
+    with _LOCK:
+        _CACHE[_key(kernel, shape, dtype)] = int(block)
+
+
+def lookup(kernel: str, shape: tuple, default: int,
+           dtype: str = "float32") -> int:
+    """Resolved block for ``kernel`` at ``shape``: cached winner, else a
+    measured sweep (TPU, first call per shape bucket), else ``default``
+    (the analytic optimum the caller computed)."""
+    key = _key(kernel, shape, dtype)
+    with _LOCK:
+        hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    if not enabled():
+        return default
+    tuner = _TUNERS.get(kernel)
+    if tuner is None:
+        return default
+    try:
+        win = tuner(shape, default)
+    except Exception:                                  # noqa: BLE001
+        win = default                # a failed sweep must never fail a build
+    with _LOCK:
+        _CACHE[key] = win
+    return win
+
+
+def candidates(opt: int, lo: int = 8, hi: int | None = None) -> list[int]:
+    """The sweep ladder around ``opt``, sublane-aligned (multiples of 8 —
+    see the module docstring for why), clipped to [lo, hi] and deduped."""
+    out = []
+    for f in LADDER:
+        c = max(lo, int(opt * f) // 8 * 8)
+        if hi is not None:
+            c = min(c, hi)
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def sweep(fn: Callable[[int], jax.Array], cands: list[int],
+          repeats: int = 3) -> int:
+    """Time ``fn(block)`` for each candidate; min-of-``repeats`` after one
+    warmup (compile) call. Returns the fastest block."""
+    best, best_t = cands[0], float("inf")
+    for c in cands:
+        fn(c).block_until_ready()                      # compile + warm
+        t = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(c).block_until_ready()
+            t = min(t, time.perf_counter() - t0)
+        if t < best_t:
+            best, best_t = c, t
+    return best
+
+
+# ---- per-kernel measured sweeps (synthetic operands at the bucketed
+# shape; run once per shape family, TPU only) -------------------------------
+
+def _tune_bruteforce(shape: tuple, default: int) -> int:
+    n, d, k = (bucket(int(s)) for s in shape)
+    from repro.kernels.bruteforce_topk import bruteforce_topk_pallas
+    data = jax.random.normal(jax.random.key(0), (n, d), jax.numpy.float32)
+
+    def fn(c):
+        return bruteforce_topk_pallas(data, k, block=c)[0]
+
+    return sweep(fn, candidates(default, hi=n))
+
+
+def _tune_join_topk(shape: tuple, default: int) -> int:
+    G, A, B, d, cap = (bucket(int(s)) for s in shape)
+    from repro.kernels.join_topk import join_topk_pallas
+    key = jax.random.key(0)
+    va = jax.random.normal(key, (G, A, d), jax.numpy.float32)
+    vb = jax.random.normal(jax.random.fold_in(key, 1), (G, B, d),
+                           jax.numpy.float32)
+    aid = jax.numpy.tile(jax.numpy.arange(A, dtype=jax.numpy.int32), (G, 1))
+    bid = aid[:, :B] + A
+
+    def fn(c):
+        return join_topk_pallas(va, vb, aid, bid, cap, block=c)[0]
+
+    return sweep(fn, candidates(default, hi=G))
+
+
+def _tune_beam_expand(shape: tuple, default: int) -> int:
+    nq, C, d, beam = (bucket(int(s)) for s in shape[:4])
+    from repro.kernels.beam_expand import beam_expand_pallas
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (nq, d), jax.numpy.float32)
+    nv = jax.random.normal(jax.random.fold_in(key, 1), (nq, C, d),
+                           jax.numpy.float32)
+    nid = jax.numpy.tile(jax.numpy.arange(C, dtype=jax.numpy.int32), (nq, 1))
+    bid = jax.numpy.tile(
+        C + jax.numpy.arange(beam, dtype=jax.numpy.int32), (nq, 1))
+    bd = jax.numpy.ones((nq, beam), jax.numpy.float32).cumsum(axis=1)
+    exp = jax.numpy.zeros((nq, beam), bool)
+
+    def fn(c):
+        return beam_expand_pallas(q, nv, nid, bid, bd, exp, block=c)[0]
+
+    return sweep(fn, candidates(default, hi=nq))
+
+
+_TUNERS: dict[str, Callable[[tuple, int], int]] = {
+    "bruteforce_topk": _tune_bruteforce,
+    "join_topk": _tune_join_topk,
+    "beam_expand": _tune_beam_expand,
+}

@@ -165,10 +165,33 @@ def _kernel(q_ref, nv_ref, nid_ref, bid_ref, bd_ref, bexp_ref, *refs,
     oexp_ref[...] = ff
 
 
+def default_block(nq: int, C: int, d: int, beam: int, n_words: int = 0,
+                  tomb: bool = False) -> int:
+    """Analytic query-block height from the 8 MiB VMEM budget.
+
+    VMEM per query (padded dims): operands + dup masks + the (W, W) rank
+    block and the (W, beam) one-hot (dominant) + beam state and outputs,
+    plus the bloom / tombstone planes when threaded. The autotuner
+    (``kernels/autotune.py``) sweeps around this.
+    """
+    dp, Cp = (-d) % 128, (-C) % 8
+    C2, d2 = C + Cp, d + dp
+    W = beam + C2
+    per_q = ((C2 + 1) * d2 + C2 * (beam + C2) + W * W + 2 * W * beam
+             + 6 * beam + 2 * C2)
+    if tomb:
+        per_q += C2
+    if n_words:
+        wpad = (-n_words) % 128
+        per_q += (2 * C2 * (n_words + wpad) + 2 * 32 * (n_words + wpad)
+                  + 4 * 32 * C2)
+    return max(1, min(nq, (8 << 20) // max(4 * per_q, 1)))
+
+
 def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                       expanded, visited=None, tombstones=None, *,
                       metric: str, distinct_cands: bool = False,
-                      interpret: bool = False):
+                      block: int | None = None, interpret: bool = False):
     """(q, d) × gathered (q, C, d) candidates → merged (q, beam) state."""
     nq, beam = beam_ids.shape
     C, d = nbr_vecs.shape[1], nbr_vecs.shape[2]
@@ -179,23 +202,16 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     nbr_vecs = jnp.pad(nbr_vecs, ((0, 0), (0, Cp), (0, dp)))
     nbr_ids = jnp.pad(nbr_ids, ((0, 0), (0, Cp)), constant_values=INVALID_ID)
     C2, d2 = C + Cp, d + dp
-    W = beam + C2
-    # VMEM per query: operands + dup masks + the (W, W) rank block and the
-    # (W, beam) one-hot (dominant) + beam state and outputs, 4 B words.
-    per_q = ((C2 + 1) * d2 + C2 * (beam + C2) + W * W + 2 * W * beam
-             + 6 * beam + 2 * C2)
-    if tombstones is not None:
-        per_q += C2                            # the pre-gathered dead mask
     n_bits, n_words, wpad = 0, 0, 0
     if visited is not None:
         n_words = visited.shape[1]
         n_bits = n_words * 32                  # probes use the REAL width
         wpad = (-n_words) % 128                # lane padding, unaddressed
         visited = jnp.pad(visited, ((0, 0), (0, wpad)))
-        # one-hot word plane + unpacked plane bits + probe workspace
-        per_q += (2 * C2 * (n_words + wpad) + 2 * 32 * (n_words + wpad)
-                  + 4 * 32 * C2)
-    bq = max(1, min(nq, (8 << 20) // max(4 * per_q, 1)))
+    if block is None:                          # VMEM-budget default
+        block = default_block(nq, C, d, beam, n_words,
+                              tombstones is not None)
+    bq = max(1, min(nq, block))
     qpad = (-nq) % bq
     queries = jnp.pad(queries, ((0, qpad), (0, 0)))
     nbr_vecs = jnp.pad(nbr_vecs, ((0, qpad), (0, 0), (0, 0)))
@@ -260,13 +276,15 @@ def _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
 
 
 _beam_expand_jit = jax.jit(_beam_expand_impl,
-                           static_argnames=("metric", "distinct_cands"))
+                           static_argnames=("metric", "distinct_cands",
+                                            "block"))
 
 
 def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
                        expanded, *, metric: str = "l2",
                        distinct_cands: bool = False, visited=None,
-                       tombstones=None, interpret: bool = False):
+                       tombstones=None, block: int | None = None,
+                       interpret: bool = False):
     """Fused beam-expansion step; see the module docstring.
 
     ``distinct_cands`` asserts the candidate block has duplicate-free ids
@@ -277,16 +295,33 @@ def beam_expand_pallas(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists,
     as the oracle). ``tombstones`` threads the shared (n_words,) uint32
     validity plane (streaming deletes): dead candidates are masked like
     -1 padding before the cross term is used, excluded from ``n_evals``
-    and never recorded in the bloom plane. interpret=True runs the kernel
-    body eagerly (CPU validation path) — NOT under jit: compiling the
-    interpreter loop is pathologically slow (see pairdist).
+    and never recorded in the bloom plane. ``block`` is the query-block
+    height (``None`` → autotuned / analytic default, resolved here outside
+    the jit so tuning is never frozen into a stale cache); it only tiles
+    the grid, and across the autotuner's sublane-aligned candidates the
+    output is bit-identical (see ``kernels/autotune.py``).
+    interpret=True runs the
+    kernel body eagerly (CPU validation path) — NOT under jit: compiling
+    the interpreter loop is pathologically slow (see pairdist).
     """
+    if block is None:
+        nq, beam = beam_ids.shape
+        C, d = nbr_vecs.shape[1], nbr_vecs.shape[2]
+        n_words = 0 if visited is None else visited.shape[1]
+        from repro.kernels import autotune
+        # the plane widths change the VMEM budget, so they key the cache
+        block = autotune.lookup(
+            "beam_expand", (nq, C, d, beam, n_words + 1,
+                            2 if tombstones is not None else 1),
+            default=default_block(nq, C, d, beam, n_words,
+                                  tombstones is not None))
     if interpret:
         return _beam_expand_impl(queries, nbr_vecs, nbr_ids, beam_ids,
                                  beam_dists, expanded, visited, tombstones,
                                  metric=metric,
                                  distinct_cands=distinct_cands,
-                                 interpret=True)
+                                 block=block, interpret=True)
     return _beam_expand_jit(queries, nbr_vecs, nbr_ids, beam_ids,
                             beam_dists, expanded, visited, tombstones,
-                            metric=metric, distinct_cands=distinct_cands)
+                            metric=metric, distinct_cands=distinct_cands,
+                            block=block)

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: fused exact bruteforce k-NN builder (leaf tier).
+
+The leaf tier's hot loop (DESIGN.md §8): below the NN-Descent crossover an
+exact all-pairs build is strictly faster — but a naive ``pairdist`` +
+``top_k`` pipeline materializes the (n, n) distance block in HBM, which is
+exactly the traffic the fused merge kernels were built to kill. This kernel
+streams the base set through VMEM instead: grid (query blocks × base tiles)
+with the base-tile dimension innermost, each step puts one (bq, bt) distance
+block on the MXU and immediately folds it into a running per-query top-k
+carried in VMEM scratch via the same stable rank sort ``join_topk`` uses
+(``rank_topc_multi``). Only the final (n, k) rows ever reach HBM — the
+(n, n) matrix never exists, and there is no iteration (one pass over the
+base set per query block).
+
+Tie/order contract: running slots precede the tile slots in the merge
+concat and tiles are visited in ascending base order, so ties resolve to
+the LOWER GLOBAL INDEX — exactly ``lax.top_k``'s contract, which is what
+the oracle (``ref.bruteforce_topk``) and ``core.bruteforce.knn_bruteforce``
+use. Ids therefore match the oracle exactly; distances may differ by ~1 ulp
+where the per-tile matmul reduction reorders the d-padding, the same
+caveat as ``join_topk``.
+
+``block`` (the query-block height bq) is the autotune knob
+(``kernels/autotune.py``): it tiles a fixed per-query computation, so any
+value ≥ 1 returns exact ids. Distances are additionally bit-identical
+across SUBLANE-ALIGNED blocks (multiples of 8): a degenerate height can
+lower the cross matmul to a different reduction and drift the float sums
+by ~1 ulp, so the default heuristic and the autotuner's candidate ladder
+only ever produce aligned heights — the safety property the sweep relies
+on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.graph import INVALID_ID
+from repro.kernels.topk_merge import rank_topc_multi
+
+#: base-tile width (the streamed dimension); lane-aligned, never tuned —
+#: widening it only grows the (k+bt)² rank block quadratically.
+BASE_TILE = 256
+
+
+def _kernel(q_ref, b_ref, oid_ref, od_ref, ids_ref, d_ref, *,
+            k, n, bq, bt, nb, exclude_self, metric):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ids_ref[...] = jnp.full_like(ids_ref, INVALID_ID)
+        d_ref[...] = jnp.full_like(d_ref, jnp.inf)
+
+    q = q_ref[...]                                     # (bq, d2)
+    b = b_ref[...]                                     # (bt, d2)
+    if metric == "cos":
+        q = q / jnp.maximum(
+            jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True)), 1e-12)
+        b = b / jnp.maximum(
+            jnp.sqrt(jnp.sum(b * b, axis=-1, keepdims=True)), 1e-12)
+    cross = jax.lax.dot_general(
+        q, b, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (bq, bt) on the MXU
+    if metric == "ip":
+        dm = -cross
+    elif metric == "cos":
+        dm = 1.0 - cross
+    else:                                              # squared L2
+        qn = jnp.sum(q * q, axis=-1)
+        bn = jnp.sum(b * b, axis=-1)
+        dm = jnp.maximum(qn[:, None] + bn[None, :] - 2.0 * cross, 0.0)
+    i = pl.program_id(0)
+    col = j * bt + jax.lax.broadcasted_iota(jnp.int32, (bq, bt), 1)
+    ok = col < n                                       # base padding is dead
+    if exclude_self:
+        row = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bt), 0)
+        ok &= col != row
+    dm = jnp.where(ok, dm, jnp.inf)
+    cid = jnp.where(ok, col, INVALID_ID)
+    # fold the tile into the running top-k: running slots FIRST so ties go
+    # to the lower global index (earlier tiles), matching lax.top_k
+    keys = jnp.concatenate([d_ref[...], dm], axis=-1)  # (bq, k + bt)
+    vals = jnp.concatenate([ids_ref[...], cid], axis=-1)
+    kk, (ii,) = rank_topc_multi(keys, ((vals, INVALID_ID),), k)
+    ids_ref[...] = ii
+    d_ref[...] = kk
+
+    @pl.when(j == nb - 1)
+    def _done():
+        oid_ref[...] = ids_ref[...]
+        od_ref[...] = d_ref[...]
+
+
+def _bruteforce_impl(data, *, k: int, metric: str, exclude_self: bool,
+                     block: int, interpret: bool = False):
+    """(n, d) → (ids (n, k), dists (n, k)); see the module docstring."""
+    n, d = data.shape
+    data = data.astype(jnp.float32)
+    bt = min(BASE_TILE, max(8, n + (-n) % 8))
+    dp = (-d) % 128
+    base = jnp.pad(data, ((0, (-n) % bt), (0, dp)))
+    d2 = d + dp
+    bq = max(1, min(n, block))
+    qpad = (-n) % bq
+    queries = jnp.pad(base[:n], ((0, qpad), (0, 0)))
+    nq2 = n + qpad
+    nb = base.shape[0] // bt
+    kern = functools.partial(_kernel, k=k, n=n, bq=bq, bt=bt, nb=nb,
+                             exclude_self=exclude_self, metric=metric)
+    oid, od = pl.pallas_call(
+        kern,
+        grid=(nq2 // bq, nb),
+        in_specs=[
+            pl.BlockSpec((bq, d2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d2), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq2, k), jnp.int32),
+            jax.ShapeDtypeStruct((nq2, k), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.int32),
+            pltpu.VMEM((bq, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, base)
+    return oid[:n], od[:n]
+
+
+_bruteforce_jit = jax.jit(
+    _bruteforce_impl,
+    static_argnames=("k", "metric", "exclude_self", "block"))
+
+
+def default_block(n: int, d: int, k: int) -> int:
+    """Heuristic query-block height from the usual 8 MiB VMEM budget.
+
+    Per query row: the operand row, the running state, the merge concat
+    and the (W, W) rank block + (W, k) one-hot behind ``rank_topc_multi``
+    (the dominant term), W = k + BASE_TILE, 4 B words. The base tile
+    itself is shared across the block and small next to the budget.
+    """
+    d2 = d + (-d) % 128
+    W = k + BASE_TILE
+    per_q = 4 * (d2 + 4 * k + 2 * W + W * W + 2 * W * k)
+    bq = min(n + (-n) % 8, (8 << 20) // max(per_q, 1))
+    return max(8, bq // 8 * 8)                  # sublane-aligned, ≥ 8
+
+
+def bruteforce_topk_pallas(data, k: int, *, metric: str = "l2",
+                           exclude_self: bool = True, block: int | None = None,
+                           interpret: bool = False):
+    """Fused exact k-NN build; see the module docstring.
+
+    ``block`` is the query-block height (``None`` → autotuned / heuristic
+    default — resolved HERE, outside the jitted impl, so a later autotune
+    result is never frozen into a stale jit cache). Requires
+    ``k <= n - exclude_self`` (an exact build cannot return more real
+    neighbors than exist; the oracle would pad such rows with whatever
+    +inf column ``top_k`` grabs first, a contract not worth mirroring).
+    interpret=True runs the kernel body eagerly (CPU validation path) —
+    NOT under jit: compiling the interpreter loop is pathologically slow
+    (see pairdist).
+    """
+    n, d = data.shape
+    if k > n - int(exclude_self):
+        raise ValueError(
+            f"bruteforce_topk needs k <= n - exclude_self: k={k}, n={n}")
+    if block is None:
+        from repro.kernels import autotune
+        block = autotune.lookup("bruteforce_topk", (n, d, k),
+                                default=default_block(n, d, k))
+    if interpret:
+        return _bruteforce_impl(data, k=k, metric=metric,
+                                exclude_self=exclude_self, block=block,
+                                interpret=True)
+    return _bruteforce_jit(data, k=k, metric=metric,
+                           exclude_self=exclude_self, block=block)

@@ -83,9 +83,24 @@ def _kernel(va_ref, vb_ref, aid_ref, bid_ref, sofa_ref, sofb_ref,
     rd_ref[...] = rd.reshape(bg, B, cap)
 
 
+def default_block(G: int, A: int, B: int, d: int, cap: int) -> int:
+    """Analytic row-group height from the 8 MiB VMEM budget.
+
+    VMEM per row group (padded dims): operands + dist block + the two
+    (W, W) rank matrices behind the top-cap reductions (the dominant term)
+    + outputs. The autotuner (``kernels/autotune.py``) sweeps around this.
+    """
+    dp, Ap, Bp = (-d) % 128, (-A) % 8, (-B) % 8
+    A2, B2, d2 = A + Ap, B + Bp, d + dp
+    per_group = 4 * ((A2 + B2) * d2 + A2 * B2
+                     + A2 * B2 * B2 + B2 * A2 * A2
+                     + (A2 + B2) * cap * 2 + A2)
+    return max(1, min(G, (8 << 20) // max(per_group, 1)))
+
+
 def _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, *, cap: int,
                     metric: str, exclude_same: bool, symmetric: bool,
-                    interpret: bool = False):
+                    block: int, interpret: bool = False):
     """(G,A,d) × (G,B,d) → reduced candidate blocks; see module docstring."""
     G, A, d = va.shape
     B = vb.shape[1]
@@ -99,12 +114,7 @@ def _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, *, cap: int,
     sofa = jnp.pad(sofa, ((0, 0), (0, Ap)))
     sofb = jnp.pad(sofb, ((0, 0), (0, Bp)))
     A2, B2, d2 = A + Ap, B + Bp, d + dp
-    # VMEM per row group: operands + dist block + the two (W, W) rank
-    # matrices behind the top-cap reductions (the dominant term) + outputs.
-    per_group = 4 * ((A2 + B2) * d2 + A2 * B2
-                     + A2 * B2 * B2 + B2 * A2 * A2
-                     + (A2 + B2) * cap * 2 + A2)
-    bg = max(1, min(G, (8 << 20) // max(per_group, 1)))
+    bg = max(1, min(G, block))
     Gp = (-G) % bg
     pad_g = ((0, Gp), (0, 0))
     va = jnp.pad(va, ((0, Gp), (0, 0), (0, 0)))
@@ -149,27 +159,40 @@ def _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, *, cap: int,
 
 _join_topk_jit = jax.jit(
     _join_topk_impl,
-    static_argnames=("cap", "metric", "exclude_same", "symmetric"))
+    static_argnames=("cap", "metric", "exclude_same", "symmetric", "block"))
 
 
 def join_topk_pallas(va, vb, a_ids, b_ids, cap: int, *, metric: str = "l2",
                      sofa=None, sofb=None, exclude_same: bool = False,
-                     symmetric: bool = False, interpret: bool = False):
+                     symmetric: bool = False, block: int | None = None,
+                     interpret: bool = False):
     """Fused pair-distance + per-slot top-cap; see the module docstring.
 
     ``sofa``/``sofb`` are only read when ``exclude_same``; zeros are staged
-    otherwise so the kernel signature stays static.  interpret=True runs the
-    kernel body eagerly (CPU validation path) — NOT under jit: compiling the
-    interpreter loop is pathologically slow (see pairdist).
+    otherwise so the kernel signature stays static. ``block`` is the
+    row-group height (``None`` → autotuned / analytic default, resolved
+    here outside the jit so tuning is never frozen into a stale cache);
+    it only tiles the grid, and across the autotuner's sublane-aligned
+    candidates the output is bit-identical (see ``kernels/autotune.py``).
+    interpret=True runs the kernel body eagerly (CPU validation path) —
+    NOT under jit: compiling the interpreter loop is pathologically slow
+    (see pairdist).
     """
     if sofa is None:
         sofa = jnp.zeros(a_ids.shape, jnp.int32)
     if sofb is None:
         sofb = jnp.zeros(b_ids.shape, jnp.int32)
+    G, A, d = va.shape
+    B = vb.shape[1]
+    if block is None:
+        from repro.kernels import autotune
+        block = autotune.lookup("join_topk", (G, A, B, d, cap),
+                                default=default_block(G, A, B, d, cap))
     if interpret:
         return _join_topk_impl(va, vb, a_ids, b_ids, sofa, sofb, cap=cap,
                                metric=metric, exclude_same=exclude_same,
-                               symmetric=symmetric, interpret=True)
+                               symmetric=symmetric, block=block,
+                               interpret=True)
     return _join_topk_jit(va, vb, a_ids, b_ids, sofa, sofb, cap=cap,
                           metric=metric, exclude_same=exclude_same,
-                          symmetric=symmetric)
+                          symmetric=symmetric, block=block)

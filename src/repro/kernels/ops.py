@@ -94,6 +94,29 @@ def beam_expand(queries, nbr_vecs, nbr_ids, beam_ids, beam_dists, expanded,
                             tombstones=tombstones)
 
 
+def bruteforce_topk(data, k: int, *, metric: str = "l2",
+                    exclude_self: bool = True, block: int | None = None):
+    """Fused exact all-pairs top-k — the bruteforce leaf tier's builder.
+
+    data (n, d) → (ids (n, k), dists (n, k)), rows sorted ascending. On
+    TPU the Pallas kernel streams base tiles through VMEM (the (n, n)
+    distance block never reaches HBM); elsewhere the jnp oracle runs the
+    same tiled structure as ``core.bruteforce.knn_bruteforce`` and is
+    bit-identical to it. ``block`` is the query-block height (``None`` →
+    autotuned kernel default / 1024 oracle default); it only tiles the
+    computation — ids are exact for any value, dists bit-identical across
+    the autotuner's sublane-aligned candidates.
+    """
+    if use_pallas() and data.ndim == 2:
+        from repro.kernels import bruteforce_topk as _k
+        return _k.bruteforce_topk_pallas(data, k, metric=metric,
+                                         exclude_self=exclude_self,
+                                         block=block)
+    return _ref.bruteforce_topk(data, k, metric=metric,
+                                block=block or 1024,
+                                exclude_self=exclude_self)
+
+
 def topk_merge(row_ids, row_dists, cand_ids, cand_dists):
     if use_pallas() and row_ids.ndim == 2:
         from repro.kernels import topk_merge as _k

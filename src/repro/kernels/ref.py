@@ -8,6 +8,8 @@ backends, so they are written to be XLA-efficient, not just correct.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -28,6 +30,39 @@ def pairdist(a: jax.Array, b: jax.Array, metric: str = "l2") -> jax.Array:
     bn = jnp.sum(b * b, axis=-1)
     cross = jnp.einsum("...md,...nd->...mn", a, b)
     return jnp.maximum(an[..., :, None] + bn[..., None, :] - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block", "exclude_self"))
+def bruteforce_topk(data: jax.Array, k: int, *, metric: str = "l2",
+                    block: int = 1024, exclude_self: bool = True):
+    """Exact all-pairs top-k — oracle for the ``bruteforce_topk`` kernel.
+
+    data (n, d) → (ids (n, k) int32, dists (n, k) f32), rows sorted
+    ascending. Deliberately the SAME tiled structure as
+    ``repro.core.bruteforce.knn_bruteforce`` (query-block ``lax.map`` over
+    the matmul-form distance block, ``lax.top_k`` on the negated row),
+    jitted like it, so the two are bit-identical on every backend — the
+    leaf-tier parity pin relies on it. ``lax.top_k`` breaks ties by lower
+    index first, the same contract the kernel's stable rank sort
+    implements.
+    """
+    n = data.shape[0]
+    pad = (-n) % block
+    padded = jnp.pad(data, ((0, pad), (0, 0)))
+    nb = padded.shape[0] // block
+
+    def one_block(qi):
+        q = jax.lax.dynamic_slice_in_dim(padded, qi * block, block, axis=0)
+        d = pairdist(q, data, metric=metric)              # (block, n)
+        if exclude_self:
+            rows = qi * block + jnp.arange(block)
+            d = jnp.where(jnp.arange(n)[None, :] == rows[:, None], jnp.inf, d)
+        neg, ids = jax.lax.top_k(-d, k)
+        return ids.astype(jnp.int32), -neg
+
+    ids, dists = jax.lax.map(one_block, jnp.arange(nb))
+    return ids.reshape(-1, k)[:n], dists.reshape(-1, k)[:n]
 
 
 def _topc(keys: jax.Array, payload: jax.Array, cap: int):

@@ -235,6 +235,8 @@ class SearchEngine:
         self._total_evals = 0                   # host int, never wraps
         self._shed = 0                          # submits refused at capacity
         self._expired = 0                       # deadlines missed pre-admit
+        self._retries = 0                       # requests requeued after a
+                                                # failed dispatch (retryable)
 
     @classmethod
     def from_index(cls, index, **kw) -> "SearchEngine":
@@ -509,6 +511,7 @@ class SearchEngine:
             for s, aitem in reversed(admitted):
                 self._slot_rids[s] = None
                 self._pending.appendleft(aitem)
+            self._retries += len(admitted)
             raise
         if self.record_stats:
             self._batch_s.append(time.perf_counter() - t0)
@@ -580,6 +583,7 @@ class SearchEngine:
             # e.g. one ragged query row — neither loses requests nor
             # wedges their ids in _in_flight
             self._pending.extendleft(reversed(items))
+            self._retries += len(items)
             raise
         served = []
         for r, it in enumerate(items):
@@ -740,4 +744,5 @@ class SearchEngine:
                                 if self._n_queries else 0.0),
             "shed": self._shed,
             "expired": self._expired,
+            "retries": self._retries,
         }

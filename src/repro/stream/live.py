@@ -58,8 +58,12 @@ from repro.kernels.ref import tomb_words
 
 
 def _plane_set(plane: np.ndarray, slots: np.ndarray, dead: bool) -> None:
-    """In-place host-side tombstone bit update (the writer's copy; device
-    planes are always fresh ``jnp.asarray`` copies of this array)."""
+    """In-place host-side tombstone bit update (the writer's copy).
+
+    Device planes handed out to snapshots / link searches must be
+    ``jnp.array`` (forced copy) of this array — ``jnp.asarray`` may
+    zero-copy a 64-byte-aligned numpy buffer on CPU, aliasing these
+    in-place writes into a supposedly bit-frozen generation."""
     slots = np.asarray(slots, np.int64).reshape(-1)
     word = slots >> 5
     bit = (np.uint32(1) << (slots & 31).astype(np.uint32))
@@ -241,7 +245,7 @@ class LiveIndex:
             graph = (merge_graphs(self._base, self._delta)
                      if self._delta_edges else self._base)
             self._snap = Snapshot(graph=graph, data=self._data,
-                                  tombstones=jnp.asarray(self._tomb),
+                                  tombstones=jnp.array(self._tomb),
                                   generation=self._gen,
                                   ext_ids=self._ext.copy(),
                                   metric=self.metric,
@@ -296,7 +300,7 @@ class LiveIndex:
             self._kill_slot(s)
         # plane AFTER the kills, BEFORE the new slots go live: the batch
         # links against exactly the surviving previous generation
-        tomb_link = jnp.asarray(self._tomb)
+        tomb_link = jnp.array(self._tomb)
         span_link = self._n_base + self._delta_used
         slots = self._n_base + self._delta_used + np.arange(b)
         self._delta_used += b

@@ -1,0 +1,252 @@
+"""Leaf tier + kernel autotune: dispatch, bit-parity, counters.
+
+What PR 8 pins down (DESIGN.md §8):
+
+  * the bruteforce leaf tier is BIT-IDENTICAL to ``knn_bruteforce``
+    (ids AND dists), with flags all-False — an exact leaf, not an
+    approximation with a different seed
+  * the fused ``bruteforce_topk`` Pallas kernel matches its jnp oracle
+    (ids exactly — the stable-rank tie contract — dists to float tol)
+  * tier dispatch: forced tiers, the deterministic SURE_FLOOR, explicit
+    crossover pins and the ``k > n-1`` fallback
+  * autotuned block sizes cannot change results: all three tunable
+    kernels are bit-identical across sublane-aligned block heights
+  * config validation + the fault counters every build/engine now carries
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from repro.api import BuildConfig, GraphBuilder
+from repro.core import leaf
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.graph import check_invariants
+from repro.core.nndescent import nn_descent
+from repro.kernels import autotune, ref
+from repro.kernels.bruteforce_topk import (bruteforce_topk_pallas,
+                                           default_block)
+
+
+@pytest.fixture(scope="module")
+def data300():
+    from repro.data.vectors import sift_like
+    return sift_like(jax.random.key(3), 300, 12)
+
+
+# ---- bruteforce tier: bit-identical to the exact oracle ------------------
+
+def test_bruteforce_tier_bit_identical_to_knn_bruteforce(data300):
+    g, tier = leaf.build_leaf(jax.random.key(0), data300, 8,
+                              strategy="bruteforce")
+    want = knn_bruteforce(data300, 8)
+    assert tier == "bruteforce"
+    assert_array_equal(np.asarray(g.ids), np.asarray(want.ids))
+    assert_array_equal(np.asarray(g.dists), np.asarray(want.dists))
+    assert not np.asarray(g.flags).any()
+    check_invariants(g, n_total=data300.shape[0])
+
+
+def test_nndescent_tier_bit_identical_to_legacy(data300):
+    key = jax.random.key(7)
+    g, tier = leaf.build_leaf(key, data300, 8, lam=8, max_iters=10,
+                              strategy="nndescent")
+    want, _ = nn_descent(key, data300, 8, lam=8, max_iters=10)
+    assert tier == "nndescent"
+    assert_array_equal(np.asarray(g.ids), np.asarray(want.ids))
+    assert_array_equal(np.asarray(g.dists), np.asarray(want.dists))
+
+
+def test_build_leaves_matches_per_subset_dispatch(data300):
+    key = jax.random.key(1)
+    gs, tiers = leaf.build_leaves(key, data300, (150, 150), 8)
+    assert tiers == ["bruteforce", "bruteforce"]   # both under SURE_FLOOR
+    for i, g in enumerate(gs):
+        sub = data300[i * 150:(i + 1) * 150]
+        want = knn_bruteforce(sub, 8)
+        assert_array_equal(np.asarray(g.ids), np.asarray(want.ids))
+        assert_array_equal(np.asarray(g.dists), np.asarray(want.dists))
+
+
+# ---- kernel vs oracle (interpret mode, never under jit) ------------------
+
+@pytest.mark.parametrize("n,d,k", [(60, 8, 5), (257, 24, 16), (64, 130, 8)])
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_bruteforce_kernel_matches_oracle(n, d, k, metric):
+    data = jax.random.normal(jax.random.key(n + k), (n, d), jnp.float32)
+    oid, od = ref.bruteforce_topk(data, k, metric=metric)
+    kid, kd = bruteforce_topk_pallas(data, k, metric=metric, interpret=True)
+    assert_array_equal(np.asarray(kid), np.asarray(oid))
+    assert_allclose(np.asarray(kd), np.asarray(od), rtol=1e-5, atol=1e-5)
+
+
+def test_bruteforce_oracle_matches_knn_bruteforce_exactly(data300):
+    want = knn_bruteforce(data300, 10)
+    oid, od = ref.bruteforce_topk(data300, 10)
+    assert_array_equal(np.asarray(oid), np.asarray(want.ids))
+    assert_array_equal(np.asarray(od), np.asarray(want.dists))
+
+
+def test_bruteforce_kernel_include_self():
+    data = jax.random.normal(jax.random.key(2), (40, 6), jnp.float32)
+    oid, od = ref.bruteforce_topk(data, 4, exclude_self=False)
+    assert (np.asarray(oid)[:, 0] == np.arange(40)).all()   # self is nearest
+    kid, kd = bruteforce_topk_pallas(data, 4, exclude_self=False,
+                                     interpret=True)
+    assert_array_equal(np.asarray(kid), np.asarray(oid))
+
+
+def test_bruteforce_kernel_rejects_unfillable_k():
+    with pytest.raises(ValueError, match="k <= n"):
+        bruteforce_topk_pallas(jnp.zeros((5, 4)), 5)
+
+
+# ---- autotune: blocks cannot change results ------------------------------
+
+def test_bruteforce_blocks_bit_identical(data300):
+    base_i, base_d = bruteforce_topk_pallas(data300, 8, interpret=True)
+    for blk in autotune.candidates(default_block(300, 12, 8), hi=300):
+        bi, bd = bruteforce_topk_pallas(data300, 8, block=blk,
+                                        interpret=True)
+        assert_array_equal(np.asarray(bi), np.asarray(base_i)), blk
+        assert_array_equal(np.asarray(bd), np.asarray(base_d)), blk
+
+
+def test_join_topk_blocks_bit_identical():
+    from repro.kernels.join_topk import join_topk_pallas
+    key = jax.random.key(4)
+    G, A, B, d, cap = 20, 8, 6, 16, 12
+    va = jax.random.normal(key, (G, A, d), jnp.float32)
+    vb = jax.random.normal(jax.random.fold_in(key, 1), (G, B, d),
+                           jnp.float32)
+    aid = jnp.tile(jnp.arange(A, dtype=jnp.int32), (G, 1))
+    bid = jnp.tile(A + jnp.arange(B, dtype=jnp.int32), (G, 1))
+    base = join_topk_pallas(va, vb, aid, bid, cap, interpret=True)
+    for blk in (8, 16):
+        out = join_topk_pallas(va, vb, aid, bid, cap, block=blk,
+                               interpret=True)
+        for a, b in zip(base, out):
+            assert_array_equal(np.asarray(a), np.asarray(b)), blk
+
+
+def test_beam_expand_blocks_bit_identical():
+    from repro.kernels.beam_expand import beam_expand_pallas
+    key = jax.random.key(5)
+    nq, C, d, beam = 24, 10, 16, 4
+    q = jax.random.normal(key, (nq, d), jnp.float32)
+    nv = jax.random.normal(jax.random.fold_in(key, 2), (nq, C, d),
+                           jnp.float32)
+    nid = jnp.tile(jnp.arange(C, dtype=jnp.int32), (nq, 1))
+    bid = jnp.tile(C + jnp.arange(beam, dtype=jnp.int32), (nq, 1))
+    bd = jnp.ones((nq, beam), jnp.float32).cumsum(axis=1)
+    exp = jnp.zeros((nq, beam), bool)
+    base = beam_expand_pallas(q, nv, nid, bid, bd, exp, interpret=True)
+    for blk in (8, 16):
+        out = beam_expand_pallas(q, nv, nid, bid, bd, exp, block=blk,
+                                 interpret=True)
+        for a, b in zip(base, out):
+            assert_array_equal(np.asarray(a), np.asarray(b)), blk
+
+
+def test_autotune_record_lookup_bucket():
+    autotune.clear_cache()
+    try:
+        autotune.record("join_topk", (20, 8, 6, 16, 12), 16)
+        # same bucket family → hit; far shape → default
+        assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                               default=99) == 16
+        assert autotune.lookup("join_topk", (17, 8, 6, 16, 12),
+                               default=99) == 16       # same pow2 buckets
+        assert autotune.lookup("join_topk", (2000, 8, 6, 16, 12),
+                               default=99) == 99
+        assert autotune.bucket(1) == 1
+        assert autotune.bucket(100) == 128
+        assert autotune.bucket(128) == 128
+        # every candidate is sublane-aligned or the hi clip
+        for c in autotune.candidates(29, hi=1000):
+            assert c % 8 == 0
+    finally:
+        autotune.clear_cache()
+
+
+# ---- tier resolution ------------------------------------------------------
+
+def test_resolve_tier_rules():
+    r = leaf.resolve_tier
+    # forced tiers pass through untouched
+    assert r(10 ** 9, 8, 8, strategy="bruteforce") == "bruteforce"
+    assert r(10, 8, 8, strategy="nndescent") == "nndescent"
+    # deterministic floor: no probe at or below SURE_FLOOR
+    assert r(leaf.SURE_FLOOR, 8, 8, strategy="auto") == "bruteforce"
+    # explicit crossover pins the decision on both sides
+    assert r(400, 8, 8, strategy="auto", crossover=400) == "bruteforce"
+    assert r(401, 8, 8, strategy="auto", crossover=400) == "nndescent"
+    # an exact build cannot fill k rows → NN-Descent fallback
+    assert r(4, 8, 8, strategy="auto") == "nndescent"
+    with pytest.raises(ValueError, match="unknown leaf strategy"):
+        r(10, 8, 8, strategy="exact")
+
+
+def test_forced_bruteforce_rejects_unfillable_k(data300):
+    with pytest.raises(ValueError, match="k <= n - 1"):
+        leaf.build_leaf(jax.random.key(0), data300[:5], 8,
+                        strategy="bruteforce")
+
+
+def test_measured_crossover_cached_and_floored():
+    leaf.clear_crossover_cache()
+    try:
+        n1 = leaf.measure_crossover(8, 4, probe_n=64)
+        n2 = leaf.measure_crossover(8, 4, probe_n=64)
+        assert n1 == n2 >= leaf.SURE_FLOOR      # cache hit + floor
+    finally:
+        leaf.clear_crossover_cache()
+
+
+# ---- facade: dispatch parity + stats + config ----------------------------
+
+def test_auto_and_forced_builds_agree_below_floor(data300):
+    # every leaf here is under SURE_FLOOR, so auto == forced bruteforce
+    kw = dict(strategy="multiway", n_subsets=3, k=8, seed=0)
+    r_auto = GraphBuilder(BuildConfig(**kw)).build(data300)
+    r_bf = GraphBuilder(BuildConfig(leaf_strategy="bruteforce",
+                                    **kw)).build(data300)
+    assert r_auto.stats["leaf_tiers"] == ["bruteforce"] * 3
+    assert_array_equal(np.asarray(r_auto.graph.ids),
+                       np.asarray(r_bf.graph.ids))
+    check_invariants(r_auto.graph, n_total=data300.shape[0])
+
+
+def test_builder_stats_carry_fault_counters(data300):
+    r = GraphBuilder(BuildConfig(strategy="twoway", k=8,
+                                 seed=0)).build(data300)
+    assert r.stats["retries"] == 0              # clean build
+    assert r.stats["degraded_pairs"] == 0
+    assert set(r.stats["leaf_tiers"]) <= {"bruteforce", "nndescent"}
+
+
+def test_recall_threads_block_and_metric(data300):
+    r = GraphBuilder(BuildConfig(strategy="twoway", k=8,
+                                 seed=0)).build(data300)
+    # any block must give the same recall (same exact ground truth)
+    assert r.recall(at=8, block=64) == r.recall(at=8, block=1024)
+
+
+def test_engine_stats_surface_retries(data300):
+    g = knn_bruteforce(data300, 8)
+    from repro.serve.knn_engine import SearchEngine
+    eng = SearchEngine(graph=g, data=data300, k=5, beam=16, slots=8)
+    eng.search(data300[:10])
+    st = eng.stats()
+    assert st["retries"] == 0 and st["shed"] == 0 and st["expired"] == 0
+
+
+def test_config_validates_leaf_fields():
+    with pytest.raises(ValueError, match="leaf_strategy"):
+        BuildConfig(leaf_strategy="exact")
+    with pytest.raises(ValueError, match="leaf_crossover"):
+        BuildConfig(leaf_crossover=0)
+    cfg = BuildConfig(leaf_strategy="bruteforce", leaf_crossover=4096)
+    assert cfg.leaf_strategy == "bruteforce"
