@@ -8,6 +8,11 @@ per-round stats and a recall hook. Swapping ``strategy="twoway"`` for
 ``"multiway"``, ``"hierarchy"``, ``"distributed"`` or ``"outofcore"``
 reruns the same build on any other backend; the hand-rolled NN-Descent
 baseline below is what the merge beats (~1/3 the distance evals).
+
+Before sending a change, run the project's invariant linter (the same
+gate CI enforces — rule catalog in DESIGN.md §9):
+
+  PYTHONPATH=src python -m repro.analysis --fail-on-findings src/repro
 """
 
 import time

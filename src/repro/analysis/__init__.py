@@ -1,0 +1,25 @@
+"""repro.analysis — invariant linter + lock-discipline race detector.
+
+Static half (``python -m repro.analysis``): the RA00x rule catalog in
+:mod:`repro.analysis.rules` run by :mod:`repro.analysis.lint`, with a
+checked-in content-addressed baseline for intentional exceptions.
+
+Dynamic half: :class:`repro.analysis.races.RaceMonitor`, an opt-in shim
+over ``threading.Lock``/``RLock`` that records per-thread locksets and a
+global acquisition-order graph, reporting lock-order inversions and
+shared-attribute writes under inconsistent locksets.  Armed in the chaos
+matrix via ``REPRO_RACE_DETECT=1``.
+"""
+
+from repro.analysis.lint import apply_baseline, lint_paths, load_baseline
+from repro.analysis.races import RaceMonitor
+from repro.analysis.rules import RULES, Finding
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "RaceMonitor",
+    "apply_baseline",
+    "lint_paths",
+    "load_baseline",
+]

@@ -1,0 +1,104 @@
+"""``python -m repro.analysis`` — run the invariant linter.
+
+Exit status is 0 unless ``--fail-on-findings`` is set and at least one
+finding is not covered by the baseline.  ``--report`` writes the full
+machine-readable findings document (new + suppressed + stale baseline
+keys) for CI artifact upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import (DEFAULT_BASELINE, apply_baseline,
+                                 lint_paths, load_baseline, write_baseline)
+from repro.analysis.rules import RULES
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="project-invariant linter (rules RA001-RA007)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to scan "
+                         "(default: src/repro)")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 when any non-baselined finding remains")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: the checked-in one)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (show everything as new)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to cover current findings")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write a JSON findings report to this path")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        for rid, (summary, hint) in sorted(RULES.items()):
+            print(f"{rid}  {summary}\n       fix: {hint}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = frozenset(r.strip() for r in args.rules.split(",") if r)
+        unknown = rules - frozenset(RULES)
+        if unknown:
+            print(f"unknown rule ids: {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    findings = lint_paths(list(args.paths), rules)
+
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"baseline written: {args.baseline} "
+              f"({len(findings)} finding(s) covered)")
+        return 0
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    res = apply_baseline(findings, baseline)
+
+    doc = {
+        "paths": list(args.paths),
+        "counts": {"new": len(res.new), "suppressed": len(res.suppressed),
+                   "stale_baseline_keys": len(res.stale)},
+        "new": [dataclasses.asdict(f) for f in res.new],
+        "suppressed": [dataclasses.asdict(f) for f in res.suppressed],
+        "stale_baseline_keys": res.stale,
+    }
+    if args.report is not None:
+        args.report.write_text(json.dumps(doc, indent=1) + "\n",
+                               encoding="utf-8")
+
+    if args.format == "json":
+        print(json.dumps(doc, indent=1))
+    else:
+        for f in res.new:
+            print(f.render())
+        if res.suppressed:
+            print(f"[baseline] {len(res.suppressed)} finding(s) suppressed")
+        for k in res.stale:
+            print(f"[baseline] stale key (no longer observed): {k}")
+        print(f"{len(res.new)} new finding(s) across "
+              f"{', '.join(args.paths)}")
+
+    if args.fail_on_findings and res.new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

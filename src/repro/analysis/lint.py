@@ -1,0 +1,157 @@
+"""Linter driver: file walk, cross-file RA003 drift pass, baseline.
+
+The baseline (``baseline.json``, checked in next to this module) maps a
+content-addressed finding key -> count.  Keys are
+``rule:path:crc32(stripped source line)`` so a finding keeps its identity
+when unrelated edits move it to a different line number, and counts let
+N identical lines in one file ride as exactly N exceptions.  New
+violations (keys not in the baseline, or counts above the baselined
+count) fail the run under ``--fail-on-findings``; stale baseline entries
+are reported so the file shrinks over time instead of fossilizing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+from repro.analysis.rules import RULES, FileReport, Finding, line_key, scan_file
+
+DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+def iter_py_files(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        root = Path(p)
+        if root.is_dir():
+            out.extend(sorted(root.rglob("*.py")))
+        elif root.suffix == ".py":
+            out.append(root)
+    # dedupe, preserve order
+    seen: set[Path] = set()
+    uniq = []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+def _display_path(path: Path) -> str:
+    """Posix-style path, relative to the cwd when possible (stable keys
+    whether the tree is scanned as ``src/repro`` or absolutely)."""
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:
+        rel = str(path)
+    if rel.startswith(".."):
+        rel = str(path)
+    return rel.replace(os.sep, "/")
+
+
+def _ra003_project_pass(reports: list[FileReport]) -> list[Finding]:
+    """Both directions of fault-site drift, across the whole scanned set.
+
+    Skipped when no SITES catalog is in the scanned tree (a partial scan
+    cannot judge drift)."""
+    catalogs = [(r, r.sites_catalog) for r in reports
+                if r.sites_catalog is not None]
+    if not catalogs:
+        return []
+    known: set[str] = set()
+    for _, (entries, _line) in catalogs:
+        known.update(entries)
+    used: set[str] = set()
+    findings: list[Finding] = []
+    hint = RULES["RA003"][1]
+    for rep in reports:
+        for site, line, col in rep.fault_calls:
+            used.add(site)
+            if site not in known:
+                findings.append(Finding(
+                    rule="RA003", path=rep.path, line=line, col=col,
+                    message=f"fault_point site {site!r} is not in the "
+                            f"faults.SITES catalog",
+                    hint=hint, key=f"RA003:{rep.path}:site={site}"))
+    for rep, (entries, line) in catalogs:
+        for site in entries:
+            if site not in used:
+                findings.append(Finding(
+                    rule="RA003", path=rep.path, line=line, col=1,
+                    message=f"SITES entry {site!r} has no fault_point() "
+                            f"call site (dead catalog entry)",
+                    hint=hint, key=f"RA003:{rep.path}:dead={site}"))
+    return findings
+
+
+def lint_paths(paths: list[str],
+               rules: frozenset[str] | None = None) -> list[Finding]:
+    """Scan ``paths`` (files or directories) and return all findings,
+    baseline not yet applied."""
+    reports: list[FileReport] = []
+    for f in iter_py_files(paths):
+        try:
+            source = f.read_text(encoding="utf-8")
+        except OSError as e:
+            reports.append(FileReport(_display_path(f)))
+            reports[-1].findings.append(Finding(
+                rule="RA000", path=_display_path(f), line=1, col=1,
+                message=f"unreadable: {e}", hint="fix file permissions",
+                key=line_key("RA000", _display_path(f), str(e))))
+            continue
+        reports.append(scan_file(_display_path(f), source, rules))
+    findings = [fi for rep in reports for fi in rep.findings]
+    if rules is None or "RA003" in rules:
+        findings.extend(_ra003_project_pass(reports))
+    findings.sort(key=lambda fi: (fi.path, fi.line, fi.col, fi.rule))
+    return findings
+
+
+# ---- baseline ----------------------------------------------------------
+
+
+def load_baseline(path: Path | str) -> dict[str, int]:
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text(encoding="utf-8"))
+    return {str(k): int(v) for k, v in data.get("findings", {}).items()}
+
+
+def write_baseline(findings: list[Finding], path: Path | str) -> None:
+    counts: dict[str, int] = {}
+    for fi in findings:
+        counts[fi.key] = counts.get(fi.key, 0) + 1
+    doc = {
+        "comment": "content-addressed suppressions for repro.analysis; "
+                   "regenerate with `python -m repro.analysis "
+                   "--write-baseline <paths>`",
+        "findings": dict(sorted(counts.items())),
+    }
+    Path(path).write_text(json.dumps(doc, indent=1) + "\n", encoding="utf-8")
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    new: list[Finding]          # not covered by the baseline -> fail CI
+    suppressed: list[Finding]   # riding on the baseline
+    stale: list[str]            # baseline keys no longer observed
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: dict[str, int]) -> BaselineResult:
+    budget = dict(baseline)
+    new: list[Finding] = []
+    suppressed: list[Finding] = []
+    for fi in findings:
+        if budget.get(fi.key, 0) > 0:
+            budget[fi.key] -= 1
+            suppressed.append(fi)
+        else:
+            new.append(fi)
+    stale = sorted(k for k, v in budget.items() if v > 0)
+    return BaselineResult(new=new, suppressed=suppressed, stale=stale)

@@ -1,0 +1,387 @@
+"""Dynamic lock-discipline race detector (opt-in instrumentation shim).
+
+:class:`RaceMonitor.install` monkeypatches the ``threading.Lock`` /
+``threading.RLock`` factories so every lock subsequently *created by repo
+code* (creation-stack filter: a frame under the repro source tree or the
+test tree, never ``site-packages``) is wrapped in a
+:class:`_MonitoredLock`.  ``threading.Condition``, ``queue.Queue``,
+``Semaphore`` and ``Event`` allocate their internal locks through those
+same factories, so the Spool / ``_WriteBehind`` / ``_Prefetcher`` /
+``SearchEngine`` / ``LiveIndex`` / checkpoint planes are covered without
+touching their code.
+
+Two detectors run over the instrumented stream:
+
+* **Lock-order inversions** — every acquisition while other monitored
+  locks are held adds a ``held-site -> new-site`` edge to a global
+  acquisition-order graph keyed by lock *creation site* (``file:line`` of
+  the nearest repo frame).  Any cycle in that graph is a potential
+  deadlock, reported even if the interleaving never actually deadlocked.
+  Reentrant re-acquisition (RLock) adds no edge.
+
+* **Eraser-style write locksets** — :meth:`RaceMonitor.watch` swaps an
+  object's ``__class__`` for a recording subclass; each attribute write
+  intersects the writer's current lockset into the candidate set for
+  ``(object, attribute)``.  A write is reported as a race only once two
+  *distinct* threads have written and the candidate set is empty —
+  single-writer-thread patterns (the write-behind drainer, the
+  checkpoint writer) stay silent by construction.
+
+False-positive caveats (also in DESIGN.md §9): the order graph merges
+all lock instances born at one source line, so per-item locks allocated
+in a loop can alias into a spurious cycle; locks created *before*
+``install()`` are invisible; and the lockset detector sees no init-phase
+whitelisting, so hand an object to :meth:`watch` only after its
+single-threaded construction is done.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import os
+import sys
+import threading
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+#: (module, class, attrs-to-watch or None for all) auto-instrumented by
+#: install(): the threaded planes named in DESIGN.md §7.  Watching hooks
+#: __init__ so every instance built while the monitor is live records
+#: its attribute writes.
+WATCHED_PLANES = (
+    ("repro.core.outofcore", "Spool", None),
+    ("repro.core.outofcore", "_WriteBehind", None),
+    ("repro.core.outofcore", "_Prefetcher", None),
+    ("repro.serve.knn_engine", "SearchEngine", None),
+    ("repro.stream.live", "LiveIndex", None),
+    ("repro.train.checkpoint", "CheckpointManager", None),
+)
+
+
+class _MonitoredLock:
+    """Wraps a real lock; reports acquire/release to the monitor."""
+
+    __slots__ = ("_inner", "_site", "_mon")
+
+    def __init__(self, inner, site: str, mon: "RaceMonitor"):
+        self._inner = inner
+        self._site = site
+        self._mon = mon
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._mon._on_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        self._mon._on_release(self)
+        self._inner.release()
+
+    acquire_lock = acquire       # legacy aliases some stdlib paths use
+    release_lock = release
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> "_MonitoredLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __getattr__(self, name):
+        # expose the inner lock's protocol extras (``_is_owned``,
+        # ``_release_save``, ``_acquire_restore``, ``_at_fork_reinit``)
+        # so ``threading.Condition`` keeps its RLock-aware paths; the
+        # wait-window release/reacquire bypasses the monitor, leaving the
+        # waiter's recorded lockset unchanged across the wait — which is
+        # also its state once wait() returns
+        return getattr(object.__getattribute__(self, "_inner"), name)
+
+    def __repr__(self) -> str:
+        return f"<_MonitoredLock site={self._site!r} {self._inner!r}>"
+
+
+class RaceMonitor:
+    """Global (one-at-a-time) lock-discipline monitor.
+
+    Typical use::
+
+        mon = RaceMonitor.install()
+        ...  # run the workload
+        report = mon.uninstall()
+        assert not report["lock_order_cycles"]
+        assert not report["races"]
+    """
+
+    _installed: "RaceMonitor | None" = None
+
+    def __init__(self, roots: tuple[str, ...] | None = None):
+        if roots is None:
+            src_root = os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))))
+            roots = (src_root, os.getcwd())
+        self.roots = tuple(os.path.abspath(r) for r in roots)
+        self._mu = _REAL_LOCK()            # monitor-internal, never wrapped
+        self._tls = threading.local()
+        #: (held_site, new_site) -> observation count
+        self._edges: dict[tuple[str, str], int] = {}
+        #: (id(obj), attr) -> [cls_name, {thread ids}, candidate lockset]
+        self._writes: dict[tuple[int, str], list] = {}
+        #: (cls_name, attr) -> first-detection info
+        self._races: dict[tuple[str, str], dict] = {}
+        self._sites: set[str] = set()
+        self._watch_subclasses: dict = {}
+        self._patched_inits: list = []
+        self._thread_count = 0
+
+    # ---- lifecycle -----------------------------------------------------
+
+    @classmethod
+    def install(cls, roots: tuple[str, ...] | None = None) -> "RaceMonitor":
+        if cls._installed is not None:
+            raise RuntimeError("RaceMonitor is already installed")
+        mon = cls(roots)
+
+        def lock_factory():
+            inner = _REAL_LOCK()
+            site = mon._creation_site()
+            return _MonitoredLock(inner, site, mon) if site else inner
+
+        def rlock_factory():
+            inner = _REAL_RLOCK()
+            site = mon._creation_site()
+            return _MonitoredLock(inner, site, mon) if site else inner
+
+        threading.Lock = lock_factory
+        threading.RLock = rlock_factory
+        cls._installed = mon
+        mon._instrument_planes()
+        return mon
+
+    def uninstall(self) -> dict:
+        """Restore the factories and return the final report."""
+        threading.Lock = _REAL_LOCK
+        threading.RLock = _REAL_RLOCK
+        for kls, orig in self._patched_inits:
+            kls.__init__ = orig
+        self._patched_inits.clear()
+        if RaceMonitor._installed is self:
+            RaceMonitor._installed = None
+        return self.report()
+
+    def _creation_site(self) -> str | None:
+        """``file:line`` of the nearest repo frame on the creating stack,
+        or None for locks born entirely outside the repo (left real and
+        invisible — jax/runtime internals are not our discipline)."""
+        f = sys._getframe(2)
+        while f is not None:
+            fn = f.f_code.co_filename
+            if ("site-packages" not in fn and fn != __file__
+                    and os.path.isabs(fn)
+                    and any(fn.startswith(r + os.sep) for r in self.roots)):
+                return f"{os.path.basename(fn)}:{f.f_lineno}"
+            f = f.f_back
+        return None
+
+    # ---- lockset / order-graph recording -------------------------------
+
+    def _held(self) -> list:
+        h = getattr(self._tls, "held", None)
+        if h is None:
+            h = self._tls.held = []      # [lock id, site, depth] stack
+        return h
+
+    def _on_acquire(self, lk: _MonitoredLock) -> None:
+        held = self._held()
+        for entry in held:
+            if entry[0] == id(lk):       # reentrant (RLock): no new edge
+                entry[2] += 1
+                return
+        site = lk._site
+        with self._mu:
+            self._sites.add(site)
+            for _oid, held_site, _d in held:
+                if held_site != site:
+                    key = (held_site, site)
+                    self._edges[key] = self._edges.get(key, 0) + 1
+        held.append([id(lk), site, 1])
+
+    def _on_release(self, lk: _MonitoredLock) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][0] == id(lk):
+                held[i][2] -= 1
+                if held[i][2] == 0:
+                    del held[i]
+                return
+        # released a lock acquired before install(); nothing to unwind
+
+    def current_lockset(self) -> frozenset:
+        """Sites of monitored locks held by the calling thread."""
+        return frozenset(site for _oid, site, _d in self._held())
+
+    # ---- shared-attribute watching -------------------------------------
+
+    def watch(self, obj, attrs: frozenset | None = None):
+        """Record every attribute write on ``obj`` (``__class__`` swap;
+        incompatible with ``__slots__`` layouts)."""
+        cls = type(obj)
+        if getattr(cls, "_repro_race_watched", False):
+            return obj
+        key = (cls, attrs)
+        sub = self._watch_subclasses.get(key)
+        if sub is None:
+            mon = self
+            orig_setattr = cls.__setattr__
+
+            def __setattr__(self_, name, value):
+                if attrs is None or name in attrs:
+                    mon._note_write(self_, name)
+                orig_setattr(self_, name, value)
+
+            sub = type(cls.__name__, (cls,), {
+                "__setattr__": __setattr__,
+                "_repro_race_watched": True,
+            })
+            self._watch_subclasses[key] = sub
+        obj.__class__ = sub
+        return obj
+
+    def _thread_token(self) -> int:
+        """Monitor-unique thread id — ``get_ident()`` values are recycled
+        by the OS, which would fold two short-lived writers into one."""
+        tok = getattr(self._tls, "token", None)
+        if tok is None:
+            with self._mu:
+                self._thread_count += 1
+                tok = self._thread_count
+            self._tls.token = tok
+        return tok
+
+    def _note_write(self, obj, attr: str) -> None:
+        tid = self._thread_token()
+        lockset = self.current_lockset()
+        key = (id(obj), attr)
+        with self._mu:
+            rec = self._writes.get(key)
+            if rec is None:
+                self._writes[key] = [type(obj).__name__, {tid}, set(lockset)]
+                return
+            rec[1].add(tid)
+            rec[2] &= lockset
+            if len(rec[1]) > 1 and not rec[2]:
+                rkey = (rec[0], attr)
+                if rkey not in self._races:
+                    self._races[rkey] = {
+                        "class": rec[0],
+                        "attr": attr,
+                        "threads": len(rec[1]),
+                    }
+
+    def _instrument_planes(self) -> None:
+        mon = self
+        for modname, clsname, attrs in WATCHED_PLANES:
+            try:
+                kls = getattr(importlib.import_module(modname), clsname)
+            except Exception:  # lint: allow-broad-except(best-effort arming; a missing plane must not break install)
+                continue
+            orig = kls.__init__
+
+            def wrapped(self_, *a, _orig=orig, _attrs=attrs, **kw):
+                _orig(self_, *a, **kw)
+                mon.watch(self_, _attrs)
+
+            kls.__init__ = wrapped
+            self._patched_inits.append((kls, orig))
+
+    # ---- reporting -----------------------------------------------------
+
+    def _find_cycles(self) -> list[list[str]]:
+        """SCCs of size >= 2 (plus self-loops) in the site order graph."""
+        graph: dict[str, set[str]] = {}
+        for (a, b) in self._edges:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        index: dict[str, int] = {}
+        low: dict[str, int] = {}
+        on_stack: set[str] = set()
+        stack: list[str] = []
+        counter = [0]
+        sccs: list[list[str]] = []
+
+        def strongconnect(v: str) -> None:
+            # iterative Tarjan (the graph is tiny, but no recursion limits)
+            work = [(v, iter(sorted(graph[v])))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on_stack.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on_stack.add(w)
+                        work.append((w, iter(sorted(graph[w]))))
+                        advanced = True
+                        break
+                    if w in on_stack:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        sccs.append(sorted(comp))
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+
+        for v in sorted(graph):
+            if v not in index:
+                strongconnect(v)
+        return sorted(sccs)
+
+    def report(self) -> dict:
+        with self._mu:
+            edges = sorted((a, b, n) for (a, b), n in self._edges.items())
+            races = sorted(self._races.values(),
+                           key=lambda r: (r["class"], r["attr"]))
+            sites = sorted(self._sites)
+        return {
+            "locks": sites,
+            "edges": [list(e) for e in edges],
+            "lock_order_cycles": self._find_cycles(),
+            "races": races,
+        }
+
+    def write_report(self, path: str) -> dict:
+        rep = self.report()
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(rep, f, indent=1)
+            f.write("\n")
+        return rep
+
+
+def maybe_install_from_env() -> RaceMonitor | None:
+    """Install iff ``REPRO_RACE_DETECT=1`` and not already installed."""
+    if os.environ.get("REPRO_RACE_DETECT") != "1":
+        return None
+    if RaceMonitor._installed is not None:
+        return RaceMonitor._installed
+    return RaceMonitor.install()

@@ -1,0 +1,520 @@
+"""The RA00x invariant-rule catalog (AST checks, no imports of the code
+under analysis).
+
+Every headline claim in this repro — bit-identical crash recovery,
+bit-parity of fused kernels against pinned oracles, deterministic leaf
+dispatch — rests on code invariants that used to be hand-enforced.  This
+module encodes them as static checks over the AST:
+
+  ======  ==============================================================
+  RA001   no ``time.time()`` — elapsed/pacing math must use
+          ``time.monotonic()`` (a wall-clock step skews pacing models and
+          retry deadlines).  Genuine wall-clock *timestamps* carry a
+          ``# lint: allow-wall-clock(reason)`` annotation.
+  RA002   version-sensitive jax APIs (``Mesh``, ``NamedSharding``,
+          ``AxisType``, ``AbstractMesh``, ``make_mesh``, ``shard_map``)
+          are imported ONLY via ``repro.compat`` — the single import site
+          that absorbs jax version drift (ROADMAP build-API rule).
+  RA003   fault-site drift: every ``fault_point("site")`` literal must
+          exist in the ``faults.SITES`` catalog AND every catalog entry
+          must have at least one call site (both directions — a typo'd
+          site silently arms nothing, a dead entry is untested surface).
+  RA004   no unseeded nondeterminism: stdlib ``random.*`` draws,
+          ``np.random.default_rng()`` with no seed, and the legacy
+          global-state ``np.random.<draw>`` functions.  Determinism is
+          the repo's core contract; ``# lint: allow-unseeded(reason)``
+          marks the deliberate exceptions.
+  RA005   no bare/broad ``except`` (``except:``, ``except Exception``,
+          ``except BaseException``) without an explicit
+          ``# lint: allow-broad-except(reason)`` annotation saying why
+          the swallow (or latch-and-reraise) is load-bearing.
+  RA006   no mutable default arguments (shared-state bug class).
+  RA007   tracer-leak heuristic: inside a ``@jax.jit``-decorated function
+          or a ``pl.pallas_call`` kernel, a Python ``if``/``while`` on a
+          bare traced parameter (or ``bool()``/``int()``/``float()`` of
+          one) concretizes a tracer — a trace-time error at best, a
+          silently-frozen branch at worst.  Parameters named in
+          ``static_argnames``/``static_argnums`` and ``is None`` tests
+          are exempt.
+  ======  ==============================================================
+
+Findings carry file:line, the rule id and a fix hint; ``lint.py`` applies
+the suppression annotations and the checked-in baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import zlib
+
+#: rule id -> (summary, fix hint)
+RULES: dict[str, tuple[str, str]] = {
+    "RA001": ("time.time() used for elapsed/pacing math",
+              "use time.monotonic(); annotate a genuine wall-clock "
+              "timestamp with `# lint: allow-wall-clock(reason)`"),
+    "RA002": ("version-sensitive jax API imported outside repro.compat",
+              "route Mesh/NamedSharding/AxisType/AbstractMesh/make_mesh/"
+              "shard_map through repro.compat (the single import site)"),
+    "RA003": ("fault_point site drift vs the faults.SITES catalog",
+              "use a literal site name that exists in SITES, and keep "
+              "every SITES entry wired to >=1 call site"),
+    "RA004": ("unseeded nondeterminism",
+              "thread an explicit seed (jax.random.key / "
+              "np.random.default_rng(seed)); annotate deliberate cases "
+              "with `# lint: allow-unseeded(reason)`"),
+    "RA005": ("bare/broad except without annotation",
+              "narrow to a concrete exception type, or annotate with "
+              "`# lint: allow-broad-except(reason)` stating why the "
+              "broad handler is load-bearing"),
+    "RA006": ("mutable default argument",
+              "default to None and materialize inside the function body"),
+    "RA007": ("possible tracer leak in a jit/pallas scope",
+              "branch with jnp.where/lax.cond/lax.while_loop, or make "
+              "the argument static (static_argnames)"),
+}
+
+#: per-rule suppression-annotation token (``# lint: allow-<token>(reason)``)
+ALLOW_TOKENS = {
+    "RA001": "allow-wall-clock",
+    "RA004": "allow-unseeded",
+    "RA005": "allow-broad-except",
+}
+
+# the closing paren is optional so a long reason may wrap onto a
+# follow-up comment line; a non-empty reason is still required
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow-([a-z][a-z-]*)\(([^)\n]+)\)?")
+_ALLOW_GENERIC_RE = re.compile(r"#\s*lint:\s*allow\(\s*(RA\d{3})\b[^)]*\)")
+
+#: jax names whose import location moves across versions (or sits next to
+#: ones that do) — allowed only inside repro/compat.py
+SENSITIVE_JAX = frozenset({
+    "jax.sharding.Mesh",
+    "jax.sharding.NamedSharding",
+    "jax.sharding.AxisType",
+    "jax.sharding.AbstractMesh",
+    "jax.make_mesh",
+    "jax.shard_map",
+    "jax.experimental.shard_map.shard_map",
+})
+
+#: legacy numpy global-state draw functions (RA004)
+_NP_LEGACY = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "poisson", "exponential",
+    "gamma", "bytes",
+})
+
+#: stdlib random draws/mutators that consume the unseeded global state
+_PY_RANDOM = frozenset({
+    "random", "randint", "randrange", "randbytes", "getrandbits",
+    "choice", "choices", "shuffle", "sample", "uniform", "triangular",
+    "betavariate", "expovariate", "gammavariate", "gauss",
+    "lognormvariate", "normalvariate", "vonmisesvariate",
+    "paretovariate", "weibullvariate",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, locatable and baselinable."""
+
+    rule: str
+    path: str           # as scanned (posix, relative when under the cwd)
+    line: int
+    col: int
+    message: str
+    hint: str
+    key: str            # baseline identity: rule:path:crc32(stripped line)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}\n    hint: {self.hint}")
+
+
+def line_key(rule: str, path: str, line_text: str) -> str:
+    """Baseline key — content-addressed so findings survive line moves."""
+    crc = zlib.crc32(line_text.strip().encode()) & 0xFFFFFFFF
+    return f"{rule}:{path}:{crc:08x}"
+
+
+class FileReport:
+    """Per-file scan output: findings + the cross-file RA003 raw data."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: list[Finding] = []
+        #: (site literal, line, col) for every fault_point("...") call
+        self.fault_calls: list[tuple[str, int, int]] = []
+        #: SITES catalog defined by this file, if any: (entries, line)
+        self.sites_catalog: tuple[tuple[str, ...], int] | None = None
+
+
+class _Scanner(ast.NodeVisitor):
+    """One pass over a module AST, running every enabled rule."""
+
+    def __init__(self, report: FileReport, source_lines: list[str],
+                 rules: frozenset[str]):
+        self.rep = report
+        self.lines = source_lines
+        self.rules = rules
+        self.is_compat = report.path.replace("\\", "/").endswith(
+            "repro/compat.py")
+        #: local alias -> imported module path ("np" -> "numpy")
+        self._mod_alias: dict[str, str] = {}
+        #: local name -> fully dotted origin ("Mesh" -> "jax.sharding.Mesh")
+        self._from_alias: dict[str, str] = {}
+        self._func_defs: list[ast.FunctionDef] = []
+        self._pallas_kernels: set[str] = set()
+
+    # ---- plumbing ------------------------------------------------------
+
+    def _line_text(self, line: int) -> str:
+        return self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+
+    def _allowed(self, line: int, rule: str) -> bool:
+        """Suppression annotation on the finding's line or the line above:
+        the rule-specific ``# lint: allow-<token>(reason)`` (non-empty
+        reason required) or the generic ``# lint: allow(RAxxx ...)``."""
+        token = ALLOW_TOKENS.get(rule)
+        # the finding's own line, then any contiguous run of comment-only
+        # lines directly above it (wrapped annotations)
+        lines = [line]
+        ln = line - 1
+        while ln > 0 and self._line_text(ln).lstrip().startswith("#"):
+            lines.append(ln)
+            ln -= 1
+        for ln in lines:
+            text = self._line_text(ln)
+            if token is not None:
+                m = _ALLOW_RE.search(text)
+                if (m and f"allow-{m.group(1)}" == token
+                        and m.group(2).strip()):
+                    return True
+            m = _ALLOW_GENERIC_RE.search(text)
+            if m and m.group(1) == rule:
+                return True
+        return False
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        if rule not in self.rules:
+            return
+        line = getattr(node, "lineno", 1)
+        if self._allowed(line, rule):
+            return
+        self.rep.findings.append(Finding(
+            rule=rule, path=self.rep.path, line=line,
+            col=getattr(node, "col_offset", 0) + 1, message=message,
+            hint=RULES[rule][1],
+            key=line_key(rule, self.rep.path, self._line_text(line))))
+
+    def _dotted(self, node: ast.AST) -> tuple[str | None, bool]:
+        """Fully-resolved dotted path of a Name/Attribute chain, plus
+        whether the root came through a from-import (in which case the
+        violation was already reported at the import)."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None, False
+        via_from = False
+        root = self._mod_alias.get(node.id)
+        if root is None:
+            root = self._from_alias.get(node.id)
+            via_from = root is not None
+        if root is None:
+            root = node.id
+        parts.append(root)
+        return ".".join(reversed(parts)), via_from
+
+    # ---- imports (alias tracking + RA002) ------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self._mod_alias[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for a in node.names:
+            full = f"{mod}.{a.name}" if mod else a.name
+            self._from_alias[a.asname or a.name] = full
+            if not self.is_compat and full in SENSITIVE_JAX:
+                self._emit("RA002", node,
+                           f"`from {mod} import {a.name}` outside "
+                           f"repro.compat")
+        self.generic_visit(node)
+
+    # ---- calls (RA001, RA003, RA004, RA002-usage) ----------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted, via_from = self._dotted(node.func)
+        if dotted == "time.time":
+            self._emit("RA001", node,
+                       "time.time() — wall clock in elapsed/pacing math")
+        # RA002 on dotted usage is handled by visit_Attribute (the call's
+        # func chain is visited there too; one finding, not two)
+        self._check_fault_point(node, dotted)
+        self._check_nondeterminism(node, dotted)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # bare attribute references (e.g. a type annotation
+        # `mesh: jax.sharding.Mesh`) — calls are handled above, so only
+        # report when this chain is not itself the func of a Call (the
+        # parent already flagged it); cheap approximation: always resolve,
+        # dedupe via the content-addressed baseline key
+        dotted, via_from = self._dotted(node)
+        if (dotted is not None and not via_from
+                and dotted in SENSITIVE_JAX and not self.is_compat):
+            self._emit("RA002", node, f"direct use of {dotted}")
+        self.generic_visit(node)
+
+    def _check_fault_point(self, node: ast.Call, dotted: str | None) -> None:
+        name = dotted.rsplit(".", 1)[-1] if dotted else None
+        if name != "fault_point":
+            return
+        if not node.args:
+            return
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            self.rep.fault_calls.append(
+                (arg.value, node.lineno, node.col_offset + 1))
+        else:
+            self._emit("RA003", node,
+                       "fault_point() with a non-literal site name "
+                       "defeats drift detection")
+
+    def _check_nondeterminism(self, node: ast.Call,
+                              dotted: str | None) -> None:
+        if dotted is None:
+            return
+        parts = dotted.split(".")
+        if parts[0] == "random" and len(parts) == 2:
+            if parts[1] in _PY_RANDOM:
+                self._emit("RA004", node,
+                           f"stdlib random.{parts[1]}() draws from the "
+                           f"unseeded global RNG")
+            elif parts[1] == "Random" and not node.args:
+                self._emit("RA004", node,
+                           "random.Random() without a seed argument")
+        if parts[0] == "numpy" and len(parts) >= 2 and parts[1] == "random":
+            tail = parts[-1]
+            if tail == "default_rng" and not node.args and not node.keywords:
+                self._emit("RA004", node,
+                           "np.random.default_rng() without a seed")
+            elif len(parts) == 3 and tail in _NP_LEGACY:
+                self._emit("RA004", node,
+                           f"legacy np.random.{tail}() uses the global "
+                           f"RNG state")
+
+    # ---- SITES catalog (RA003 input) -----------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if (len(node.targets) == 1 and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "SITES"
+                and isinstance(node.value, (ast.Tuple, ast.List))):
+            entries = []
+            for el in node.value.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    entries.append(el.value)
+            if entries:
+                self.rep.sites_catalog = (tuple(entries), node.lineno)
+        self.generic_visit(node)
+
+    # ---- except handlers (RA005) ---------------------------------------
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        broad = None
+        if node.type is None:
+            broad = "bare `except:`"
+        else:
+            types = (node.type.elts
+                     if isinstance(node.type, ast.Tuple) else [node.type])
+            for t in types:
+                if isinstance(t, ast.Name) and t.id in ("Exception",
+                                                        "BaseException"):
+                    broad = f"`except {t.id}`"
+                    break
+        if broad is not None:
+            self._emit("RA005", node, f"{broad} without an "
+                                      f"allow-broad-except annotation")
+        self.generic_visit(node)
+
+    # ---- function defs (RA006 + RA007 collection) ----------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_defaults(node)
+        self._func_defs.append(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def _check_defaults(self, node) -> None:
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = (isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                  ast.DictComp, ast.SetComp))
+                   or (isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                       and d.func.id in ("list", "dict", "set", "bytearray")))
+            if bad:
+                self._emit("RA006", d, "mutable default argument")
+
+    # ---- RA007: tracer-leak heuristic ----------------------------------
+
+    def finalize(self) -> None:
+        """Post-pass rules that need the whole module collected first."""
+        if "RA007" not in self.rules:
+            return
+        for fn in self._func_defs:
+            static = self._jit_static_params(fn)
+            if static is None and fn.name not in self._pallas_kernels:
+                continue
+            params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)]
+            traced = set(params) - (static or set())
+            if params and params[0] in ("self", "cls"):
+                traced.discard(params[0])
+            self._scan_traced_body(fn, traced)
+
+    def visit_Module(self, node: ast.Module) -> None:
+        # collect pallas kernel names first (a kernel is usually defined
+        # before the pallas_call that references it, but not always)
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                d, _ = self._dotted_shallow(n.func)
+                if d is not None and d.rsplit(".", 1)[-1] == "pallas_call":
+                    if n.args and isinstance(n.args[0], ast.Name):
+                        self._pallas_kernels.add(n.args[0].id)
+        self.generic_visit(node)
+
+    def _dotted_shallow(self, node) -> tuple[str | None, bool]:
+        # like _dotted but usable before alias maps are filled (module
+        # walk): falls back to raw names
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None, False
+        parts.append(node.id)
+        return ".".join(reversed(parts)), False
+
+    def _jit_static_params(self, fn: ast.FunctionDef) -> set[str] | None:
+        """static param names if ``fn`` is jit-decorated, else None."""
+        for dec in fn.decorator_list:
+            target, static = dec, set()
+            if isinstance(dec, ast.Call):
+                d, _ = self._dotted(dec.func)
+                if d is not None and d.rsplit(".", 1)[-1] == "partial":
+                    if not dec.args:
+                        continue
+                    target = dec.args[0]
+                    static = self._static_names(fn, dec.keywords)
+                else:
+                    # jax.jit(...) used directly as a decorator factory
+                    target = dec.func
+                    static = self._static_names(fn, dec.keywords)
+            d, _ = self._dotted(target)
+            if d in ("jax.jit", "jit") or (
+                    d is not None and d.endswith(".jit")):
+                return static
+        return None
+
+    def _static_names(self, fn: ast.FunctionDef, keywords) -> set[str]:
+        params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)]
+        static: set[str] = set()
+        for kw in keywords:
+            if kw.arg == "static_argnames":
+                for el in self._const_elements(kw.value):
+                    if isinstance(el, str):
+                        static.add(el)
+            elif kw.arg == "static_argnums":
+                for el in self._const_elements(kw.value):
+                    if isinstance(el, int) and 0 <= el < len(params):
+                        static.add(params[el])
+        return static
+
+    @staticmethod
+    def _const_elements(node) -> list:
+        if isinstance(node, ast.Constant):
+            return [node.value]
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return [el.value for el in node.elts
+                    if isinstance(el, ast.Constant)]
+        return []
+
+    def _scan_traced_body(self, fn, traced: set[str]) -> None:
+        """Flag truthiness/casts of bare traced params inside ``fn``,
+        skipping nested function definitions (they trace separately)."""
+        if not traced:
+            return
+        stack = list(ast.iter_child_nodes(fn))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, (ast.If, ast.While)):
+                for name in self._truth_names(node.test):
+                    if name in traced:
+                        kind = "if" if isinstance(node, ast.If) else "while"
+                        self._emit("RA007", node,
+                                   f"Python `{kind}` on traced value "
+                                   f"{name!r} inside a jit/pallas scope")
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id in ("bool", "int", "float")
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in traced):
+                self._emit("RA007", node,
+                           f"{node.func.id}() concretizes traced value "
+                           f"{node.args[0].id!r} inside a jit/pallas scope")
+            stack.extend(ast.iter_child_nodes(node))
+
+    @staticmethod
+    def _truth_names(test) -> list[str]:
+        """Names used directly as truth values (``if x``, ``if not x``,
+        ``if x and y``); comparisons (incl. ``is None``) are exempt."""
+        if isinstance(test, ast.Name):
+            return [test.id]
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return _Scanner._truth_names(test.operand)
+        if isinstance(test, ast.BoolOp):
+            out = []
+            for v in test.values:
+                out.extend(_Scanner._truth_names(v))
+            return out
+        return []
+
+
+def scan_file(path: str, source: str,
+              rules: frozenset[str] | None = None) -> FileReport:
+    """Run every (enabled) rule over one module's source."""
+    rep = FileReport(path)
+    enabled = frozenset(RULES) if rules is None else rules
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        rep.findings.append(Finding(
+            rule="RA000", path=path, line=e.lineno or 1, col=e.offset or 1,
+            message=f"syntax error: {e.msg}", hint="fix the parse error",
+            key=line_key("RA000", path, source.splitlines()[0]
+                         if source else "")))
+        return rep
+    scanner = _Scanner(rep, source.splitlines(), enabled)
+    scanner.visit(tree)
+    scanner.finalize()
+    return rep

@@ -85,7 +85,7 @@ class GraphBuilder:
             raise ValueError(
                 f"trace_fn requires a host-side round loop; "
                 f"{cfg.strategy!r} does not have one")
-        t_start = time.time()
+        t_start = time.monotonic()
         retries0 = _retry_mod.retries_total()
         build_fn = getattr(self, f"_build_{cfg.strategy}")
         graph, stats, timings, extras = build_fn(root, data, sizes, trace_fn)
@@ -95,7 +95,7 @@ class GraphBuilder:
         # pairs (nonzero only for outofcore; 0 = clean data plane)
         stats["retries"] = _retry_mod.retries_total() - retries0
         stats.setdefault("degraded_pairs", 0)
-        timings["total_s"] = time.time() - t_start
+        timings["total_s"] = time.monotonic() - t_start
         return BuildResult(graph=graph, data=data, config=cfg, stats=stats,
                            timings=timings, extras=extras)
 
@@ -107,7 +107,7 @@ class GraphBuilder:
 
     def _subgraphs(self, root, data, sizes):
         cfg = self.config
-        t0 = time.time()
+        t0 = time.monotonic()
         subs, tiers = build_leaves(jax.random.fold_in(root, 1), data, sizes,
                                    cfg.k, lam=cfg.lam,
                                    max_iters=cfg.subgraph_iters,
@@ -115,7 +115,7 @@ class GraphBuilder:
                                    fused=cfg.fused_localjoin,
                                    strategy=cfg.leaf_strategy,
                                    crossover=cfg.leaf_crossover)
-        return subs, tiers, time.time() - t0
+        return subs, tiers, time.monotonic() - t0
 
     # ---- strategy implementations --------------------------------------
 
@@ -145,7 +145,7 @@ class GraphBuilder:
         wrapped = None
         if trace_fn is not None:
             wrapped = lambda g, it, st: trace_fn(merge_full(g, g0), it, st)
-        t0 = time.time()
+        t0 = time.monotonic()
         g_cross, stats = merge_fn(jax.random.fold_in(root, 2), data, sizes,
                                   g0, lam=cfg.lam, k=cfg.k,
                                   max_iters=cfg.max_iters, delta=cfg.delta,
@@ -154,21 +154,21 @@ class GraphBuilder:
                                   trace_fn=wrapped)
         graph = merge_full(g_cross, g0)
         stats.setdefault("leaf_tiers", list(tiers))
-        return graph, stats, _timings(t_sub, time.time() - t0), {}
+        return graph, stats, _timings(t_sub, time.monotonic() - t0), {}
 
     def _build_hierarchy(self, root, data, sizes, trace_fn):
         cfg = self.config
         subs, tiers, t_sub = self._subgraphs(root, data, sizes)
         if len(sizes) == 1:
             return subs[0], _empty_stats(tiers), _timings(t_sub, 0.0), {}
-        t0 = time.time()
+        t0 = time.monotonic()
         graph, stats = two_way_hierarchy(jax.random.fold_in(root, 2), data,
                                          sizes, subs, lam=cfg.lam, k=cfg.k,
                                          max_iters=cfg.max_iters,
                                          delta=cfg.delta, metric=cfg.metric,
                                          fused=cfg.fused_localjoin)
         stats.setdefault("leaf_tiers", list(tiers))
-        return graph, stats, _timings(t_sub, time.time() - t0), {}
+        return graph, stats, _timings(t_sub, time.monotonic() - t0), {}
 
     def _build_distributed(self, root, data, sizes, trace_fn):
         from repro.core.distributed import build_distributed
@@ -185,7 +185,7 @@ class GraphBuilder:
         mesh = make_nodes_mesh(m)
         g_ids = jnp.concatenate([s.ids for s in subs])
         g_dists = jnp.concatenate([s.dists for s in subs])
-        t0 = time.time()
+        t0 = time.monotonic()
         ids, dists = build_distributed(mesh, data, g_ids, g_dists,
                                        jax.random.fold_in(root, 2), k=cfg.k,
                                        lam=cfg.lam,
@@ -202,7 +202,7 @@ class GraphBuilder:
                                  "leaf_tiers": list(tiers)}
         extras = {"mesh": mesh, "subgraph_ids": g_ids,
                   "subgraph_dists": g_dists}
-        merge_s = time.time() - t0
+        merge_s = time.monotonic() - t0
         # the collectives are fused into one device program, so the host
         # cannot split their wall time out; structural exchange volume
         # comes from the HLO dry run (benchmarks/tab3_distributed.py)

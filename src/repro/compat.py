@@ -9,7 +9,10 @@ version-sensitive funnels through here so call sites stay clean:
                              installed jax supports them;
   * :func:`abstract_mesh`  — ``AbstractMesh`` across both constructor
                              signatures (0.4.x takes ``((name, size), …)``);
-  * :func:`shard_map`      — ``jax.shard_map`` or the experimental export.
+  * :func:`shard_map`      — ``jax.shard_map`` or the experimental export;
+  * :class:`Mesh` / :class:`NamedSharding` — re-exports, stable today,
+    but every mesh-adjacent import funnels here (lint rule RA002) so a
+    future relocation costs one edit.
 """
 
 from __future__ import annotations
@@ -17,6 +20,7 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
+from jax.sharding import Mesh, NamedSharding  # noqa: F401  (re-exports)
 
 try:  # jax >= 0.5
     from jax.sharding import AxisType as _AxisType

@@ -305,6 +305,8 @@ class _WriteBehind:
             if self._err is None:
                 try:
                     self._attempt(fn)
+                # lint: allow-broad-except(fail-stop latch, re-raised at
+                # the next submit/close — any failure kind must park)
                 except BaseException as e:      # noqa: BLE001 — latched
                     self._err = e
             done.set()
@@ -385,6 +387,8 @@ class _Prefetcher:
             try:
                 fault_point("prefetch.job")
                 self._results.put((idx, job(), None))
+            # lint: allow-broad-except(worker failure degrades the pair
+            # to a sync read instead of killing the build)
             except BaseException as e:          # noqa: BLE001 — degradable
                 self._results.put((idx, None, e))
 

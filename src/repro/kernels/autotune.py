@@ -96,6 +96,7 @@ def lookup(kernel: str, shape: tuple, default: int,
         return default
     try:
         win = tuner(shape, default)
+    # lint: allow-broad-except(a failed sweep must never fail a build)
     except Exception:                                  # noqa: BLE001
         win = default                # a failed sweep must never fail a build
     with _LOCK:

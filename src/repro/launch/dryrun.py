@@ -59,7 +59,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         return result
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     model = build(cfg)
-    t0 = time.time()
+    t0 = time.monotonic()
     result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
               "mesh_shape": dict(mesh.shape), "status": "ok",
               "seq_len": shape.seq_len, "global_batch": shape.global_batch}
@@ -93,10 +93,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             aparams = model.abstract_params()
             lowered = decode_jit(abatch, acaches).lower(aparams, acaches,
                                                         abatch)
-        result["lower_s"] = round(time.time() - t0, 1)
-        t1 = time.time()
+        result["lower_s"] = round(time.monotonic() - t0, 1)
+        t1 = time.monotonic()
         compiled = lowered.compile()
-        result["compile_s"] = round(time.time() - t1, 1)
+        result["compile_s"] = round(time.monotonic() - t1, 1)
 
         ca = compiled.cost_analysis() or {}
         # NOTE: XLA cost_analysis counts while-loop bodies ONCE; with
@@ -113,6 +113,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                 "generated_code_bytes":
                     getattr(ma, "generated_code_size_in_bytes", None),
             }
+        # lint: allow-broad-except(memory stats are best-effort data)
         except Exception as e:                              # noqa: BLE001
             result["memory"] = {"error": str(e)}
         hlo = compiled.as_text()
@@ -125,6 +126,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         result["max_loop_multiplier"] = stats["max_multiplier"]
         result["op_census"] = op_census(hlo)
         result["hlo_lines"] = hlo.count("\n")
+    # lint: allow-broad-except(a failed cell is recorded as data, never
+    # kills the sweep)
     except Exception as e:                                  # noqa: BLE001
         result["status"] = "fail"
         result["error"] = f"{type(e).__name__}: {e}"

@@ -78,12 +78,12 @@ def main(argv=None):
                       inner_iters=args.inner_iters,
                       subgraph_iters=args.nnd_iters, spool_dir=spool)
     data = sift_like(jax.random.key(0), n, args.d)
-    t0 = time.time()
+    t0 = time.monotonic()
     result = GraphBuilder(cfg).build(data)
     print(f"[knn_build] {strategy}: graph built n={n} k={args.k} "
           f"(subgraphs {result.timings['subgraphs_s']:.1f}s, "
           f"merge {result.timings['merge_s']:.1f}s, "
-          f"{time.time() - t0:.1f}s total)", flush=True)
+          f"{time.monotonic() - t0:.1f}s total)", flush=True)
 
     if args.eval:
         r = result.recall(at=10)

@@ -471,6 +471,7 @@ class SearchEngine:
                                 f"{vec.shape}, expected "
                                 f"({self._qbuf.shape[1]},)")
                         self._qbuf[s] = vec
+                    # lint: allow-broad-except(restore-and-reraise)
                     except Exception:
                         # the failing row restores itself; the outer
                         # handler restores everything admitted before it
@@ -502,6 +503,7 @@ class SearchEngine:
             st, fin_d = self._round_step(qdev, self._state, fresh_d,
                                          clear_d)
             fin = np.asarray(fin_d)
+        # lint: allow-broad-except(rollback-and-reraise)
         except Exception:
             # roll back the WHOLE round's admissions (front, original
             # order), like run_batch: their device state was never
@@ -578,6 +580,7 @@ class SearchEngine:
                 ev_h = np.asarray(jax.device_get(evals[:fill]))
             ids_h, d_h = (np.asarray(jax.device_get(x))
                           for x in (ids[:fill], dists[:fill]))
+        # lint: allow-broad-except(requeue-and-reraise)
         except Exception:
             # put the batch back (front, original order) so a failure —
             # e.g. one ragged query row — neither loses requests nor
@@ -684,6 +687,7 @@ class SearchEngine:
             for tok, row in zip(tokens, host_q):
                 self._submit_blocking(tok, row)
             self.drain()
+        # lint: allow-broad-except(release-slots-and-reraise)
         except Exception:
             toks = set(tokens)
             self._release(toks)
@@ -718,6 +722,7 @@ class SearchEngine:
                         ids, dists, _ = self.result(rid0)
                         yield rid0, ids, dists
             self.drain()
+        # lint: allow-broad-except(release-unserved-and-reraise)
         except Exception:
             self._release({rid for rid in waiting if rid not in self._done})
             raise

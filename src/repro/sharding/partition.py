@@ -23,8 +23,9 @@ import re
 from typing import Any
 
 import jax
-from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import Mesh, NamedSharding
 
 # rules: (path regex, spec template for the LAST len(template) dims,
 # leading dims None). Axis names: "tp" → model, "fsdp" → data axes.

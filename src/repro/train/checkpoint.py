@@ -53,6 +53,7 @@ class CheckpointManager:
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.replace(tmp, final)                      # atomic publish
+        # lint: allow-broad-except(tmp-dir cleanup, then re-raises)
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise

@@ -59,7 +59,7 @@ class Trainer:
             return params, opt_state, dict(metrics, grad_norm=gnorm)
 
         history = []
-        t0 = time.time()
+        t0 = time.monotonic()
         for step in range(start, steps):
             toks, labels = self.pipeline.batch(step)
             params, opt_state, metrics = step_fn(
@@ -69,8 +69,8 @@ class Trainer:
                 history.append((step + 1, m))
                 log_fn(f"step {step+1:5d} loss {m['loss']:.4f} "
                        f"gnorm {m['grad_norm']:.3f} "
-                       f"({(time.time()-t0)/self.log_every:.2f}s/step)")
-                t0 = time.time()
+                       f"({(time.monotonic()-t0)/self.log_every:.2f}s/step)")
+                t0 = time.monotonic()
             if mgr and (step + 1) % self.ckpt_every == 0:
                 mgr.save_async(step + 1, (params, opt_state))
         if mgr:

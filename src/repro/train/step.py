@@ -19,9 +19,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import Mesh, NamedSharding
 from repro.models.model import Model
 from repro.sharding import partition
 from repro.train.optim import AdamW

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -5,6 +7,31 @@ import pytest
 # Tests run on the default single CPU device; multi-device behaviour is
 # exercised via subprocesses (see test_distributed.py / test_dryrun_mini.py)
 # so nothing here may set --xla_force_host_platform_device_count.
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _race_detector():
+    """``REPRO_RACE_DETECT=1`` arms the lock-discipline monitor for the
+    whole session (the chaos-matrix race arm in CI).  The session fails
+    at teardown on any lock-order inversion or inconsistently-locked
+    shared write; the full report lands in ``REPRO_RACE_REPORT``
+    (default ``race_report.json``) for artifact upload."""
+    if os.environ.get("REPRO_RACE_DETECT") != "1":
+        yield
+        return
+    from repro.analysis.races import RaceMonitor
+
+    mon = RaceMonitor.install()
+    yield
+    path = os.environ.get("REPRO_RACE_REPORT", "race_report.json")
+    rep = mon.write_report(path)
+    mon.uninstall()
+    assert not rep["lock_order_cycles"], (
+        f"lock-order inversions detected (see {path}): "
+        f"{rep['lock_order_cycles']}")
+    assert not rep["races"], (
+        f"inconsistently-locked shared writes detected (see {path}): "
+        f"{rep['races']}")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,542 @@
+"""repro.analysis — invariant linter + lock-discipline race detector.
+
+Static half: one passing and one failing fixture snippet per rule
+(RA001–RA007), the suppression annotations, the baseline round-trip and
+SITES drift in both directions.  Dynamic half: a seeded lock-order
+inversion the detector must flag, the consistent-order negative control,
+and Eraser-style write-lockset detection with and without a lock.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import pytest
+
+from repro.analysis.lint import (apply_baseline, lint_paths, load_baseline,
+                                 write_baseline)
+from repro.analysis.races import RaceMonitor
+
+
+def run_lint(tmp_path, files: dict[str, str], rules=None):
+    for name, src in files.items():
+        p = tmp_path / name
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return lint_paths([str(tmp_path)], rules)
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# RA001 — wall clock in elapsed math
+# ---------------------------------------------------------------------------
+
+
+def test_ra001_flags_wall_clock(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import time\n"
+        "t0 = time.time()\n"
+    )})
+    assert rules_of(fs) == ["RA001"]
+    assert fs[0].line == 2
+    assert "monotonic" in fs[0].hint
+
+
+def test_ra001_monotonic_and_aliased_import_pass(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import time as clock\n"
+        "t0 = clock.monotonic()\n"
+        "dt = clock.perf_counter()\n"
+    )})
+    assert fs == []
+
+
+def test_ra001_tracks_import_alias(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import time as clock\n"
+        "t0 = clock.time()\n"
+    )})
+    assert rules_of(fs) == ["RA001"]
+
+
+def test_ra001_allow_wall_clock_annotation(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import time\n"
+        "# lint: allow-wall-clock(report timestamp shown to humans)\n"
+        "stamp = time.time()\n"
+    )})
+    assert fs == []
+
+
+def test_annotation_requires_nonempty_reason(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import time\n"
+        "stamp = time.time()  # lint: allow-wall-clock()\n"
+    )})
+    assert rules_of(fs) == ["RA001"]
+
+
+# ---------------------------------------------------------------------------
+# RA002 — version-sensitive jax imports outside repro.compat
+# ---------------------------------------------------------------------------
+
+
+def test_ra002_flags_direct_sharding_import(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "from jax.sharding import Mesh, NamedSharding\n"
+    )})
+    assert rules_of(fs) == ["RA002", "RA002"]
+
+
+def test_ra002_partitionspec_and_compat_route_pass(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "from jax.sharding import PartitionSpec as P\n"
+        "from repro.compat import Mesh, NamedSharding\n"
+    )})
+    assert fs == []
+
+
+def test_ra002_flags_dotted_use_under_module_alias(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import jax\n"
+        "m = jax.sharding.Mesh(devs, ('x',))\n"
+    )})
+    assert rules_of(fs) == ["RA002"]
+
+
+def test_ra002_compat_module_itself_is_exempt(tmp_path):
+    fs = run_lint(tmp_path, {"repro/compat.py": (
+        "from jax.sharding import Mesh, AxisType\n"
+    )})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RA003 — fault-site drift, both directions
+# ---------------------------------------------------------------------------
+
+_CATALOG = (
+    "SITES = (\n"
+    '    "spool.put",\n'
+    '    "engine.dispatch",\n'
+    ")\n"
+)
+
+
+def test_ra003_in_sync_passes(tmp_path):
+    fs = run_lint(tmp_path, {
+        "faults.py": _CATALOG,
+        "user.py": (
+            "from faults import fault_point\n"
+            'fault_point("spool.put")\n'
+            'fault_point("engine.dispatch")\n'
+        ),
+    })
+    assert fs == []
+
+
+def test_ra003_unknown_site_flagged(tmp_path):
+    fs = run_lint(tmp_path, {
+        "faults.py": _CATALOG + (
+            'fault_point("spool.put")\n'
+            'fault_point("engine.dispatch")\n'
+        ),
+        "user.py": 'fault_point("spool.putt")\n',   # typo'd site
+    })
+    assert rules_of(fs) == ["RA003"]
+    assert "spool.putt" in fs[0].message
+
+
+def test_ra003_dead_catalog_entry_flagged(tmp_path):
+    fs = run_lint(tmp_path, {
+        "faults.py": _CATALOG,
+        "user.py": 'fault_point("spool.put")\n',    # dispatch never armed
+    })
+    assert rules_of(fs) == ["RA003"]
+    assert "engine.dispatch" in fs[0].message
+
+
+def test_ra003_skipped_without_a_catalog(tmp_path):
+    # a partial scan (no SITES in the tree) cannot judge drift
+    fs = run_lint(tmp_path, {"user.py": 'fault_point("anything")\n'})
+    assert fs == []
+
+
+def test_ra003_non_literal_site_flagged(tmp_path):
+    fs = run_lint(tmp_path, {"user.py": (
+        "site = compute()\n"
+        "fault_point(site)\n"
+    )})
+    assert rules_of(fs) == ["RA003"]
+
+
+def test_ra003_live_tree_is_in_sync():
+    # the real catalog: every SITES entry armed, every literal known
+    fs = [f for f in lint_paths(["src/repro"], frozenset({"RA003"}))]
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RA004 — unseeded nondeterminism
+# ---------------------------------------------------------------------------
+
+
+def test_ra004_flags_unseeded_sources(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import random\n"
+        "import numpy as np\n"
+        "x = random.random()\n"
+        "g = np.random.default_rng()\n"
+        "y = np.random.rand(3)\n"
+    )})
+    assert rules_of(fs) == ["RA004", "RA004", "RA004"]
+
+
+def test_ra004_seeded_sources_pass(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import random\n"
+        "import numpy as np\n"
+        "r = random.Random(7)\n"
+        "g = np.random.default_rng(0)\n"
+        "p = np.random.Generator(np.random.Philox(key=123))\n"
+    )})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RA005 — broad except without annotation
+# ---------------------------------------------------------------------------
+
+
+def test_ra005_flags_bare_and_broad(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "try:\n    f()\nexcept Exception:\n    pass\n"
+        "try:\n    f()\nexcept:\n    pass\n"
+        "try:\n    f()\nexcept (ValueError, BaseException):\n    pass\n"
+    )})
+    assert rules_of(fs) == ["RA005", "RA005", "RA005"]
+
+
+def test_ra005_narrow_or_annotated_pass(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "try:\n    f()\nexcept ValueError:\n    pass\n"
+        "try:\n    f()\n"
+        "# lint: allow-broad-except(cleanup then re-raise)\n"
+        "except Exception:\n    raise\n"
+    )})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RA006 — mutable default arguments
+# ---------------------------------------------------------------------------
+
+
+def test_ra006_flags_mutable_defaults(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "def f(x, acc=[]):\n    return acc\n"
+        "def g(x, table={}, *, tags=set()):\n    return table\n"
+    )})
+    assert rules_of(fs) == ["RA006", "RA006", "RA006"]
+
+
+def test_ra006_none_default_passes(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "def f(x, acc=None, k=16, name='q'):\n"
+        "    acc = [] if acc is None else acc\n"
+        "    return acc\n"
+    )})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RA007 — tracer leak heuristic
+# ---------------------------------------------------------------------------
+
+
+def test_ra007_flags_python_branch_on_traced_arg(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x:\n"
+        "        return x\n"
+        "    return bool(x)\n"
+    )})
+    assert rules_of(fs) == ["RA007", "RA007"]
+
+
+def test_ra007_static_args_and_is_none_pass(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, static_argnames=('flag',))\n"
+        "def f(x, flag, mask=None):\n"
+        "    if flag:\n"
+        "        return x\n"
+        "    if mask is not None:\n"
+        "        return x\n"
+        "    return x\n"
+    )})
+    assert fs == []
+
+
+def test_ra007_covers_pallas_kernels(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "from jax.experimental import pallas as pl\n"
+        "def kern(x_ref, o_ref):\n"
+        "    if x_ref:\n"
+        "        o_ref[...] = x_ref[...]\n"
+        "def call(x):\n"
+        "    return pl.pallas_call(kern, out_shape=x)(x)\n"
+    )})
+    assert rules_of(fs) == ["RA007"]
+
+
+def test_ra007_plain_function_not_scanned(tmp_path):
+    fs = run_lint(tmp_path, {"a.py": (
+        "def f(x):\n"
+        "    if x:\n"
+        "        return x\n"
+        "    return x\n"
+    )})
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+_VIOLATION = "import time\nt0 = time.time()\n"
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = run_lint(tmp_path, {"a.py": _VIOLATION})
+    assert len(findings) == 1
+
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(findings, bl_path)
+    baseline = load_baseline(bl_path)
+    assert sum(baseline.values()) == 1
+
+    # the baselined finding rides
+    res = apply_baseline(lint_paths([str(tmp_path / "a.py")]), baseline)
+    assert res.new == [] and len(res.suppressed) == 1 and res.stale == []
+
+    # a NEW violation on top of the baselined one still fails
+    (tmp_path / "a.py").write_text(_VIOLATION + "t1 = time.time()\n")
+    res = apply_baseline(lint_paths([str(tmp_path / "a.py")]), baseline)
+    assert len(res.new) == 1 and len(res.suppressed) == 1
+
+    # fixing the baselined line reports the stale key
+    (tmp_path / "a.py").write_text("import time\nt0 = time.monotonic()\n")
+    res = apply_baseline(lint_paths([str(tmp_path / "a.py")]), baseline)
+    assert res.new == [] and res.suppressed == [] and len(res.stale) == 1
+
+
+def test_baseline_key_survives_line_moves(tmp_path):
+    before = run_lint(tmp_path, {"a.py": _VIOLATION})
+    (tmp_path / "a.py").write_text("import time\n\n\nt0 = time.time()\n")
+    after = lint_paths([str(tmp_path / "a.py")])
+    assert before[0].key == after[0].key
+    assert before[0].line != after[0].line
+
+
+# ---------------------------------------------------------------------------
+# CLI + the tree-wide gate
+# ---------------------------------------------------------------------------
+
+
+def test_cli_fail_on_findings_and_report(tmp_path):
+    from repro.analysis.cli import main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(_VIOLATION)
+    report = tmp_path / "report.json"
+    empty_bl = tmp_path / "empty.json"
+
+    rc = main([str(bad), "--fail-on-findings", "--baseline", str(empty_bl),
+               "--report", str(report)])
+    assert rc == 1
+    doc = json.loads(report.read_text())
+    assert doc["counts"]["new"] == 1
+    assert doc["new"][0]["rule"] == "RA001"
+
+    bad.write_text("import time\nt0 = time.monotonic()\n")
+    rc = main([str(bad), "--fail-on-findings", "--baseline", str(empty_bl)])
+    assert rc == 0
+
+
+def test_cli_write_baseline_then_green(tmp_path):
+    from repro.analysis.cli import main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(_VIOLATION)
+    bl = tmp_path / "bl.json"
+    assert main([str(bad), "--write-baseline", "--baseline", str(bl)]) == 0
+    assert main([str(bad), "--fail-on-findings",
+                 "--baseline", str(bl)]) == 0
+
+
+def test_source_tree_is_clean():
+    """The acceptance gate: the shipped tree has zero unsuppressed
+    findings against the checked-in baseline."""
+    from repro.analysis.cli import main
+
+    assert main(["src/repro", "--fail-on-findings"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# race detector
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def monitor():
+    if RaceMonitor._installed is not None:
+        pytest.skip("a session-level RaceMonitor is already installed "
+                    "(REPRO_RACE_DETECT=1)")
+    mon = RaceMonitor.install()
+    try:
+        yield mon
+    finally:
+        if RaceMonitor._installed is mon:
+            mon.uninstall()
+
+
+def _run(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    t.join()
+
+
+def test_lock_order_inversion_flagged(monitor):
+    a = threading.Lock()
+    b = threading.Lock()
+
+    def t1():
+        with a:
+            with b:
+                pass
+
+    def t2():          # opposite order: the seeded inversion
+        with b:
+            with a:
+                pass
+
+    _run(t1)
+    _run(t2)
+    rep = monitor.uninstall()
+    assert len(rep["lock_order_cycles"]) == 1
+    cyc = rep["lock_order_cycles"][0]
+    assert len(cyc) == 2 and all("test_analysis.py" in s for s in cyc)
+
+
+def test_consistent_order_not_flagged(monitor):
+    a = threading.Lock()
+    b = threading.Lock()
+
+    def t(n):
+        def body():
+            for _ in range(n):
+                with a:
+                    with b:
+                        pass
+        return body
+
+    _run(t(3))
+    _run(t(5))
+    rep = monitor.uninstall()
+    assert rep["lock_order_cycles"] == []
+    assert len(rep["edges"]) == 1            # a -> b only
+
+
+def test_reentrant_rlock_not_an_edge(monitor):
+    r = threading.RLock()
+
+    def t():
+        with r:
+            with r:                          # reentrant, no self-edge
+                pass
+
+    _run(t)
+    rep = monitor.uninstall()
+    assert rep["edges"] == [] and rep["lock_order_cycles"] == []
+
+
+class _Plain:
+    pass
+
+
+def test_unlocked_shared_writes_flagged(monitor):
+    box = monitor.watch(_Plain())
+
+    def writer(v):
+        def body():
+            for _ in range(20):
+                box.x = v
+        return body
+
+    _run(writer(1))
+    _run(writer(2))
+    rep = monitor.uninstall()
+    assert any(r["attr"] == "x" and r["class"] == "_Plain"
+               for r in rep["races"])
+
+
+def test_consistently_locked_writes_pass(monitor):
+    box = monitor.watch(_Plain())
+    mu = threading.Lock()
+
+    def writer(v):
+        def body():
+            for _ in range(20):
+                with mu:
+                    box.x = v
+        return body
+
+    _run(writer(1))
+    _run(writer(2))
+    rep = monitor.uninstall()
+    assert rep["races"] == []
+
+
+def test_single_thread_unlocked_writes_pass(monitor):
+    # single-writer-thread patterns (write-behind drainer) stay silent
+    box = monitor.watch(_Plain())
+    for i in range(20):
+        box.x = i
+    rep = monitor.uninstall()
+    assert rep["races"] == []
+
+
+def test_watch_respects_attr_filter(monitor):
+    box = monitor.watch(_Plain(), frozenset({"watched"}))
+
+    def writer(v):
+        def body():
+            box.unwatched = v
+        return body
+
+    _run(writer(1))
+    _run(writer(2))
+    rep = monitor.uninstall()
+    assert rep["races"] == []
+
+
+def test_monitored_lock_still_is_a_lock(monitor):
+    lk = threading.Lock()
+    assert lk.acquire(False) is True
+    assert lk.locked()
+    lk.release()
+    assert not lk.locked()
+    cond = threading.Condition()             # default RLock via factory
+    with cond:
+        cond.notify_all()
+    ev = threading.Event()
+    ev.set()
+    assert ev.wait(0.01)
