@@ -7,7 +7,9 @@ fig8    merge vs baselines   fig9   m-subgraph sweep
 fig10   index-graph search   fig12  merge vs scratch cost
 tab3    distributed (Alg.3)  roofline  kernel models + dry-run aggregation
 localjoin  fused join_topk pipeline vs seed triple stream (BENCH json)
-search     fused/compacted/visited engine arms vs seed scan loop (BENCH json)
+search     fused/compacted/visited/overload engine arms vs seed scan loop
+           (BENCH json; overload drives the resilience wrapper at 3×
+           capacity and reports shed rate + per-rung recall)
 merge      overlapped vs serial spool data plane + fused merge_graphs (BENCH json)
 stream     sustained upsert/delete/query mix over the live index (BENCH json)
 leaf       bruteforce vs NN-Descent leaf tier + crossover dispatch (BENCH json)

@@ -9,7 +9,11 @@
    index → return neighbors (the RAG retrieval path),
 4. the index goes LIVE: a stale document is deleted, its revised text is
    re-embedded and upserted under the same doc id, and the answer to the
-   same query updates — the streaming upsert/delete path end to end.
+   same query updates — the streaming upsert/delete path end to end,
+5. the serving path goes MULTI-TENANT under overload: per-tenant quotas
+   admit a paying tier ahead of a free tier, a rate-limited client is
+   shed and retries within its deadline, and the resilience wrapper's
+   ledger (submitted == served + shed + expired + failed) balances.
 """
 
 import time
@@ -82,3 +86,57 @@ eng = live.engine(k=5, beam=32, slots=16, record_stats=False)
 eng.search(qvecs)
 print(f"engine @ generation {eng.generation}: "
       f"{live.n_live} live docs, {live.compactions} compactions")
+
+# 5. multi-tenant overload: wrap a fresh engine over the same live graph
+# in the resilience layer. "pro" is a paid tier (double fair-share
+# weight, higher eviction class); "free" is rate-limited to 2 req/s.
+# A manual clock keeps the demo deterministic — the wrapper accepts any
+# monotonic callable (production passes time.monotonic, the default).
+from repro.serve.resilience import (QuotaExceeded, ResilientEngine,
+                                    TenantQuota)
+
+clock = {"t": 0.0}
+res = ResilientEngine(
+    live.engine(k=5, beam=32, slots=8, record_stats=False),
+    tenants={"pro": TenantQuota(weight=2, priority=1),
+             "free": TenantQuota(rate=2.0, burst=4, weight=1)},
+    max_pending=32, clock=lambda: clock["t"])
+
+qh = np.asarray(qvecs)
+for i in range(12):                             # pro bursts freely
+    res.submit(("pro", i), qh[i % qh.shape[0]], tenant="pro")
+
+# free's bucket holds 4 tokens: the 5th submit sheds. A deadline-aware
+# client retries while its budget lasts, serving others' traffic in the
+# meantime (run_batch) as the bucket refills on the clock.
+gave_up = 0
+for i in range(8):
+    deadline = clock["t"] + 2.0
+    while True:
+        try:
+            res.submit(("free", i), qh[(i + 4) % qh.shape[0]],
+                       tenant="free", deadline_s=deadline - clock["t"])
+            break
+        except QuotaExceeded:
+            if clock["t"] + 0.25 > deadline:    # budget gone: back off
+                gave_up += 1
+                break
+            res.run_batch()                     # don't idle while waiting
+            clock["t"] += 0.25                  # refills 0.5 tokens
+
+res.drain()
+for rid in [("pro", i) for i in range(12)] \
+        + [("free", i) for i in range(8 - gave_up)]:
+    res.result(rid)                             # claim (raises if unserved)
+
+st = res.stats()
+balance = (st["served"] + st["shed"] + st["expired"] + st["failed"]
+           + st["pending"])
+assert st["submitted"] == balance, "conservation ledger broke"
+print(f"\ntenant demo [{st['health']}]: "
+      + ", ".join(f"{t} submitted={d['submitted']} shed={d['shed']}"
+                  for t, d in st["tenants"].items())
+      + f"; free clients that gave up: {gave_up}")
+print(f"ledger: submitted={st['submitted']} == served={st['served']} "
+      f"+ shed={st['shed']} + expired={st['expired']} "
+      f"+ failed={st['failed']} + pending={st['pending']}")

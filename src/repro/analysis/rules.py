@@ -36,6 +36,13 @@ module encodes them as static checks over the AST:
           silently-frozen branch at worst.  Parameters named in
           ``static_argnames``/``static_argnums`` and ``is None`` tests
           are exempt.
+  RA008   no ``time.sleep()`` outside ``repro/faults/`` — blocking waits
+          belong to the fault-injection/retry layer (``RetryPolicy``
+          backoff, ``FaultSpec`` delay faults).  A sleep anywhere else
+          stalls a serving round or a build phase invisibly; overload
+          handling must shed/degrade via the resilience layer instead of
+          blocking (DESIGN.md §10).  A deliberate pacing sleep carries a
+          ``# lint: allow-sleep(reason)`` annotation.
   ======  ==============================================================
 
 Findings carry file:line, the rule id and a fix hint; ``lint.py`` applies
@@ -73,6 +80,11 @@ RULES: dict[str, tuple[str, str]] = {
     "RA007": ("possible tracer leak in a jit/pallas scope",
               "branch with jnp.where/lax.cond/lax.while_loop, or make "
               "the argument static (static_argnames)"),
+    "RA008": ("time.sleep() outside the repro.faults layer",
+              "blocking waits belong to RetryPolicy/FaultSpec (repro/"
+              "faults/); shed or degrade via the resilience layer "
+              "instead, or annotate a deliberate pacing sleep with "
+              "`# lint: allow-sleep(reason)`"),
 }
 
 #: per-rule suppression-annotation token (``# lint: allow-<token>(reason)``)
@@ -80,6 +92,7 @@ ALLOW_TOKENS = {
     "RA001": "allow-wall-clock",
     "RA004": "allow-unseeded",
     "RA005": "allow-broad-except",
+    "RA008": "allow-sleep",
 }
 
 # the closing paren is optional so a long reason may wrap onto a
@@ -160,8 +173,11 @@ class _Scanner(ast.NodeVisitor):
         self.rep = report
         self.lines = source_lines
         self.rules = rules
-        self.is_compat = report.path.replace("\\", "/").endswith(
-            "repro/compat.py")
+        posix = report.path.replace("\\", "/")
+        self.is_compat = posix.endswith("repro/compat.py")
+        # the one layer allowed to block (RA008): injected delay faults
+        # and retry backoff live here by design
+        self.is_faults = "repro/faults/" in posix
         #: local alias -> imported module path ("np" -> "numpy")
         self._mod_alias: dict[str, str] = {}
         #: local name -> fully dotted origin ("Mesh" -> "jax.sharding.Mesh")
@@ -256,6 +272,10 @@ class _Scanner(ast.NodeVisitor):
         if dotted == "time.time":
             self._emit("RA001", node,
                        "time.time() — wall clock in elapsed/pacing math")
+        if dotted == "time.sleep" and not self.is_faults:
+            self._emit("RA008", node,
+                       "time.sleep() outside repro/faults/ — a blocking "
+                       "wait in a serving/build path")
         # RA002 on dotted usage is handled by visit_Attribute (the call's
         # func chain is visited there too; one finding, not two)
         self._check_fault_point(node, dotted)

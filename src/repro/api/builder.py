@@ -44,6 +44,7 @@ from repro.core.leaf import build_leaves
 from repro.core.mergesort import concat_subgraphs
 from repro.core.multiway import multi_way_merge, two_way_hierarchy
 from repro.core.twoway import merge_full, two_way_merge
+from repro.faults import ensure_unified
 from repro.faults import retry as _retry_mod
 
 TraceFn = Callable[[KnnGraph, int, dict], None]
@@ -90,11 +91,14 @@ class GraphBuilder:
         build_fn = getattr(self, f"_build_{cfg.strategy}")
         graph, stats, timings, extras = build_fn(root, data, sizes, trace_fn)
         stats.setdefault("strategy", cfg.strategy)
-        # uniform fault counters (DESIGN.md §7): retries this build
-        # performed (process-wide odometer delta) and degraded prefetch
-        # pairs (nonzero only for outofcore; 0 = clean data plane)
+        # the unified robustness schema (faults.UNIFIED_STATS_KEYS,
+        # DESIGN.md §10): retries this build performed (process-wide
+        # odometer delta), degraded prefetch pairs (nonzero only for
+        # outofcore; 0 = clean data plane), and shed/expired (serving-
+        # plane counters, 0 here) — one counter shape across builder,
+        # engine, and the resilience layer
         stats["retries"] = _retry_mod.retries_total() - retries0
-        stats.setdefault("degraded_pairs", 0)
+        ensure_unified(stats)
         timings["total_s"] = time.monotonic() - t_start
         return BuildResult(graph=graph, data=data, config=cfg, stats=stats,
                            timings=timings, extras=extras)

@@ -123,6 +123,8 @@ class Spool:
             floor = nbytes / (self.bandwidth_mbps * 1e6)
             remain = floor - (time.monotonic() - t_start)
             if remain > 0:
+                # lint: allow-sleep(the paced external-storage bandwidth
+                # model IS a deliberate stall — benchmarks only)
                 time.sleep(remain)
 
     def _io(self, site: str, name: str, fn, *, give_up_on=()):

@@ -10,7 +10,23 @@ from repro.faults.plan import (SITES, FaultDecision, FaultPlan, FaultSpec,
                                arm, armed, current_plan, disarm, fault_point)
 from repro.faults.retry import RetryPolicy
 
+#: the unified robustness-counter export schema (DESIGN.md §10): EVERY
+#: stats exporter — ``BuildResult.stats``, ``SearchEngine.stats()``,
+#: ``ResilientEngine.stats()`` — carries all four keys (0 when the plane
+#: has nothing to report), so dashboards read one schema across the
+#: build and serve planes instead of per-plane counter names.
+UNIFIED_STATS_KEYS = ("retries", "degraded_pairs", "shed", "expired")
+
+
+def ensure_unified(stats: dict) -> dict:
+    """Fill the unified-schema keys a stats dict is missing with 0."""
+    for key in UNIFIED_STATS_KEYS:
+        stats.setdefault(key, 0)
+    return stats
+
+
 __all__ = [
-    "SITES", "FaultDecision", "FaultPlan", "FaultSpec", "RetryPolicy",
-    "arm", "armed", "current_plan", "disarm", "fault_point",
+    "SITES", "UNIFIED_STATS_KEYS", "FaultDecision", "FaultPlan", "FaultSpec",
+    "RetryPolicy", "arm", "armed", "current_plan", "disarm", "ensure_unified",
+    "fault_point",
 ]

@@ -46,6 +46,8 @@ SITES = (
     "prefetch.job",       # one prefetcher load (raise/stall ⇒ degrade)
     "engine.dispatch",    # one SearchEngine batch / compaction-round dispatch
     "stream.compact",     # the LiveIndex compaction fold
+    "resilience.admit",   # one ResilientEngine admission decision
+    "resilience.probe",   # one half-open circuit-breaker probe dispatch
 )
 
 KINDS = ("error", "delay", "torn")

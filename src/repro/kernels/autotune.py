@@ -31,11 +31,23 @@ on TPU (``REPRO_AUTOTUNE=0`` disables them); elsewhere ``lookup`` returns
 the analytic default — CPU runs the jnp oracles anyway, and interpreter
 timings would be noise. ``record`` lets tests and offline sweeps inject
 winners on any backend.
+
+Winners PERSIST across processes: measured sweeps append to a JSON cache
+file (default ``~/.cache/repro/autotune.json``, ``REPRO_AUTOTUNE_CACHE``
+overrides the path; set it empty to disable persistence) written
+atomically (tmp + ``os.replace`` — the ``benchmarks/common.write_json``
+discipline, so a crashed writer never leaves a torn file). The file is
+loaded lazily once per process; a corrupt or unreadable cache is ignored
+and the in-process sweep repeats — file trouble must never fail a build.
+Keys serialize as ``kernel|shape|dtype|platform`` strings, so a cache
+written on one backend never leaks winners onto another.
 """
 
 from __future__ import annotations
 
+import json
 import os
+import tempfile
 import threading
 import time
 from typing import Callable
@@ -44,6 +56,11 @@ import jax
 
 _CACHE: dict[tuple, int] = {}
 _LOCK = threading.Lock()
+_PERSIST_LOADED = False
+
+#: persistent-cache schema version; a file with any other version (or no
+#: parseable version at all) is ignored, never "migrated"
+_PERSIST_VERSION = 1
 
 #: sweep ladder around the analytic optimum
 LADDER = (0.25, 0.5, 1.0, 2.0, 4.0)
@@ -68,24 +85,123 @@ def _key(kernel: str, shape: tuple, dtype: str = "float32") -> tuple:
 
 
 def clear_cache() -> None:
+    """Drop every in-process winner AND forget that the persistent file
+    was loaded (the next lookup re-reads it) — tests use this to
+    simulate a fresh process."""
+    global _PERSIST_LOADED
     with _LOCK:
         _CACHE.clear()
+        _PERSIST_LOADED = False
 
 
-def record(kernel: str, shape: tuple, block: int,
-           dtype: str = "float32") -> None:
-    """Pin a winner (tests / offline sweeps); same key as :func:`lookup`."""
+# ---- cross-process persistence --------------------------------------------
+
+def cache_path() -> str | None:
+    """The persistent winner file: ``REPRO_AUTOTUNE_CACHE`` if set
+    (empty ⇒ persistence off), else ``~/.cache/repro/autotune.json``."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env is not None:
+        return env or None
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def _serialize_key(key: tuple) -> str:
+    kernel, shape, dtype, platform = key
+    return "|".join((kernel, ",".join(str(s) for s in shape), dtype,
+                     platform))
+
+
+def _parse_key(text: str) -> tuple | None:
+    parts = text.split("|")
+    if len(parts) != 4:
+        return None
+    kernel, shape_s, dtype, platform = parts
+    try:
+        shape = tuple(int(s) for s in shape_s.split(",")) if shape_s else ()
+    except ValueError:
+        return None
+    return (kernel, shape, dtype, platform)
+
+
+def _load_persistent_locked() -> None:
+    """Merge the cache file into ``_CACHE`` (once per process, under
+    ``_LOCK``). Anything wrong with the file — missing, unreadable,
+    corrupt JSON, wrong schema — is ignored: the sweep just runs again
+    in-process, exactly as if no cache existed."""
+    global _PERSIST_LOADED
+    if _PERSIST_LOADED:
+        return
+    _PERSIST_LOADED = True
+    path = cache_path()
+    if path is None:
+        return
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+        if (not isinstance(doc, dict)
+                or doc.get("version") != _PERSIST_VERSION
+                or not isinstance(doc.get("winners"), dict)):
+            return
+        for key_s, block in doc["winners"].items():
+            key = _parse_key(str(key_s))
+            if key is not None and isinstance(block, int) and block >= 1:
+                _CACHE.setdefault(key, block)
+    except (OSError, ValueError):
+        return
+
+
+def _save_persistent_locked() -> None:
+    """Atomically publish the merged ``_CACHE`` (tmp + ``os.replace``;
+    caller holds ``_LOCK``). Best-effort: an unwritable cache directory
+    must never fail the sweep that produced the winner."""
+    path = cache_path()
+    if path is None:
+        return
+    doc = {"version": _PERSIST_VERSION,
+           "winners": {_serialize_key(k): v
+                       for k, v in sorted(_CACHE.items())}}
+    try:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(doc, f, indent=0, sort_keys=True)
+            os.replace(tmp, path)
+        # lint: allow-broad-except(unlink the tmp on ANY failure incl.
+        # KeyboardInterrupt, then reraise — no stray tmp files)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+    except OSError:
+        return
+
+
+def record(kernel: str, shape: tuple, block: int, dtype: str = "float32",
+           *, persist: bool = False) -> None:
+    """Pin a winner (tests / offline sweeps); same key as :func:`lookup`.
+    ``persist=True`` also publishes it to the cross-process cache file."""
     with _LOCK:
+        if persist:
+            _load_persistent_locked()   # merge first: don't clobber others
         _CACHE[_key(kernel, shape, dtype)] = int(block)
+        if persist:
+            _save_persistent_locked()
 
 
 def lookup(kernel: str, shape: tuple, default: int,
            dtype: str = "float32") -> int:
-    """Resolved block for ``kernel`` at ``shape``: cached winner, else a
-    measured sweep (TPU, first call per shape bucket), else ``default``
-    (the analytic optimum the caller computed)."""
+    """Resolved block for ``kernel`` at ``shape``: cached winner (in-
+    process or from the persistent file), else a measured sweep (TPU,
+    first call per shape bucket — the winner is published to the file),
+    else ``default`` (the analytic optimum the caller computed)."""
     key = _key(kernel, shape, dtype)
     with _LOCK:
+        _load_persistent_locked()
         hit = _CACHE.get(key)
     if hit is not None:
         return hit
@@ -101,6 +217,7 @@ def lookup(kernel: str, shape: tuple, default: int,
         win = default                # a failed sweep must never fail a build
     with _LOCK:
         _CACHE[key] = win
+        _save_persistent_locked()
     return win
 
 

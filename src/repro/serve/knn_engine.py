@@ -50,7 +50,7 @@ from repro.core.graph import INVALID_ID, KnnGraph
 from repro.core.search import (SearchState, beam_search, beam_search_finished,
                                beam_search_resume, beam_search_state,
                                default_max_steps)
-from repro.faults import fault_point
+from repro.faults import ensure_unified, fault_point
 
 
 class EngineOverloaded(RuntimeError):
@@ -368,6 +368,49 @@ class SearchEngine:
                 keep.append(item)
         self._pending = keep
         self._has_deadlines = any_dl
+
+    # ---- between-rounds reconfiguration (brownout ladder) ---------------
+
+    def reconfigure(self, *, expand: int | None = None,
+                    max_steps: int | None = None,
+                    visited_bits: int | None = None) -> "SearchEngine":
+        """Swap search-effort parameters between rounds — the brownout
+        rung transition (DESIGN.md §10). Same discipline as generation
+        adoption (:meth:`_try_adopt`): only legal with NO slot in flight,
+        because a compacted slot's state carries its step clock and
+        visited plane against the parameters it was admitted under —
+        changing them mid-flight would split one query across two search
+        configurations. Queued (not yet admitted) requests are fine: they
+        are admitted under, and served entirely at, the new parameters.
+
+        Each distinct parameter triple is its own jit cache entry, so
+        stepping down a rung and back recompiles nothing the second time
+        (``prewarm`` on the resilience layer pays all compiles up front).
+        """
+        if self._occupied():
+            raise RuntimeError(
+                "reconfigure with slots in flight — drain (or harvest) "
+                "first; rung transitions happen only between rounds")
+        if expand is not None:
+            if expand < 1:
+                raise ValueError(f"expand must be >= 1, got {expand}")
+            self.expand = int(expand)
+        if max_steps is not None:
+            if max_steps < 1:
+                raise ValueError(f"max_steps must be >= 1, got {max_steps}")
+            self.max_steps = int(max_steps)
+        if visited_bits is not None:
+            if visited_bits:
+                from repro.kernels.ref import bloom_check_bits
+                bloom_check_bits(visited_bits)
+            self.visited_bits = int(visited_bits)
+        self._max_steps = (self.max_steps if self.max_steps is not None
+                           else default_max_steps(self.beam, self.expand))
+        # the persistent slot state is shaped by visited_bits; rebuild it
+        # empty (no slot is in flight, so nothing of value is dropped)
+        self._state = None
+        self._slot_dirty[:] = False
+        return self
 
     # ---- live mutation (attached LiveIndex) -----------------------------
 
@@ -734,10 +777,14 @@ class SearchEngine:
     # ---- statistics ----------------------------------------------------
 
     def stats(self) -> dict:
-        """Aggregate serving statistics since construction."""
+        """Aggregate serving statistics since construction. Always carries
+        the unified robustness keys (``faults.UNIFIED_STATS_KEYS``):
+        ``retries``/``shed``/``expired`` are engine counters;
+        ``degraded_pairs`` is a build-plane counter, exported as 0 here so
+        the schema is one shape across builder and engine."""
         total_s = float(sum(self._batch_s))
         nb = len(self._batch_s)
-        return {
+        return ensure_unified({
             "queries": self._n_queries,
             "batches": nb,
             "total_s": total_s,
@@ -750,4 +797,4 @@ class SearchEngine:
             "shed": self._shed,
             "expired": self._expired,
             "retries": self._retries,
-        }
+        })

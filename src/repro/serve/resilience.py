@@ -1,0 +1,709 @@
+"""Overload-resilient serving plane: admission, brownout, circuit breaker.
+
+``ResilientEngine`` wraps a :class:`~repro.serve.knn_engine.SearchEngine`
+with the overload-control middleware the fused hot path must never pay
+for (DESIGN.md §10). The engine keeps doing exactly one thing — fixed
+slot batches over the jitted search — while this layer owns the traffic
+policy around it:
+
+- **Per-tenant admission control.** Each tenant gets a token-bucket
+  quota (``TenantQuota.rate``/``burst``) and a weighted fair share of
+  the slot capacity (deficit round-robin over per-tenant queues,
+  ``weight`` tokens per pass). The global ``max_pending`` cliff becomes
+  priority-aware: at capacity, a submission from a higher priority
+  class evicts the newest queued request of the lowest class instead of
+  being refused.
+- **Brownout ladder.** Under sustained shed/deadline-miss/dispatch-
+  failure pressure the wrapper steps the engine down pre-compiled
+  degradation rungs (smaller ``expand``, tighter ``max_steps``,
+  ``visited_bits`` on) and climbs back hysteretically after enough
+  clean rounds. Rung transitions reuse the generation-adoption
+  discipline: they only happen between rounds with no slot in flight
+  (``SearchEngine.reconfigure``), so every query runs start-to-finish
+  under one parameter set. Per-rung served counts make the recall trade
+  measurable, never silent.
+- **Circuit breaker** around the ``engine.dispatch`` fault site:
+  ``threshold`` consecutive dispatch failures open it (submissions
+  fail fast with :class:`EngineUnavailable`), a half-open probe after
+  ``cooldown_s`` closes it again. Requests that survive
+  ``max_dispatch_attempts`` failed dispatches fail out instead of
+  retrying forever — no request id ever wedges.
+- **Health + unified stats.** ``health()`` is the three-state machine
+  (``healthy`` / ``browned-out`` / ``open``); ``stats()`` exports the
+  unified robustness schema (``faults.UNIFIED_STATS_KEYS``) plus the
+  conservation ledger: every submitted request is exactly one of
+  served / shed / expired / failed / pending.
+
+Both new decision points are registered fault sites
+(``resilience.admit``, ``resilience.probe`` — RA003 keeps the catalog
+and the call sites in sync) so the chaos matrix can drive them. The
+layer is single-threaded and lock-free by construction; all elapsed
+math runs on an injectable monotonic ``clock`` (RA001), which is also
+what makes the chaos arms deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults import ensure_unified, fault_point
+from repro.serve.knn_engine import (DeadlineExceeded, EngineOverloaded,
+                                    SearchEngine)
+
+
+class EngineUnavailable(RuntimeError):
+    """The circuit breaker is open (fail-fast refusal) or a request
+    exhausted its dispatch attempts. The caller routes elsewhere or
+    backs off for at least the breaker cooldown."""
+
+
+class QuotaExceeded(EngineOverloaded):
+    """A tenant's token bucket is empty. Subclass of
+    :class:`EngineOverloaded` so existing backoff handling treats both
+    refusals the same; the request was NOT enqueued (its id is free)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """One tenant's admission contract.
+
+    ``rate`` is the sustained budget in requests/second refilling a
+    bucket of depth ``burst`` (None = unthrottled). ``weight`` is the
+    deficit-round-robin share of slot capacity relative to other
+    tenants. ``priority`` orders capacity shedding only — NOT service
+    order: at a full queue the lowest class is shed first, but among
+    admitted requests capacity is split by weight alone.
+    """
+
+    rate: float | None = None
+    burst: int = 8
+    weight: int = 1
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.rate is not None and self.rate <= 0:
+            raise ValueError(f"rate must be > 0 (or None), got {self.rate}")
+        if self.burst < 1:
+            raise ValueError(f"burst must be >= 1, got {self.burst}")
+        if self.weight < 1:
+            raise ValueError(f"weight must be >= 1, got {self.weight}")
+
+
+class _TokenBucket:
+    """Continuous-refill token bucket on the wrapper's monotonic clock."""
+
+    __slots__ = ("rate", "burst", "tokens", "last")
+
+    def __init__(self, quota: TenantQuota, now: float):
+        self.rate = quota.rate
+        self.burst = float(quota.burst)
+        self.tokens = float(quota.burst)
+        self.last = now
+
+    def try_take(self, now: float) -> bool:
+        if self.rate is None:
+            return True
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.last) * self.rate)
+        self.last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One brownout rung: the engine parameters served at this level of
+    degradation. ``None`` inherits the engine's baseline value, so
+    ``Rung()`` is the neutral top rung."""
+
+    expand: int | None = None
+    max_steps: int | None = None
+    visited_bits: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutPolicy:
+    """When to step down/up the rung ladder.
+
+    Enter: the last ``window`` rounds accumulated >= ``enter_events``
+    pressure events (capacity sheds + evictions + expiries + dispatch
+    failures — quota sheds are a tenant's own budget, not engine
+    pressure, and do not count). Exit: ``exit_clean_rounds``
+    CONSECUTIVE zero-pressure rounds (the hysteresis — one pressured
+    round resets the climb). ``rungs[0]`` must be the neutral
+    ``Rung()``; each later rung serves cheaper (and slightly worse)
+    searches than the one before.
+    """
+
+    rungs: tuple[Rung, ...] = (Rung(),)
+    window: int = 8
+    enter_events: int = 4
+    exit_clean_rounds: int = 16
+
+    def __post_init__(self):
+        if not self.rungs or self.rungs[0] != Rung():
+            raise ValueError("rungs[0] must be the neutral Rung() — rung 0 "
+                             "is the engine's baseline configuration")
+        if self.window < 1 or self.enter_events < 1:
+            raise ValueError("window and enter_events must be >= 1")
+        if self.exit_clean_rounds < 1:
+            raise ValueError(f"exit_clean_rounds must be >= 1, got "
+                             f"{self.exit_clean_rounds}")
+
+
+def default_ladder(engine: SearchEngine) -> BrownoutPolicy:
+    """A three-rung ladder scaled from the engine's resolved step budget:
+    half steps, then quarter steps + single expansion + a bloom visited
+    plane (the cheapest configuration that still walks the graph)."""
+    base = engine._max_steps
+    return BrownoutPolicy(rungs=(
+        Rung(),
+        Rung(max_steps=max(2, base // 2)),
+        Rung(max_steps=max(1, base // 4), expand=1,
+             visited_bits=engine.visited_bits or 4096),
+    ))
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Closed → (``threshold`` consecutive dispatch failures) → open →
+    (``cooldown_s`` elapsed) → half-open probe → closed on success,
+    reopen on failure. Open means submissions fail fast and rounds
+    dispatch nothing — the engine gets ``cooldown_s`` of quiet instead
+    of a retry storm against a failing backend."""
+
+    threshold: int = 3
+    cooldown_s: float = 0.5
+
+    def __post_init__(self):
+        if self.threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {self.threshold}")
+        if self.cooldown_s < 0:
+            raise ValueError(f"cooldown_s must be >= 0, got "
+                             f"{self.cooldown_s}")
+        self.state = "closed"
+        self.opens = 0                      # open transitions (incl. reopens)
+        self._consecutive = 0
+        self._opened_at = 0.0
+
+    def blocked(self, now: float) -> bool:
+        """Fail-fast check for submit: open and still cooling down."""
+        return (self.state == "open"
+                and now - self._opened_at < self.cooldown_s)
+
+    def allow(self, now: float) -> str | None:
+        """Gate one round: ``"dispatch"`` (closed), ``"probe"`` (half-
+        open trial), or None (open, cooling down — dispatch nothing)."""
+        if self.state == "closed":
+            return "dispatch"
+        if self.state == "open":
+            if now - self._opened_at < self.cooldown_s:
+                return None
+            self.state = "half-open"
+        return "probe"
+
+    def on_success(self) -> None:
+        self._consecutive = 0
+        self.state = "closed"
+
+    def on_failure(self, now: float) -> None:
+        self._consecutive += 1
+        if self.state == "half-open" or self._consecutive >= self.threshold:
+            self.opens += 1
+            self.state = "open"
+            self._opened_at = now
+            self._consecutive = 0
+
+
+@dataclasses.dataclass
+class _Request:
+    tenant: Any
+    vec: np.ndarray
+    deadline: float | None          # absolute, on the wrapper's clock
+    t_submit: float
+    attempts: int = 0               # failed dispatches participated in
+
+
+class ResilientEngine:
+    """The overload-control wrapper. The engine must be constructed with
+    ``max_pending=None`` — admission (and shedding) belongs to this
+    layer, which replaces the engine's global cliff with per-tenant
+    policy. Single-threaded like the engine itself.
+
+    >>> res = ResilientEngine(
+    ...     SearchEngine.from_index(index, slots=64),
+    ...     tenants={"free": TenantQuota(rate=100, burst=8),
+    ...              "pro": TenantQuota(weight=4, priority=1)},
+    ...     max_pending=256)
+    >>> res.submit("q1", vec, tenant="pro", deadline_s=0.05)
+    >>> res.run_batch(); res.result("q1"); res.health()
+    """
+
+    def __init__(self, engine: SearchEngine, *,
+                 tenants: dict | None = None,
+                 default_quota: TenantQuota | None = None,
+                 max_pending: int = 256,
+                 brownout: BrownoutPolicy | None = None,
+                 breaker: CircuitBreaker | None = None,
+                 max_dispatch_attempts: int = 3,
+                 clock=time.monotonic):
+        if engine.max_pending is not None:
+            raise ValueError(
+                "ResilientEngine owns admission: construct the engine with "
+                f"max_pending=None (got {engine.max_pending})")
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if max_dispatch_attempts < 1:
+            raise ValueError(f"max_dispatch_attempts must be >= 1, got "
+                             f"{max_dispatch_attempts}")
+        self.engine = engine
+        self._tenants = dict(tenants or {})
+        for t, q in self._tenants.items():
+            if not isinstance(q, TenantQuota):
+                raise TypeError(f"tenant {t!r}: expected TenantQuota, got "
+                                f"{type(q).__name__}")
+        self._default_quota = default_quota or TenantQuota()
+        self.max_pending = max_pending
+        self.brownout = brownout or default_ladder(engine)
+        self.breaker = breaker or CircuitBreaker()
+        self.max_dispatch_attempts = max_dispatch_attempts
+        self._clock = clock
+        # baseline engine parameters rung 0 restores (resolved, not None)
+        self._baseline = (engine.expand, engine._max_steps,
+                          engine.visited_bits)
+        self.rung = 0
+        self._rung_pending: int | None = None
+        self._pressure_window: deque = deque(maxlen=self.brownout.window)
+        self._clean_rounds = 0
+        # request book-keeping
+        self._queues: dict[Any, deque] = {}     # tenant -> queued rids
+        self._credits: dict[Any, float] = {}    # deficit round-robin state
+        self._buckets: dict[Any, _TokenBucket] = {}
+        self._reqs: dict[Any, _Request] = {}    # queued or fed, unresolved
+        self._fed: set = set()                  # handed to the engine
+        self._outcomes: dict[Any, Exception] = {}   # failed/evicted/expired
+        self._served_rung: dict[Any, int] = {}  # harvested, unclaimed
+        # the conservation ledger
+        self._submitted = 0
+        self._served = 0
+        self._failed = 0
+        self._shed_quota = 0
+        self._shed_capacity = 0
+        self._shed_unavailable = 0
+        self._shed_fault = 0
+        self._expired_prefeed = 0
+        self._eng_expired_seen = 0
+        self._pressure_pending = 0              # events since last round
+        self._rung_served = [0] * len(self.brownout.rungs)
+        self._rung_transitions = 0
+        self._latencies: list[float] = []
+        self._t_submitted: dict[Any, int] = {}
+        self._t_shed: dict[Any, int] = {}
+
+    # ---- admission ------------------------------------------------------
+
+    def _quota(self, tenant) -> TenantQuota:
+        return self._tenants.get(tenant, self._default_quota)
+
+    def _bucket(self, tenant, now: float) -> _TokenBucket:
+        b = self._buckets.get(tenant)
+        if b is None:
+            b = self._buckets[tenant] = _TokenBucket(self._quota(tenant), now)
+        return b
+
+    def _queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _evict_for(self, priority: int) -> bool:
+        """Priority-aware shedding at capacity: drop the NEWEST queued
+        request of the strictly-lowest class to admit a ``priority``
+        submission (the oldest of that class has waited longest and
+        keeps its place). False if no queued class is lower."""
+        victim_t, victim_p = None, None
+        for t in sorted(self._queues, key=str):
+            if self._queues[t] and (victim_p is None
+                                    or self._quota(t).priority < victim_p):
+                victim_t, victim_p = t, self._quota(t).priority
+        if victim_p is None or victim_p >= priority:
+            return False
+        rid = self._queues[victim_t].pop()
+        self._reqs.pop(rid)
+        self._outcomes[rid] = EngineOverloaded(
+            f"request {rid!r} (tenant {victim_t!r}, priority {victim_p}) "
+            f"evicted at capacity by a priority-{priority} submission")
+        self._shed_capacity += 1
+        self._pressure_pending += 1
+        self._t_shed[victim_t] = self._t_shed.get(victim_t, 0) + 1
+        return True
+
+    def submit(self, request_id, query, *, tenant="default",
+               deadline_s: float | None = None) -> None:
+        """Queue one query vector (d,) — or (1, d) — for ``tenant``.
+
+        Refusals (the id stays free, the caller backs off):
+        :class:`EngineUnavailable` while the breaker cools down,
+        :class:`QuotaExceeded` on an empty token bucket,
+        :class:`EngineOverloaded` at capacity with no lower class to
+        evict. ``deadline_s`` bounds queue wait on the wrapper's clock;
+        an expired request resolves to :class:`DeadlineExceeded` at
+        :meth:`result`. Every accepted-or-refused submission lands in
+        exactly one ``stats()`` ledger bucket.
+        """
+        if (request_id in self._reqs or request_id in self._outcomes
+                or request_id in self.engine._in_flight):
+            raise ValueError(f"request id {request_id!r} already in flight")
+        vec = np.asarray(query)
+        if vec.ndim == 2 and vec.shape[0] == 1:
+            vec = vec[0]
+        if vec.ndim != 1:
+            raise ValueError(
+                f"submit expects one query vector of shape (d,) or (1, d), "
+                f"got shape {vec.shape}")
+        now = self._clock()
+        self._submitted += 1
+        self._t_submitted[tenant] = self._t_submitted.get(tenant, 0) + 1
+        try:
+            fault_point("resilience.admit", name=str(tenant))
+        except Exception:       # lint: allow-broad-except(count-shed-and-reraise)
+            # an admission-infrastructure fault refuses the request; it
+            # stays accounted (shed) so conservation holds under chaos
+            self._shed_fault += 1
+            self._t_shed[tenant] = self._t_shed.get(tenant, 0) + 1
+            raise
+        if self.breaker.blocked(now):
+            self._shed_unavailable += 1
+            self._t_shed[tenant] = self._t_shed.get(tenant, 0) + 1
+            raise EngineUnavailable(
+                f"circuit breaker open; request {request_id!r} refused "
+                f"(retry after {self.breaker.cooldown_s}s)")
+        if not self._bucket(tenant, now).try_take(now):
+            self._shed_quota += 1
+            self._t_shed[tenant] = self._t_shed.get(tenant, 0) + 1
+            raise QuotaExceeded(
+                f"tenant {tenant!r} out of quota "
+                f"(rate={self._quota(tenant).rate}/s); request "
+                f"{request_id!r} shed")
+        if self._queued() >= self.max_pending:
+            if not self._evict_for(self._quota(tenant).priority):
+                self._shed_capacity += 1
+                self._pressure_pending += 1
+                self._t_shed[tenant] = self._t_shed.get(tenant, 0) + 1
+                raise EngineOverloaded(
+                    f"pending queue at max_pending={self.max_pending} and "
+                    f"no lower-priority class to evict; request "
+                    f"{request_id!r} shed")
+        deadline = None if deadline_s is None else now + deadline_s
+        self._queues.setdefault(tenant, deque()).append(request_id)
+        self._reqs[request_id] = _Request(tenant, vec, deadline, now)
+
+    # ---- brownout ladder ------------------------------------------------
+
+    def _apply_pending_rung(self) -> bool:
+        """Land a requested rung transition — only between rounds with no
+        slot in flight (the generation-adoption discipline; feeding
+        pauses while one is pending so compacted slots drain first)."""
+        if self._rung_pending is None or self.engine._occupied():
+            return False
+        r = self.brownout.rungs[self._rung_pending]
+        be, bs, bv = self._baseline
+        self.engine.reconfigure(
+            expand=r.expand if r.expand is not None else be,
+            max_steps=r.max_steps if r.max_steps is not None else bs,
+            visited_bits=r.visited_bits if r.visited_bits is not None else bv)
+        self.rung = self._rung_pending
+        self._rung_pending = None
+        return True
+
+    def _request_rung(self, target: int) -> None:
+        self._rung_transitions += 1
+        self._rung_pending = None if target == self.rung else target
+        self._apply_pending_rung()
+
+    def _brownout_round(self, events: int) -> None:
+        """One round of the hysteresis controller: enough pressure in the
+        window steps DOWN one rung; ``exit_clean_rounds`` consecutive
+        clean rounds step UP one."""
+        pol = self.brownout
+        self._pressure_window.append(events)
+        self._clean_rounds = self._clean_rounds + 1 if events == 0 else 0
+        target = (self._rung_pending if self._rung_pending is not None
+                  else self.rung)
+        if (sum(self._pressure_window) >= pol.enter_events
+                and target < len(pol.rungs) - 1):
+            self._request_rung(target + 1)
+            self._pressure_window.clear()
+            self._clean_rounds = 0
+        elif self._clean_rounds >= pol.exit_clean_rounds and target > 0:
+            self._request_rung(target - 1)
+            self._clean_rounds = 0
+
+    def prewarm(self) -> None:
+        """Compile every rung's search up front (one padded dummy batch
+        per rung) so a mid-traffic brownout transition never pays a jit
+        compile inside a latency-sensitive round. Only legal idle."""
+        if self.backlog():
+            raise RuntimeError("prewarm on a busy engine — drain first")
+        eng = self.engine
+        dummy = jnp.zeros((eng.slots, int(eng.data.shape[1])), jnp.float32)
+        current = self.rung
+        for i in range(len(self.brownout.rungs)):
+            self._request_rung(i)
+            eng._search(dummy)[0].block_until_ready()
+        self._request_rung(current)
+
+    # ---- the serving round ----------------------------------------------
+
+    def _expire(self, rid, req: _Request) -> None:
+        self._outcomes[rid] = DeadlineExceeded(
+            f"request {rid!r} missed its deadline before admission")
+        self._expired_prefeed += 1
+        self._pressure_pending += 1
+
+    def _expire_queued(self, now: float) -> None:
+        for t, q in self._queues.items():
+            if not q:
+                continue
+            keep = deque()
+            for rid in q:
+                req = self._reqs[rid]
+                if req.deadline is not None and req.deadline <= now:
+                    self._reqs.pop(rid)
+                    self._expire(rid, req)
+                else:
+                    keep.append(rid)
+            self._queues[t] = keep
+
+    def _feed(self, now: float) -> None:
+        """Deficit round-robin over the tenant queues into the engine's
+        free capacity: each pass grants every active tenant ``weight``
+        credits; one credit admits one request. Feeding pauses while a
+        rung transition waits for in-flight slots to drain."""
+        if self._rung_pending is not None:
+            return
+        eng = self.engine
+        if eng.compact:
+            free = (sum(1 for r in eng._slot_rids if r is None)
+                    - len(eng._pending))
+        else:
+            free = eng.slots - len(eng._pending)
+        budget = max(0, free)
+        while budget > 0:
+            active = [t for t in sorted(self._queues, key=str)
+                      if self._queues[t]]
+            if not active:
+                break
+            progressed = False
+            for t in active:
+                q = self._queues[t]
+                self._credits[t] = (self._credits.get(t, 0.0)
+                                    + self._quota(t).weight)
+                while q and self._credits[t] >= 1.0 and budget > 0:
+                    rid = q.popleft()
+                    req = self._reqs[rid]
+                    if req.deadline is not None and req.deadline <= now:
+                        self._reqs.pop(rid)
+                        self._expire(rid, req)
+                        continue
+                    self._credits[t] -= 1.0
+                    budget -= 1
+                    eng.submit(rid, req.vec,
+                               deadline_s=(None if req.deadline is None
+                                           else req.deadline - now))
+                    self._fed.add(rid)
+                    progressed = True
+            if not progressed:
+                break
+        for t, q in self._queues.items():
+            if not q:
+                # standard DRR: an emptied queue forfeits its deficit
+                # (saved credit must not fund a later burst)
+                self._credits[t] = 0.0
+
+    def _fail_out(self, exc: Exception) -> None:
+        """Charge one failed dispatch to every request the engine
+        requeued (our feed discipline keeps the engine queue no deeper
+        than one batch, so everything queued there participated).
+        Requests at ``max_dispatch_attempts`` fail out — released from
+        the engine, resolved as :class:`EngineUnavailable` — instead of
+        retrying forever."""
+        dead = set()
+        for item in self.engine._pending:
+            rid = item[0]
+            req = self._reqs.get(rid)
+            if req is None:
+                continue
+            req.attempts += 1
+            if req.attempts >= self.max_dispatch_attempts:
+                dead.add(rid)
+        if not dead:
+            return
+        self.engine._release(dead)
+        for rid in dead:
+            self._reqs.pop(rid)
+            self._fed.discard(rid)
+            err = EngineUnavailable(
+                f"request {rid!r} failed "
+                f"{self.max_dispatch_attempts} dispatch attempts")
+            err.__cause__ = exc
+            self._outcomes[rid] = err
+            self._failed += 1
+
+    def _engine_expired_delta(self) -> int:
+        cur = self.engine._expired
+        delta = cur - self._eng_expired_seen
+        self._eng_expired_seen = cur
+        return delta
+
+    def _drain_pressure(self) -> int:
+        n = self._pressure_pending
+        self._pressure_pending = 0
+        return n
+
+    def run_batch(self) -> list:
+        """One serving round: apply any pending rung transition, expire,
+        gate on the breaker, feed the fair-share batch, dispatch, and
+        harvest. Returns the request ids served by THIS call. A dispatch
+        failure is absorbed here (breaker + fail-out accounting) — the
+        engine already requeued the batch, so the round simply returns
+        []; it never propagates, and no id is lost."""
+        eng = self.engine
+        now = self._clock()
+        self._apply_pending_rung()
+        self._expire_queued(now)
+        gate = self.breaker.allow(now)
+        if gate is None:
+            return []                   # open: give the backend quiet
+        self._feed(now)
+        try:
+            if gate == "probe":
+                fault_point("resilience.probe")
+            harvested = eng.run_batch()
+        except Exception as exc:  # lint: allow-broad-except(breaker-and-fail-out-accounting; the engine requeued the batch)
+            self.breaker.on_failure(self._clock())
+            self._fail_out(exc)
+            self._brownout_round(1 + self._drain_pressure())
+            return []
+        self.breaker.on_success()
+        done = self._clock()
+        out = []
+        for rid in harvested:
+            req = self._reqs.pop(rid, None)
+            self._fed.discard(rid)
+            if req is None:
+                continue
+            self._served += 1
+            self._served_rung[rid] = self.rung
+            self._rung_served[self.rung] += 1
+            self._latencies.append(done - req.t_submit)
+            out.append(rid)
+        # engine-side expiries: resolved in the engine's done-table (the
+        # deadline passed while queued there), never harvested — release
+        # our book-keeping so nothing wedges
+        for rid in [r for r in self._fed if r in eng._done]:
+            self._fed.discard(rid)
+            self._reqs.pop(rid, None)
+        self._brownout_round(self._drain_pressure()
+                             + self._engine_expired_delta())
+        return out
+
+    def backlog(self) -> bool:
+        """Anything still queued or in flight?"""
+        return bool(self._queued() or self.engine._pending
+                    or (self.engine.compact and self.engine._occupied()))
+
+    def drain(self, *, max_rounds: int | None = None) -> int:
+        """Run rounds until the backlog clears (or ``max_rounds``);
+        returns the number of rounds run. With an open breaker this
+        spins through cooldown on the real clock — bounded tests should
+        pass ``max_rounds``."""
+        rounds = 0
+        while self.backlog():
+            self.run_batch()
+            rounds += 1
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+        return rounds
+
+    def result(self, request_id):
+        """(ids (k,), dists (k,), evals ()) for a served request; raises
+        the recorded refusal (:class:`DeadlineExceeded`,
+        :class:`EngineOverloaded` eviction, :class:`EngineUnavailable`
+        fail-out) for a request that resolved without being served.
+        Claiming an outcome frees the id."""
+        if request_id in self._outcomes:
+            raise self._outcomes.pop(request_id)
+        try:
+            return self.engine.result(request_id)
+        finally:
+            self._served_rung.pop(request_id, None)
+
+    def rung_of(self, request_id) -> int | None:
+        """The rung a harvested-but-unclaimed request was served at
+        (None once claimed, or for unserved ids) — the per-request recall
+        attribution hook the overload benchmark uses."""
+        return self._served_rung.get(request_id)
+
+    # ---- health + unified stats -----------------------------------------
+
+    def health(self) -> str:
+        """``open`` (breaker tripped) > ``browned-out`` (serving below
+        the top rung, or a step-down pending) > ``healthy``."""
+        if self.breaker.state != "closed":
+            return "open"
+        if self.rung > 0 or self._rung_pending is not None:
+            return "browned-out"
+        return "healthy"
+
+    def _percentile(self, p: float) -> float:
+        if not self._latencies:
+            return 0.0
+        lat = sorted(self._latencies)
+        return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+    def stats(self) -> dict:
+        """The unified export (``faults.UNIFIED_STATS_KEYS`` schema) plus
+        the conservation ledger: ``submitted`` == ``served`` + ``shed``
+        + ``expired`` + ``failed`` + ``pending`` at every instant —
+        pinned by tests/test_resilience.py."""
+        eng = self.engine.stats()
+        shed = (self._shed_quota + self._shed_capacity
+                + self._shed_unavailable + self._shed_fault)
+        expired = self._expired_prefeed + eng["expired"]
+        pending = (self._submitted - self._served - shed - expired
+                   - self._failed)
+        return ensure_unified({
+            "submitted": self._submitted,
+            "served": self._served,
+            "shed": shed,
+            "shed_quota": self._shed_quota,
+            "shed_capacity": self._shed_capacity,
+            "shed_unavailable": self._shed_unavailable,
+            "shed_fault": self._shed_fault,
+            "expired": expired,
+            "failed": self._failed,
+            "pending": pending,
+            "retries": eng["retries"],
+            "degraded_pairs": eng["degraded_pairs"],
+            "health": self.health(),
+            "rung": self.rung,
+            "rung_pending": self._rung_pending,
+            "rung_served": list(self._rung_served),
+            "rung_transitions": self._rung_transitions,
+            "breaker_state": self.breaker.state,
+            "breaker_opens": self.breaker.opens,
+            "p50_latency_s": self._percentile(0.50),
+            "p99_latency_s": self._percentile(0.99),
+            "tenants": {t: {"submitted": n,
+                            "shed": self._t_shed.get(t, 0)}
+                        for t, n in sorted(self._t_submitted.items(),
+                                           key=lambda kv: str(kv[0]))},
+            "engine": eng,
+        })

@@ -23,7 +23,7 @@ from repro.core.outofcore import (Spool, SpoolCorruptionError,
                                   build_out_of_core)
 from repro.faults import (FaultPlan, FaultSpec, RetryPolicy, current_plan,
                           disarm, fault_point)
-from repro.serve.knn_engine import SearchEngine
+from repro.serve.knn_engine import EngineOverloaded, SearchEngine
 
 
 def assert_bit_identical(a, b):
@@ -394,6 +394,180 @@ def test_engine_dispatch_fault_requeues_then_serves(small_data, compact):
                                   np.asarray(want_ids))
     st = eng.stats()
     assert st["queries"] == 9 and eng._in_flight == set()
+
+
+# ---- resilience-layer chaos (overload + dispatch faults) ---------------
+# Brownout hysteresis, breaker unit transitions and recovery bit-parity
+# are pinned in tests/test_resilience.py; the arms here drive the SAME
+# layer through seeded fault plans (the chaos-matrix contract: policy
+# behavior under injected faults must be deterministic and conserve
+# every request id).
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def res_setup(small_data):
+    from repro.serve.resilience import ResilientEngine  # noqa: F401
+    data = jnp.asarray(small_data[:300])
+    return data, knn_bruteforce(data, 8), np.asarray(data[:12]) + 0.01
+
+
+def _resilient(res_setup, clk, **kw):
+    from repro.serve import resilience as rz
+    data, g, _ = res_setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=8, slots=4)
+    defaults = dict(
+        max_pending=8, clock=clk,
+        brownout=rz.BrownoutPolicy(
+            rungs=(rz.Rung(), rz.Rung(max_steps=2)),
+            window=2, enter_events=2, exit_clean_rounds=3),
+        breaker=rz.CircuitBreaker(threshold=2, cooldown_s=1.0),
+        max_dispatch_attempts=5)
+    defaults.update(kw)
+    return rz.ResilientEngine(eng, **defaults)
+
+
+def test_resilience_overload_chaos_conservation_and_recovery(res_setup):
+    """The ISSUE 10 acceptance arm: arrival at 3× slot capacity plus two
+    injected consecutive dispatch faults. The layer must shed at
+    capacity, open (then probe closed) the breaker, brown out under the
+    pressure, recover to the top rung within the hysteresis window once
+    the burst ends, account EVERY submitted request as exactly one of
+    served/shed/expired/failed, and wedge zero request ids."""
+    from repro.serve import resilience as rz
+    clk = _Clock()
+    res = _resilient(res_setup, clk)
+    data, g, q = res_setup
+    accepted, refused = [], 0
+    plan = FaultPlan([FaultSpec("engine.dispatch", fail_on=(2, 3))])
+    with plan.armed():
+        for wave in range(8):
+            for i in range(12):                 # 3× the 4-slot capacity
+                rid = (wave, i)
+                try:
+                    res.submit(rid, q[i % len(q)])
+                    accepted.append(rid)
+                except (rz.EngineUnavailable, EngineOverloaded):
+                    refused += 1
+            res.run_batch()
+            clk.advance(0.3)
+        res.drain(max_rounds=300)
+        # idle clean rounds: the ladder must climb back to the top rung
+        # within exit_clean_rounds of quiet
+        for _ in range(3):
+            res.run_batch()
+    s = res.stats()
+    # both injected faults fired and tripped the breaker
+    assert [f for f in plan.fired if f[0] == "engine.dispatch"]
+    assert s["breaker_opens"] >= 1
+    # shed per policy (capacity and/or fail-fast), browned out under
+    # pressure, and recovered
+    assert s["shed"] == refused and s["shed"] > 0
+    assert s["rung_transitions"] >= 2 and sum(s["rung_served"][1:]) > 0
+    assert res.rung == 0 and res.health() == "healthy"
+    assert s["breaker_state"] == "closed"
+    # conservation: every submitted request has exactly one outcome
+    assert s["submitted"] == (s["served"] + s["shed"] + s["expired"]
+                              + s["failed"] + s["pending"])
+    assert s["pending"] == 0 and s["submitted"] == 8 * 12
+    # zero wedged ids: every accepted id resolves to a result or a
+    # recorded refusal, and every book is empty afterwards
+    for rid in accepted:
+        try:
+            res.result(rid)
+        # lint: allow-broad-except(collecting every outcome kind)
+        except Exception:
+            pass
+    assert not res._reqs and not res._fed and not res._outcomes
+    assert res.engine._in_flight == set() and not res.engine._pending
+
+
+def test_resilience_quota_shed_is_deterministic(res_setup):
+    """Same submissions on the same injected clock → the same shed set,
+    twice (token buckets are pure functions of the clock)."""
+    def drive():
+        clk = _Clock()
+        from repro.serve.resilience import QuotaExceeded, TenantQuota
+        res = _resilient(res_setup, clk,
+                         tenants={"f": TenantQuota(rate=2.0, burst=2)})
+        _, _, q = res_setup
+        shed = []
+        for i in range(20):
+            try:
+                res.submit(i, q[i % len(q)], tenant="f")
+            except QuotaExceeded:
+                shed.append(i)
+            if i % 4 == 3:
+                res.run_batch()
+                clk.advance(0.5)
+        res.drain(max_rounds=100)
+        return shed, res.stats()["shed_quota"]
+
+    a, b = drive(), drive()
+    assert a == b and len(a[0]) == a[1] > 0
+
+
+def test_resilience_admit_fault_counts_as_shed(res_setup):
+    """An injected fault at the admission decision point refuses the
+    request but keeps it on the ledger — conservation holds under
+    admission chaos, and the seeded fired log replays exactly."""
+    clk = _Clock()
+    res = _resilient(res_setup, clk)
+    _, _, q = res_setup
+    plan = FaultPlan([FaultSpec("resilience.admit", p=0.4)], seed=3)
+    faulted = []
+    with plan.armed():
+        for i in range(10):
+            try:
+                res.submit(i, q[i % len(q)])
+            except OSError:
+                faulted.append(i)
+        res.drain(max_rounds=100)
+    assert faulted and plan.fired == [("resilience.admit", i, "error")
+                                      for i in faulted]
+    s = res.stats()
+    assert s["shed_fault"] == len(faulted) == s["shed"]
+    assert s["submitted"] == s["served"] + s["shed"] and s["pending"] == 0
+
+
+def test_resilience_probe_fault_reopens_breaker(res_setup):
+    """A faulted half-open probe reopens the breaker; the next (clean)
+    probe closes it and the queue drains losslessly."""
+    from repro.serve import resilience as rz
+    clk = _Clock()
+    res = _resilient(res_setup, clk,
+                     breaker=rz.CircuitBreaker(threshold=1, cooldown_s=1.0),
+                     max_dispatch_attempts=20)
+    _, _, q = res_setup
+    for i in range(4):
+        res.submit(i, q[i])
+    plan = FaultPlan([FaultSpec("engine.dispatch", fail_on=(0,)),
+                      FaultSpec("resilience.probe", fail_on=(0,))])
+    with plan.armed():
+        res.run_batch()                         # injected dispatch failure
+        assert res.breaker.state == "open" and res.health() == "open"
+        assert res.run_batch() == []            # cooling down: no dispatch
+        clk.advance(1.0)
+        res.run_batch()                         # probe 0: injected to fail
+        assert res.breaker.state == "open" and res.breaker.opens == 2
+        clk.advance(1.0)
+        served = res.run_batch()                # probe 1: clean, closes
+        assert res.breaker.state == "closed" and served
+        res.drain(max_rounds=100)
+    got = [res.result(i) for i in range(4)]
+    assert len(got) == 4
+    s = res.stats()
+    assert s["served"] == 4 and s["failed"] == 0 and s["pending"] == 0
 
 
 # ---- distributed-checkpointed chaos (subprocess, multi-device) ---------

@@ -171,6 +171,70 @@ def test_autotune_record_lookup_bucket():
         autotune.clear_cache()
 
 
+def test_autotune_winner_persists_across_processes(tmp_path, monkeypatch):
+    # record(persist=True) → clear_cache() simulates a fresh process:
+    # the winner must come back from the file, not in-process memory
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    try:
+        autotune.record("join_topk", (20, 8, 6, 16, 12), 16, persist=True)
+        doc = __import__("json").loads(path.read_text())
+        assert doc["version"] == 1
+        assert any(k.startswith("join_topk|") for k in doc["winners"])
+        autotune.clear_cache()                        # "new process"
+        assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                               default=99) == 16
+        # merge discipline: a second persisted winner keeps the first
+        autotune.record("bruteforce_topk", (300, 12, 8), 64, persist=True)
+        autotune.clear_cache()
+        assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                               default=99) == 16
+        assert autotune.lookup("bruteforce_topk", (300, 12, 8),
+                               default=99) == 64
+    finally:
+        autotune.clear_cache()
+
+
+def test_autotune_corrupt_cache_falls_back(tmp_path, monkeypatch):
+    # a torn / garbage / wrong-schema file must be ignored (lookup falls
+    # back to the default), and the next persisted record must atomically
+    # replace it with a valid file
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    try:
+        for garbage in ("{ not json", '{"version": 999, "winners": {}}',
+                        '{"winners": "nope"}'):
+            path.write_text(garbage)
+            autotune.clear_cache()
+            assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                                   default=99) == 99
+        autotune.record("join_topk", (20, 8, 6, 16, 12), 32, persist=True)
+        doc = __import__("json").loads(path.read_text())
+        assert doc["version"] == 1                    # healed, valid again
+        autotune.clear_cache()
+        assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                               default=99) == 32
+    finally:
+        autotune.clear_cache()
+
+
+def test_autotune_empty_env_disables_persistence(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "")
+    monkeypatch.chdir(tmp_path)                       # catch stray writes
+    autotune.clear_cache()
+    try:
+        assert autotune.cache_path() is None
+        autotune.record("join_topk", (20, 8, 6, 16, 12), 16, persist=True)
+        assert list(tmp_path.iterdir()) == []         # nothing written
+        autotune.clear_cache()                        # "new process"
+        assert autotune.lookup("join_topk", (20, 8, 6, 16, 12),
+                               default=99) == 99      # winner was not kept
+    finally:
+        autotune.clear_cache()
+
+
 # ---- tier resolution ------------------------------------------------------
 
 def test_resolve_tier_rules():

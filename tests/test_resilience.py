@@ -1,0 +1,398 @@
+"""Overload-resilient serving plane: admission, brownout, breaker, stats.
+
+The wrapper must be POLICY only: with no overload (one tenant, no quota
+pressure, rung 0, breaker closed) per-query results through
+``ResilientEngine`` are bit-identical to the engine — and, at
+``visited_bits=0, compact=False``, to the pinned pre-fusion
+``beam_search_scan`` baseline. Everything else here pins the policy:
+deterministic token buckets, weighted fair shares, priority eviction,
+brownout hysteresis, breaker transitions, and the conservation ledger
+(every submitted request is exactly one of served/shed/expired/failed).
+"""
+
+import jax
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core.bruteforce import knn_bruteforce
+from repro.core.search import beam_search_scan
+from repro.data.vectors import clustered
+from repro.faults import UNIFIED_STATS_KEYS
+from repro.serve.knn_engine import (DeadlineExceeded, EngineOverloaded,
+                                    SearchEngine)
+from repro.serve.resilience import (BrownoutPolicy, CircuitBreaker,
+                                    EngineUnavailable, QuotaExceeded,
+                                    ResilientEngine, Rung, TenantQuota)
+
+
+class Clock:
+    """Injectable monotonic clock — makes buckets/deadlines/cooldowns
+    deterministic (and instant) in tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = clustered(jax.random.key(0), 400, 12, n_clusters=4, scale=0.8)
+    g = knn_bruteforce(data, 8)
+    q = np.asarray(data[:24] + 0.02 * jax.random.normal(jax.random.key(5),
+                                                        (24, 12)))
+    return data, g, q
+
+
+def make(setup, *, slots=4, compact=False, res_kw=None, **eng_kw):
+    data, g, _ = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=8, slots=slots,
+                       compact=compact, **eng_kw)
+    return ResilientEngine(eng, **(res_kw or {}))
+
+
+def drain_claim(res, rids):
+    """Drain, claim every id, and return {rid: outcome-or-result}."""
+    res.drain(max_rounds=500)
+    out = {}
+    for rid in rids:
+        try:
+            out[rid] = res.result(rid)
+        except Exception as e:  # noqa: BLE001 - tests collect all outcomes
+            out[rid] = e
+    return out
+
+
+def assert_conservation(res):
+    s = res.stats()
+    assert s["submitted"] == (s["served"] + s["shed"] + s["expired"]
+                              + s["failed"] + s["pending"]), s
+    return s
+
+
+# ---- admission ------------------------------------------------------------
+
+def test_wrapper_owns_admission(setup):
+    data, g, _ = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=8, max_pending=4)
+    with pytest.raises(ValueError, match="max_pending"):
+        ResilientEngine(eng)
+
+
+def test_token_bucket_is_deterministic_on_the_injected_clock(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(
+        tenants={"f": TenantQuota(rate=1.0, burst=2)}, clock=clk))
+    _, _, q = setup
+    res.submit("a", q[0], tenant="f")
+    res.submit("b", q[1], tenant="f")
+    with pytest.raises(QuotaExceeded):
+        res.submit("c", q[2], tenant="f")       # bucket empty
+    # QuotaExceeded is an EngineOverloaded: existing backoff handling works
+    assert issubclass(QuotaExceeded, EngineOverloaded)
+    clk.advance(0.5)
+    with pytest.raises(QuotaExceeded):
+        res.submit("c", q[2], tenant="f")       # half a token: still shed
+    clk.advance(0.5)
+    res.submit("c", q[2], tenant="f")           # refilled — the id was free
+    got = drain_claim(res, ["a", "b", "c"])
+    assert all(not isinstance(v, Exception) for v in got.values())
+    s = assert_conservation(res)
+    assert s["shed_quota"] == 2 and s["served"] == 3
+
+
+def test_weighted_fair_dequeue_splits_capacity_by_weight(setup):
+    clk = Clock()
+    res = make(setup, slots=3, res_kw=dict(
+        tenants={"a": TenantQuota(weight=2), "b": TenantQuota(weight=1)},
+        max_pending=32, clock=clk))
+    _, _, q = setup
+    for i in range(6):
+        res.submit(("a", i), q[i], tenant="a")
+        res.submit(("b", i), q[i + 6], tenant="b")
+    # each 3-slot batch must carry 2 of tenant a and 1 of tenant b
+    first = res.run_batch()
+    assert sorted(first) == [("a", 0), ("a", 1), ("b", 0)]
+    second = res.run_batch()
+    assert sorted(second) == [("a", 2), ("a", 3), ("b", 1)]
+    rids = [("a", i) for i in range(6)] + [("b", i) for i in range(6)]
+    got = drain_claim(res, rids)
+    assert all(not isinstance(v, Exception) for v in got.values())
+    assert_conservation(res)
+
+
+def test_priority_eviction_sheds_lowest_class_first(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(
+        tenants={"low": TenantQuota(priority=0),
+                 "high": TenantQuota(priority=1)},
+        max_pending=2, clock=clk))
+    _, _, q = setup
+    res.submit("l0", q[0], tenant="low")
+    res.submit("l1", q[1], tenant="low")
+    # at capacity: a higher class evicts the NEWEST queued low request
+    res.submit("h0", q[2], tenant="high")
+    with pytest.raises(EngineOverloaded):
+        res.result("l1")
+    res.submit("h1", q[3], tenant="high")       # evicts l0, the last low
+    with pytest.raises(EngineOverloaded):
+        res.result("l0")
+    # at capacity with no lower class queued: the newcomer is refused
+    with pytest.raises(EngineOverloaded):
+        res.submit("h2", q[4], tenant="high")
+    got = drain_claim(res, ["h0", "h1"])
+    assert all(not isinstance(v, Exception) for v in got.values())
+    s = assert_conservation(res)
+    assert s["shed_capacity"] == 3 and s["served"] == 2
+
+
+def test_deadline_expires_on_the_wrapper_clock(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(clock=clk))
+    _, _, q = setup
+    res.submit("dl", q[0], deadline_s=0.5)
+    clk.advance(1.0)
+    res.run_batch()
+    with pytest.raises(DeadlineExceeded):
+        res.result("dl")
+    s = assert_conservation(res)
+    assert s["expired"] == 1 and s["pending"] == 0
+
+
+# ---- brownout ladder ------------------------------------------------------
+
+def brownout_policy():
+    return BrownoutPolicy(rungs=(Rung(), Rung(max_steps=2)),
+                          window=2, enter_events=2, exit_clean_rounds=3)
+
+
+def test_rung0_must_be_neutral():
+    with pytest.raises(ValueError, match="neutral"):
+        BrownoutPolicy(rungs=(Rung(max_steps=2),))
+
+
+def overload_wave(res, q, wave, n=10):
+    shed = 0
+    for i in range(n):
+        try:
+            res.submit(f"w{wave}i{i}", q[i % len(q)])
+        except EngineOverloaded:
+            shed += 1
+    res.run_batch()
+    return shed
+
+
+def test_brownout_enters_under_pressure_and_recovers_hysteretically(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(max_pending=4, clock=clk,
+                                  brownout=brownout_policy()))
+    _, _, q = setup
+    assert res.health() == "healthy" and res.rung == 0
+    # two pressured rounds (capacity sheds) reach enter_events=2
+    for w in range(2):
+        assert overload_wave(res, q, w) > 0
+    assert res.rung == 1 and res.health() == "browned-out"
+    res.drain(max_rounds=100)
+    # recovery needs exit_clean_rounds=3 CONSECUTIVE clean rounds; a
+    # pressured round in between resets the climb (the hysteresis)
+    res.run_batch(); res.run_batch()
+    assert res.rung == 1
+    overload_wave(res, q, 90)                   # pressure: climb resets
+    res.drain(max_rounds=100)
+    res.run_batch(); res.run_batch()
+    assert res.rung == 1                        # 2 clean < 3: still down
+    res.run_batch()
+    assert res.rung == 0 and res.health() == "healthy"
+    s = assert_conservation(res)
+    assert s["rung_transitions"] >= 2
+    assert sum(s["rung_served"]) == s["served"]
+
+
+def test_rung_transition_waits_for_inflight_slots(setup):
+    clk = Clock()
+    res = make(setup, compact=True, chunk_steps=1,
+               res_kw=dict(max_pending=8, clock=clk,
+                           brownout=brownout_policy()))
+    _, _, q = setup
+    res.submit("r0", q[0])
+    res.run_batch()                             # r0 admitted, in flight
+    if res.engine._occupied():
+        res._request_rung(1)
+        # the swap must NOT land while a slot is in flight: feeding
+        # pauses, the engine keeps its baseline parameters
+        assert res._rung_pending == 1 and res.rung == 0
+        base_steps = res._baseline[1]
+        assert res.engine._max_steps == base_steps
+    res.drain(max_rounds=200)
+    res.run_batch()
+    assert res._rung_pending is None            # landed once idle
+    drain_claim(res, ["r0"])
+    assert_conservation(res)
+
+
+def test_reconfigure_requires_idle_engine(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=8, slots=2,
+                       compact=True, chunk_steps=1)
+    eng.submit("r0", q[0])
+    eng.run_batch()
+    if eng._occupied():
+        with pytest.raises(RuntimeError, match="in flight"):
+            eng.reconfigure(max_steps=2)
+    eng.drain()
+    eng.result("r0")
+    eng.reconfigure(max_steps=2)                # idle: legal
+    assert eng._max_steps == 2
+
+
+def test_recovered_engine_is_bit_identical_to_never_degraded(setup):
+    data, g, q = setup
+    # the reference: a plain engine that never browned out
+    ref = SearchEngine(graph=g, data=data, k=5, beam=8, slots=4)
+    want_ids, want_d, want_ev = ref.search(q)
+    clk = Clock()
+    res = make(setup, res_kw=dict(max_pending=64, clock=clk,
+                                  brownout=brownout_policy()))
+    # force a full brown-out/recover cycle, serving traffic while down
+    res._request_rung(1)
+    assert res.rung == 1
+    for i in range(4):
+        res.submit(("deg", i), q[i])
+    degraded = drain_claim(res, [("deg", i) for i in range(4)])
+    assert all(not isinstance(v, Exception) for v in degraded.values())
+    res._request_rung(0)
+    assert res.rung == 0 and res.health() == "healthy"
+    # recovered: bit-identical results AND eval counts vs never-degraded
+    for i in range(len(q)):
+        res.submit(("rec", i), q[i])
+        res.drain(max_rounds=100)
+    got = drain_claim(res, [("rec", i) for i in range(len(q))])
+    for i in range(len(q)):
+        ids, dists, ev = got[("rec", i)]
+        assert_array_equal(ids, np.asarray(want_ids[i]))
+        assert int(ev) == int(want_ev[i])
+    s = assert_conservation(res)
+    assert s["rung_served"][1] == 4 and s["rung_served"][0] == len(q)
+
+
+def test_no_overload_path_matches_beam_search_scan(setup):
+    # the acceptance pin: visited_bits=0, compact=False, no overload —
+    # the wrapped path stays bit-identical to the pre-fusion baseline
+    data, g, q = setup
+    want_ids, want_d, _ = beam_search_scan(g, data, q, 5, beam=8)
+    res = make(setup, res_kw=dict(max_pending=len(q)))
+    for i in range(len(q)):
+        res.submit(i, q[i])
+    got = drain_claim(res, range(len(q)))
+    for i in range(len(q)):
+        ids, dists, _ = got[i]
+        assert_array_equal(ids, np.asarray(want_ids[i]))
+        d_w = np.where(np.isinf(np.asarray(want_d[i])), 0,
+                       np.asarray(want_d[i]))
+        assert_array_equal(np.where(np.isinf(dists), 0, dists), d_w)
+    assert res.stats()["shed"] == 0
+
+
+def test_prewarm_compiles_every_rung_without_changing_results(setup):
+    data, g, q = setup
+    ref = SearchEngine(graph=g, data=data, k=5, beam=8, slots=4)
+    want_ids, _, _ = ref.search(q[:4])
+    res = make(setup, res_kw=dict(brownout=brownout_policy()))
+    res.prewarm()
+    assert res.rung == 0
+    for i in range(4):
+        res.submit(i, q[i])
+    got = drain_claim(res, range(4))
+    for i in range(4):
+        assert_array_equal(got[i][0], np.asarray(want_ids[i]))
+
+
+# ---- circuit breaker ------------------------------------------------------
+
+def test_breaker_state_machine_on_the_injected_clock():
+    br = CircuitBreaker(threshold=2, cooldown_s=5.0)
+    assert br.allow(0.0) == "dispatch"
+    br.on_failure(0.0)
+    assert br.state == "closed"                 # 1 < threshold
+    br.on_failure(1.0)
+    assert br.state == "open" and br.opens == 1
+    assert br.allow(2.0) is None                # cooling down
+    assert br.blocked(2.0)
+    assert br.allow(6.0) == "probe"             # half-open after cooldown
+    br.on_failure(6.0)                          # failed probe reopens
+    assert br.state == "open" and br.opens == 2
+    assert br.allow(11.5) == "probe"
+    br.on_success()
+    assert br.state == "closed"
+    # a success resets the consecutive-failure count
+    br.on_failure(12.0)
+    br.on_success()
+    br.on_failure(13.0)
+    assert br.state == "closed"
+
+
+def test_open_breaker_fails_submissions_fast(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(
+        clock=clk, breaker=CircuitBreaker(threshold=1, cooldown_s=10.0)))
+    _, _, q = setup
+    res.breaker.on_failure(clk())
+    with pytest.raises(EngineUnavailable):
+        res.submit("x", q[0])
+    assert res.health() == "open"
+    s = assert_conservation(res)
+    assert s["shed_unavailable"] == 1 and s["breaker_state"] == "open"
+
+
+# ---- unified stats schema -------------------------------------------------
+
+def test_unified_schema_across_engine_and_resilience(setup):
+    data, g, q = setup
+    eng = SearchEngine(graph=g, data=data, k=5, beam=8, slots=4)
+    eng.search(q[:4])
+    for key in UNIFIED_STATS_KEYS:
+        assert key in eng.stats(), key
+    assert eng.stats()["degraded_pairs"] == 0
+    res = make(setup)
+    s = res.stats()
+    for key in UNIFIED_STATS_KEYS:
+        assert key in s, key
+    # the documented resilience ledger + observability keys, pinned
+    for key in ("submitted", "served", "shed", "shed_quota",
+                "shed_capacity", "shed_unavailable", "shed_fault",
+                "expired", "failed", "pending", "health", "rung",
+                "rung_served", "rung_transitions", "breaker_state",
+                "breaker_opens", "p50_latency_s", "p99_latency_s",
+                "tenants", "engine"):
+        assert key in s, key
+
+
+def test_unified_schema_on_build_result():
+    from repro.api import BuildConfig, GraphBuilder
+    data = clustered(jax.random.key(1), 96, 8, n_clusters=2, scale=0.8)
+    out = GraphBuilder(BuildConfig(k=4, max_iters=2, seed=0)).build(data)
+    for key in UNIFIED_STATS_KEYS:
+        assert key in out.stats, key
+    assert out.stats["shed"] == 0 and out.stats["expired"] == 0
+
+
+def test_per_tenant_counters_and_latency_percentiles(setup):
+    clk = Clock()
+    res = make(setup, res_kw=dict(
+        tenants={"f": TenantQuota(rate=1.0, burst=1)}, clock=clk))
+    _, _, q = setup
+    res.submit("a", q[0], tenant="f")
+    with pytest.raises(QuotaExceeded):
+        res.submit("b", q[1], tenant="f")
+    clk.advance(0.25)
+    res.drain(max_rounds=50)
+    res.result("a")
+    s = res.stats()
+    assert s["tenants"]["f"] == {"submitted": 2, "shed": 1}
+    assert s["p50_latency_s"] == pytest.approx(0.25)
+    assert s["p99_latency_s"] == pytest.approx(0.25)
